@@ -1,0 +1,9 @@
+"""Target-hardware constants (TPU v5e-class) for roofline terms."""
+
+PEAK_FLOPS_BF16 = 197e12  # per chip
+PEAK_FLOPS_INT8 = 394e12  # MXU int8 path (2x bf16)
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (~per chip for ring collectives)
+DCN_BW = 25e9  # bytes/s per host across pods (assumed)
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512

@@ -1,0 +1,136 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md section
+Roofline).
+
+Per (arch x shape) cell on the single-pod 16x16 mesh:
+
+  compute term    = dot_FLOPs_per_device / peak_FLOP/s
+  memory term     = HBM_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / ICI_link_bw
+
+(all per-device — the compiled module IS the per-device SPMD program, so
+dividing global quantities by chip count is already done by GSPMD).
+
+MODEL_FLOPS is the analytic minimum useful work:
+  train:   6 * N_active * tokens  + attention term (10 * L * S^2 * d_attn *
+           B / 2 causal; x5/6 of the 12x factor since remat recompute is
+           NOT useful work)
+  prefill: 2 * N_active * tokens + causal attention forward
+  decode:  2 * N_active * B + B * L * S * d_attn * 4 / 2
+
+The ratio MODEL_FLOPS / dot_FLOPs exposes remat/redundancy waste; the
+dominant term names the bottleneck the perf loop attacks.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Optional
+
+from benchmarks import hw
+
+
+def model_flops(cfg, shape, n_devices: int) -> float:
+    """Analytic useful FLOPs per device for one step of this cell."""
+    n_active = cfg.active_param_count()
+    S = shape.seq_len
+    B = shape.global_batch
+    L = cfg.num_layers
+    a = cfg.attn
+    attn_fwd = 0.0
+    if a is not None:
+        d_attn = a.q_dim  # QK^T + PV: 2 * 2 * S^2 * H * hd (x1/2 causal)
+        if cfg.shared_attn_every:
+            L_attn = L // cfg.shared_attn_every
+        elif cfg.family == "encdec":
+            L_attn = cfg.encoder_layers + 2 * cfg.decoder_layers
+        else:
+            L_attn = L
+        if shape.kind == "decode":
+            attn_fwd = 2 * 2 * B * S * d_attn * L_attn  # 1 new q row
+        else:
+            eff_S = S
+            attn_fwd = 2 * 2 * B * eff_S * eff_S * d_attn * L_attn / 2
+    if shape.kind == "train":
+        tokens = B * S
+        total = 6 * n_active * tokens + 3 * attn_fwd
+    elif shape.kind == "prefill":
+        tokens = B * S
+        total = 2 * n_active * tokens + attn_fwd
+    else:  # decode: one token per sequence
+        total = 2 * n_active * B + attn_fwd
+    return total / n_devices
+
+
+def roofline_row(rec: dict, cfg, shape) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = hw.CHIPS_MULTI_POD if rec["mesh"].startswith("pod2") \
+        else hw.CHIPS_SINGLE_POD
+    t_compute = rec["dot_flops_per_device"] / hw.PEAK_FLOPS_BF16
+    # memory term: fusion-boundary bytes minus pure dtype-convert fusions
+    # (XLA:CPU has no bf16 dot and materializes f32 weight copies that the
+    # TPU MXU datapath absorbs — see benchmarks/hlo_analysis.py)
+    hbm = rec["hbm_bytes_per_device"] - rec.get("convert_bytes_per_device", 0)
+    t_memory = hbm / hw.HBM_BW
+    t_coll = rec["collective_bytes_per_device"] / hw.ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    mf = model_flops(cfg, shape, chips)
+    useful_ratio = mf / max(rec["dot_flops_per_device"], 1.0)
+    # roofline fraction: useful FLOP/s achieved vs peak at the modeled time
+    mfu = mf / max(step_time, 1e-12) / hw.PEAK_FLOPS_BF16
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_device": mf,
+        "hlo_flops_per_device": rec["dot_flops_per_device"],
+        "useful_ratio": useful_ratio,
+        "roofline_fraction": mfu,
+    }
+
+
+def load_all(dryrun_dir="experiments/dryrun", mesh="16x16"):
+    from repro.configs import get_config, get_shape
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        if path.endswith("__q.json"):  # quantized variants live in §Perf
+            continue
+        rec = json.load(open(path))
+        if rec.get("status") != "ok" or rec.get("mesh") != mesh:
+            continue
+        cfg = get_config(rec["arch"])
+        shape = get_shape(rec["shape"])
+        row = roofline_row(rec, cfg, shape)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def run(csv=False, mesh="16x16"):
+    rows = load_all(mesh=mesh)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    if csv:
+        for r in rows:
+            print(f"roofline_{r['arch']}_{r['shape']},0,"
+                  f"dom={r['dominant']};frac={r['roofline_fraction']:.4f}")
+    else:
+        hdr = (f"{'arch':26s}{'shape':13s}{'compute_s':>10s}{'memory_s':>10s}"
+               f"{'coll_s':>9s}  {'dominant':10s}{'useful':>7s}{'roofl%':>7s}")
+        print(hdr)
+        for r in rows:
+            print(f"{r['arch']:26s}{r['shape']:13s}"
+                  f"{r['t_compute_s']:10.4f}{r['t_memory_s']:10.4f}"
+                  f"{r['t_collective_s']:9.4f}  {r['dominant']:10s}"
+                  f"{r['useful_ratio']:7.2f}{100*r['roofline_fraction']:7.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(mesh=sys.argv[1] if len(sys.argv) > 1 else "16x16")

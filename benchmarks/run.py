@@ -1,0 +1,52 @@
+"""Benchmark aggregator: one section per paper table/figure plus the
+roofline and O(1)-traffic analyses. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # fast set
+  PYTHONPATH=src python -m benchmarks.run --full     # + brief PTQ training
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="include the PTQ fidelity benchmark (trains small "
+                         "models; several minutes on CPU)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+
+    t0 = time.perf_counter()
+    from benchmarks import traffic_o1
+
+    traffic_o1.run(csv=True)
+
+    from benchmarks import table34_throughput
+
+    table34_throughput.run(csv=True, measure=True,
+                           archs=["vit-tiny", "m3vit-tiny"])
+
+    try:
+        from benchmarks import roofline
+
+        rows = roofline.run(csv=True)
+        if not rows:
+            print("roofline,0,no_dryrun_artifacts_found")
+    except Exception as e:  # dry-run artifacts may not exist yet
+        print(f"roofline,0,error={e!r}")
+
+    if args.full:
+        from benchmarks import table1_quant_fidelity
+
+        table1_quant_fidelity.run(csv=True, train_steps=40)
+
+    dt = time.perf_counter() - t0
+    print(f"benchmarks_total,{dt*1e6:.0f},sections="
+          f"{'4' if args.full else '3'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Paper Table 1 proxy: quantization fidelity on the paper's architectures.
+
+ImageNet is not available in-container, so the claim "<=1% top-1 loss at
+W8/A8/Attn4" is evaluated as a *fidelity proxy*: train each arch briefly on
+the deterministic synthetic classification task (so logits carry real
+decision structure), run the full CoQMoE PTQ pipeline (calibrate ->
+reparam -> quantize), then report:
+
+  * top-1 agreement between FP and quantized predictions (proxy for
+    accuracy drop: 1 - agreement upper-bounds the accuracy change), and
+  * logit SQNR in dB.
+
+Also reports the ablation the paper's section 3 implies: MinMax per-layer
+symmetric WITHOUT the reparameterization (the Table-1 MinMax row that
+collapses) vs the reparam path.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.models as M
+from repro.configs import PAPER_ARCHS, get_shape
+from repro.core.quant.calibrate import TapCollector
+from repro.core.quant.ptq import calibrate_model, ptq_model, quantized_config
+from repro.data import SyntheticPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.train.trainer import Trainer, TrainerConfig
+
+# reduced-size twins of the paper archs (CPU-trainable in minutes) — the
+# quantizer math is dimension-independent; full-dim forward numbers come
+# from the dry-run/roofline path.
+BENCH_ARCHS = ["vit-tiny", "m3vit-tiny"]
+FULL_FWD_ARCHS = ["vit-tiny", "vit-small", "vit-base", "deit-tiny",
+                  "m3vit-tiny", "m3vit-small"]
+
+
+def _train_briefly(cfg, steps=60, batch=16):
+    shape = get_shape("train_4k").replace(global_batch=batch)
+    tc = TrainerConfig(total_steps=steps, lr=1e-3, warmup_steps=5,
+                       log_every=10_000)
+    tr = Trainer(cfg, shape, make_host_mesh(), tc)
+    state = tr.run()
+    return state.params, shape
+
+
+def _fidelity(cfg, params, shape, n_eval=4, minmax_baseline=False):
+    pipe = SyntheticPipeline(cfg, shape, seed=123)
+    calib = [
+        {k: jnp.asarray(v) for k, v in pipe.batch_for_step(s).items()}
+        for s in range(2)  # the paper calibrates from 32 images; 2x16 = 32
+    ]
+    taps = calibrate_model(cfg, params, calib)
+    if minmax_baseline:
+        # Ablation: skip the reparam — plain per-layer MinMax symmetric.
+        # Collapse the per-channel stats to per-tensor (what MinMax does).
+        for site, st in taps.stats.items():
+            st["min"] = np.full_like(st["min"], st["min"].min())
+            st["max"] = np.full_like(st["max"], st["max"].max())
+    p_q = ptq_model(cfg, params, taps)
+    qcfg = quantized_config(cfg)
+    agree, sqnr_num, sqnr_den = [], 0.0, 0.0
+    for s in range(100, 100 + n_eval):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_for_step(s).items()}
+        lg_fp, _ = M.forward(params, cfg, batch)
+        lg_q, _ = M.forward(p_q, qcfg, batch)
+        agree.append(np.mean(np.asarray(jnp.argmax(lg_fp, -1) ==
+                                        jnp.argmax(lg_q, -1))))
+        sqnr_num += float(jnp.sum(lg_fp.astype(jnp.float64) ** 2))
+        sqnr_den += float(jnp.sum((lg_fp - lg_q).astype(jnp.float64) ** 2))
+    sqnr = 10 * np.log10(sqnr_num / max(sqnr_den, 1e-30))
+    return float(np.mean(agree)), sqnr
+
+
+def run(csv=False, train_steps=60):
+    from repro.configs import smoke_config
+
+    rows = []
+    for arch in BENCH_ARCHS:
+        cfg = PAPER_ARCHS[arch].replace(remat=False)
+        # reduce depth for CPU training speed, keep layer dims authentic
+        cfg = cfg.replace(num_layers=4)
+        t0 = time.perf_counter()
+        params, shape = _train_briefly(cfg, steps=train_steps)
+        eval_shape = shape
+        agree, sqnr = _fidelity(cfg, params, eval_shape)
+        agree_mm, sqnr_mm = _fidelity(cfg, params, eval_shape,
+                                      minmax_baseline=True)
+        dt = time.perf_counter() - t0
+        rows.append({
+            "arch": arch, "top1_agreement": agree, "logit_sqnr_db": sqnr,
+            "minmax_agreement": agree_mm, "minmax_sqnr_db": sqnr_mm,
+            "seconds": dt,
+        })
+    if csv:
+        for r in rows:
+            print(f"table1_{r['arch']},{r['seconds']*1e6:.0f},"
+                  f"agree={r['top1_agreement']:.4f};sqnr={r['logit_sqnr_db']:.1f}dB;"
+                  f"minmax_agree={r['minmax_agreement']:.4f}")
+    else:
+        print(f"{'arch':14s} {'top1 agree':>10s} {'SQNR dB':>8s} "
+              f"{'MinMax agree':>12s} {'MinMax dB':>9s}")
+        for r in rows:
+            print(f"{r['arch']:14s} {r['top1_agreement']:10.4f} "
+                  f"{r['logit_sqnr_db']:8.1f} {r['minmax_agreement']:12.4f} "
+                  f"{r['minmax_sqnr_db']:9.1f}")
+        print("\npaper Table 1 (full ImageNet, for reference): "
+              "M3ViT 85.17 -> 84.89 (-0.28%), ViT-B 84.53 -> 83.99 @ 8/8/4")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Quantized batched serving: continuous batching over ragged requests with
+the CoQMoE inference path — INT8 K/V cache, 4-bit log-sqrt2 attention
+probabilities, and (for MoE archs) the dropless unified expert kernel.
+
+  PYTHONPATH=src python examples/serve_quantized.py
+  PYTHONPATH=src python examples/serve_quantized.py --arch olmoe-1b-7b
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+import repro.models as M
+from repro.configs import smoke_config
+from repro.serving.engine import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch).replace(remat=False)
+    qcfg = cfg.replace(quant=dataclasses.replace(cfg.quant, enable=True))
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in rng.integers(4, 24, args.requests)]
+
+    results = {}
+    for label, c in (("fp", cfg), ("int8-kv + attn4", qcfg)):
+        eng = ServeEngine(c, params, batch_slots=3, max_len=64)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=args.new_tokens)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run_until_drained()
+        dt = time.perf_counter() - t0
+        results[label] = [tuple(r.generated) for r in reqs]
+        total = args.requests * args.new_tokens
+        kv_dtype = eng.cache["k"].dtype if "k" in eng.cache else "n/a"
+        print(f"{label:16s}: {total} tokens in {dt:.2f}s "
+              f"({total/dt:5.1f} tok/s), kv cache dtype={kv_dtype}")
+
+    match = np.mean([
+        np.mean([a == b for a, b in zip(x, y)])
+        for x, y in zip(results["fp"], results["int8-kv + attn4"])
+    ])
+    print(f"token agreement fp vs quantized: {match:.2%} "
+          f"(random-init model; trained models track much closer)")
+
+
+if __name__ == "__main__":
+    main()

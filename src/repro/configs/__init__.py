@@ -1,0 +1,141 @@
+"""Architecture registry: ``get_config(arch_id)`` for every ``--arch``."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs import moe_vit as _moe_vit
+from repro.configs.base import (
+    AttnConfig,
+    DECODE_32K,
+    FULL_ATTENTION_FAMILIES,
+    LONG_500K,
+    ModelConfig,
+    MoEConfig,
+    PREFILL_32K,
+    QuantConfig,
+    SSMConfig,
+    ShapeConfig,
+    SHAPES,
+    TRAIN_4K,
+    shape_applicable,
+)
+from repro.configs.falcon_mamba_7b import CONFIG as FALCON_MAMBA_7B
+from repro.configs.gemma2_2b import CONFIG as GEMMA2_2B
+from repro.configs.gemma_7b import CONFIG as GEMMA_7B
+from repro.configs.internvl2_26b import CONFIG as INTERNVL2_26B
+from repro.configs.llama3_8b import CONFIG as LLAMA3_8B
+from repro.configs.nemotron_4_340b import CONFIG as NEMOTRON_4_340B
+from repro.configs.olmoe_1b_7b import CONFIG as OLMOE_1B_7B
+from repro.configs.qwen3_moe_235b_a22b import CONFIG as QWEN3_MOE_235B
+from repro.configs.seamless_m4t_medium import CONFIG as SEAMLESS_M4T_MEDIUM
+from repro.configs.zamba2_7b import CONFIG as ZAMBA2_7B
+
+# The 10 assigned architectures (the 40-cell dry-run/roofline grid).
+ASSIGNED: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        FALCON_MAMBA_7B,
+        QWEN3_MOE_235B,
+        OLMOE_1B_7B,
+        NEMOTRON_4_340B,
+        LLAMA3_8B,
+        GEMMA_7B,
+        GEMMA2_2B,
+        ZAMBA2_7B,
+        SEAMLESS_M4T_MEDIUM,
+        INTERNVL2_26B,
+    )
+}
+
+# Paper's own archs (quant-accuracy + throughput tables).
+PAPER_ARCHS: Dict[str, ModelConfig] = dict(_moe_vit.ALL)
+
+REGISTRY: Dict[str, ModelConfig] = {**ASSIGNED, **PAPER_ARCHS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in REGISTRY:
+        raise KeyError(
+            f"unknown arch {arch!r}; available: {sorted(REGISTRY)}"
+        )
+    return REGISTRY[arch]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    """A reduced config of the same family for CPU smoke tests.
+
+    Small layers/width, few experts, tiny vocab -- preserves every structural
+    feature (GQA ratio, GLU, local/global alternation, shared-attn period,
+    SSM version) so the smoke test exercises the real code paths.
+    """
+    cfg = get_config(arch)
+    kw = dict(
+        name=cfg.name + "-smoke",
+        num_layers=min(cfg.num_layers, 4),
+        d_model=64,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 256) if cfg.vocab_size else 0,
+        microbatch_size=0,
+    )
+    if cfg.attn is not None:
+        ratio = max(1, cfg.attn.num_heads // cfg.attn.num_kv_heads)
+        heads = 4
+        kw["attn"] = dataclasses.replace(
+            cfg.attn,
+            num_heads=heads,
+            num_kv_heads=max(1, heads // ratio),
+            head_dim=16,
+            local_window=16 if cfg.attn.local_window else 0,
+        )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=8, top_k=min(cfg.moe.top_k, 2), d_ff=32
+        )
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(
+            cfg.ssm, state_dim=8, head_dim=16 if cfg.ssm.version == 2 else 64
+        )
+    if cfg.family == "encdec":
+        kw["num_layers"] = 4
+        kw["encoder_layers"] = 2
+        kw["decoder_layers"] = 2
+    if cfg.frontend:
+        kw["frontend_tokens"] = 8 if cfg.frontend == "patch" else 0
+        kw["frontend_dim"] = 48
+    if cfg.shared_attn_every:
+        kw["shared_attn_every"] = 2
+        kw["num_layers"] = 5  # non-multiple on purpose: exercises remainder
+    if cfg.num_classes:
+        kw["num_classes"] = 10
+        kw["image_tokens"] = 17
+    return cfg.replace(**kw)
+
+
+__all__ = [
+    "ASSIGNED",
+    "PAPER_ARCHS",
+    "REGISTRY",
+    "SHAPES",
+    "AttnConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "QuantConfig",
+    "SSMConfig",
+    "ShapeConfig",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+    "FULL_ATTENTION_FAMILIES",
+    "get_config",
+    "get_shape",
+    "smoke_config",
+    "shape_applicable",
+]

@@ -1,0 +1,223 @@
+"""Config dataclasses for the repro framework.
+
+Every selectable ``--arch`` is a ``ModelConfig``; every benchmark/dry-run
+input shape is a ``ShapeConfig``. Configs are frozen dataclasses so they can
+be hashed into jit static args.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10_000.0
+    local_window: int = 0  # 0 = global attention
+    alternate_local_global: bool = False  # gemma2: layer pairs (local, global)
+    logit_softcap: float = 0.0  # gemma2 attention logit soft-capping
+    qk_norm: bool = False  # qwen3 / olmoe per-head RMS QK-norm
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden dim
+    moe_every: int = 1  # every Nth layer is MoE (1 = all layers)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # grouped = sort-based unified kernel (the paper's orchestration);
+    # gshard  = capacity dispatch/combine einsums (GSPMD-native EP at scale)
+    impl: str = "grouped"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int
+    version: int = 1  # 1 = Mamba-1 (falcon-mamba), 2 = Mamba-2 (zamba2)
+    expand: int = 2
+    conv_width: int = 4
+    head_dim: int = 64  # mamba2 only
+    dt_rank: int = 0  # mamba1; 0 = ceil(d_model / 16)
+    scan_chunk: int = 128  # chunked selective-scan chunk length
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def num_ssm_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """The paper's dual-stage quantization scheme (CoQMoE §3)."""
+
+    enable: bool = False
+    w_bits: int = 8
+    a_bits: int = 8
+    attn_bits: int = 4  # post-softmax log-sqrt2 quantizer bits
+    post_norm_reparam: bool = True  # Eqs. 10-16
+    softmax_log_sqrt2: bool = True  # Eqs. 17-21
+    kv_cache_int8: bool = True  # serving: int8 K/V cache
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    # dense | moe | ssm | hybrid | encdec | vlm | vit | vit_moe
+    family: str
+    num_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    act: str = "silu"  # silu | gelu | geglu_gelu | relu2
+    glu: bool = True  # gated linear unit MLP (silu->swiglu, gelu->geglu)
+    attn: Optional[AttnConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2): one *shared* attention block applied every N ssm layers
+    shared_attn_every: int = 0
+    # enc-dec (seamless)
+    encoder_layers: int = 0
+    decoder_layers: int = 0
+    # modality frontend stub: 'patch' (vlm) | 'frame' (audio) | None
+    frontend: Optional[str] = None
+    frontend_tokens: int = 0  # tokens contributed by the frontend embeds
+    frontend_dim: int = 0  # raw embedding dim provided by the stub
+    tie_embeddings: bool = False
+    embed_scale: bool = False  # gemma: scale embeds by sqrt(d_model)
+    post_block_norm: bool = False  # gemma2 sandwich norms
+    final_logit_softcap: float = 0.0
+    # vit classifier head (paper archs)
+    num_classes: int = 0
+    image_tokens: int = 0  # e.g. 197 for 224/16 ViT (196 patches + cls)
+    quant: QuantConfig = field(default_factory=QuantConfig)
+    dtype: str = "bfloat16"
+    # training knobs
+    remat: bool = True
+    optimizer: str = "adamw"  # adamw | adafactor (big archs)
+    microbatch_size: int = 0  # 0 = no gradient accumulation
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- derived sizes ----------------------------------------------------
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks + head)."""
+        d = self.d_model
+        n = 0
+        n += self.vocab_size * d  # embedding
+        if not self.tie_embeddings and self.family not in ("vit", "vit_moe"):
+            n += self.vocab_size * d  # lm head
+        layers = self.num_layers
+        if self.family == "encdec":
+            layers = self.encoder_layers + self.decoder_layers
+        per_layer = 0
+        # hybrid: attention/MLP live only in the single shared block
+        shared_only = bool(self.shared_attn_every)
+        if self.attn is not None and not shared_only:
+            a = self.attn
+            per_layer += d * (a.q_dim + 2 * a.kv_dim)  # qkv
+            per_layer += a.q_dim * d  # out proj
+        if self.ssm is not None:
+            s = self.ssm
+            di = s.d_inner(d)
+            per_layer += d * 2 * di  # in_proj (x, z)
+            per_layer += di * s.conv_width  # conv
+            if s.version == 1:
+                dtr = s.dt_rank or -(-d // 16)
+                per_layer += di * (dtr + 2 * s.state_dim)  # x_proj
+                per_layer += dtr * di  # dt_proj
+                per_layer += di * s.state_dim  # A
+            else:
+                nh = s.num_ssm_heads(d)
+                per_layer += d * (2 * s.state_dim + nh)  # B,C,dt proj
+                per_layer += nh  # A
+            per_layer += di * d  # out_proj
+        mlp_mult = 3 if self.glu else 2
+        if self.moe is not None:
+            moe_layers = layers // self.moe.moe_every
+            dense_layers = layers - moe_layers
+            per_layer_moe = (
+                self.moe.num_experts * mlp_mult * d * self.moe.d_ff
+                + d * self.moe.num_experts
+            )
+            n += moe_layers * per_layer_moe
+            if self.d_ff and not shared_only:
+                n += dense_layers * mlp_mult * d * self.d_ff
+            n += layers * per_layer
+        else:
+            if self.d_ff and not shared_only:
+                per_layer += mlp_mult * d * self.d_ff
+            n += layers * per_layer
+        if self.family == "encdec":
+            # decoder cross-attention
+            a = self.attn
+            n += self.decoder_layers * (d * (a.q_dim + 2 * a.kv_dim) + a.q_dim * d)
+        if self.shared_attn_every and self.attn is not None:
+            a = self.attn
+            n += d * (a.q_dim + 2 * a.kv_dim) + a.q_dim * d  # one shared block
+            n += mlp_mult * d * self.d_ff
+        if self.num_classes:
+            n += d * self.num_classes
+        return n
+
+    def active_param_count(self) -> int:
+        """Params active per token (MoE: top_k of num_experts)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        layers = self.num_layers
+        moe_layers = layers // self.moe.moe_every
+        mlp_mult = 3 if self.glu else 2
+        expert_params = moe_layers * self.moe.num_experts * mlp_mult * self.d_model * self.moe.d_ff
+        active_expert = moe_layers * self.moe.top_k * mlp_mult * self.d_model * self.moe.d_ff
+        return full - expert_params + active_expert
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One benchmark/dry-run input shape cell."""
+
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    def replace(self, **kw) -> "ShapeConfig":
+        return dataclasses.replace(self, **kw)
+
+
+TRAIN_4K = ShapeConfig("train_4k", "train", 4_096, 256)
+PREFILL_32K = ShapeConfig("prefill_32k", "prefill", 32_768, 32)
+DECODE_32K = ShapeConfig("decode_32k", "decode", 32_768, 128)
+LONG_500K = ShapeConfig("long_500k", "decode", 524_288, 1)
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+# Families for which full attention makes long_500k intractable (skip per spec).
+FULL_ATTENTION_FAMILIES = ("dense", "moe", "encdec", "vlm", "vit", "vit_moe")
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether a (arch x shape) cell is runnable; returns (ok, reason)."""
+    if shape.name == "long_500k" and cfg.family in FULL_ATTENTION_FAMILIES:
+        # gemma2 alternates local/global: global layers are still full attention.
+        return False, "full-attention arch: 500k decode KV is not sub-quadratic-safe"
+    if cfg.family in ("vit", "vit_moe") and shape.kind != "train":
+        return False, "encoder-only classifier: no decode/prefill step"
+    return True, ""

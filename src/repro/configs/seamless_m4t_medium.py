@@ -1,0 +1,30 @@
+"""seamless-m4t-medium [audio]: enc-dec 12L(enc)+12L(dec) d_model=1024 16H
+(kv=16) d_ff=4096 vocab=256206 [arXiv:2308.11596].
+
+Modality frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed audio frame embeddings (B, S, frontend_dim) for the encoder; the
+decoder consumes text tokens. The 12L of the assignment maps to 12 encoder +
+12 decoder layers (the released medium text model's split).
+"""
+from repro.configs.base import AttnConfig, ModelConfig, QuantConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    num_layers=24,
+    encoder_layers=12,
+    decoder_layers=12,
+    d_model=1024,
+    d_ff=4096,
+    vocab_size=256206,
+    norm="layernorm",
+    act="gelu",
+    glu=False,
+    attn=AttnConfig(num_heads=16, num_kv_heads=16, head_dim=64,
+                    rope_theta=10_000.0),
+    frontend="frame",
+    frontend_dim=1024,
+    quant=QuantConfig(enable=False),
+    optimizer="adamw",
+    microbatch_size=32,
+)

@@ -1,0 +1,10 @@
+from repro.core.moe.dispatch import (
+    GroupedDispatch,
+    capacity,
+    grouped_combine,
+    grouped_dispatch,
+    gshard_dispatch_combine,
+)
+from repro.core.moe.router import RouterOut, route_topk
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,99 @@
+"""Token dispatch for MoE expert computation — two execution modes
+(DESIGN.md section 2: the paper's runtime-reconfigurable unified kernel).
+
+``grouped``  — the paper's orchestration, TPU-adapted: tokens are *sorted by
+               expert id* (the sort is the TPU-idiomatic analogue of the
+               round-robin hardware router in Fig. 5(b)), then a single
+               grouped matmul streams each expert's weights HBM->VMEM exactly
+               once per layer — O(1) weight traffic w.r.t. token parallelism.
+               Dense MLP is the same path with num_groups == 1.
+
+``gshard``   — capacity-based dispatch/combine einsums (GSPMD-native EP for
+               large-scale training; all-to-alls are inserted automatically
+               when the expert dim is sharded over the 'model' mesh axis).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GroupedDispatch(NamedTuple):
+    x_sorted: jnp.ndarray  # [T*k, D] tokens gathered in expert order
+    group_sizes: jnp.ndarray  # [E] int32 tokens per expert
+    sort_idx: jnp.ndarray  # [T*k] permutation into expert order
+    token_idx: jnp.ndarray  # [T*k] source token of each sorted row
+    weights_sorted: jnp.ndarray  # [T*k] combine weight of each sorted row
+
+
+def grouped_dispatch(x: jnp.ndarray, experts: jnp.ndarray,
+                     weights: jnp.ndarray, num_experts: int) -> GroupedDispatch:
+    """Sort-based dispatch. x: [T, D]; experts/weights: [T, k]."""
+    T, k = experts.shape
+    flat_e = experts.reshape(-1)  # [T*k]
+    flat_w = weights.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    token_idx = flat_t[sort_idx]
+    x_sorted = x[token_idx]
+    group_sizes = jnp.bincount(flat_e, length=num_experts).astype(jnp.int32)
+    return GroupedDispatch(
+        x_sorted=x_sorted,
+        group_sizes=group_sizes,
+        sort_idx=sort_idx,
+        token_idx=token_idx,
+        weights_sorted=flat_w[sort_idx],
+    )
+
+
+def grouped_combine(y_sorted: jnp.ndarray, d: GroupedDispatch,
+                    num_tokens: int) -> jnp.ndarray:
+    """Weighted scatter-add back to token order (Eq. 5 aggregation)."""
+    y_w = y_sorted * d.weights_sorted[:, None].astype(y_sorted.dtype)
+    out = jnp.zeros((num_tokens, y_sorted.shape[-1]), y_sorted.dtype)
+    return out.at[d.token_idx].add(y_w)
+
+
+# ---------------------------------------------------------------------------
+# GShard-style capacity dispatch (training at scale under GSPMD)
+# ---------------------------------------------------------------------------
+
+def capacity(T: int, k: int, E: int, factor: float) -> int:
+    c = int(T * k * factor / E) + 1
+    return max(4, min(c, T))
+
+
+def gshard_dispatch_combine(
+    x: jnp.ndarray,  # [T, D]
+    experts: jnp.ndarray,  # [T, k]
+    weights: jnp.ndarray,  # [T, k]
+    num_experts: int,
+    cap: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (dispatch [T, E, C] bool, combine [T, E, C] f32).
+
+    Position-in-expert computed per (token, slot) in routing priority order;
+    tokens overflowing an expert's capacity are dropped (standard GShard).
+    """
+    T, k = experts.shape
+    onehot = jax.nn.one_hot(experts, num_experts, dtype=jnp.int32)  # [T,k,E]
+    flat = onehot.reshape(T * k, num_experts)
+    pos = jnp.cumsum(flat, axis=0) - flat  # [T*k, E] position in expert queue
+    pos = jnp.sum(pos * flat, axis=-1).reshape(T, k)  # [T, k]
+    keep = pos < cap
+    pos = jnp.where(keep, pos, 0)  # clamped; masked out by `keep` below
+    # dispatch [T, E, C]: for each (t, slot) mark (expert, position)
+    disp = jnp.einsum(
+        "tke,tkc->tec",
+        jax.nn.one_hot(experts, num_experts, dtype=jnp.float32)
+        * keep[..., None],
+        jax.nn.one_hot(pos, cap, dtype=jnp.float32),
+    )
+    comb = jnp.einsum("tk,tke,tkc->tec",
+                      weights.astype(jnp.float32),
+                      jax.nn.one_hot(experts, num_experts, dtype=jnp.float32)
+                      * keep[..., None],
+                      jax.nn.one_hot(pos, cap, dtype=jnp.float32))
+    return disp, comb

@@ -1,0 +1,33 @@
+"""Top-k gating network (paper Eq. 4-5) with load-balance auxiliary loss."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RouterOut(NamedTuple):
+    weights: jnp.ndarray  # [T, k] combine weights (softmax over top-k logits)
+    experts: jnp.ndarray  # [T, k] int32 expert ids
+    aux_loss: jnp.ndarray  # scalar load-balance loss
+    logits: jnp.ndarray  # [T, E] raw router logits
+
+
+def route_topk(x: jnp.ndarray, w_gate: jnp.ndarray, b_gate: jnp.ndarray | None,
+               top_k: int) -> RouterOut:
+    """x: [T, D] tokens; w_gate: [D, E]. Eq. 4: softmax over the top-k logits."""
+    logits = (x.astype(jnp.float32) @ w_gate.astype(jnp.float32))
+    if b_gate is not None:
+        logits = logits + b_gate
+    T, E = logits.shape
+    top_vals, top_idx = jax.lax.top_k(logits, top_k)  # [T, k]
+    weights = jax.nn.softmax(top_vals, axis=-1)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)  # [T, E]
+    onehot = jax.nn.one_hot(top_idx[:, 0], E, dtype=jnp.float32)  # primary route
+    f = jnp.mean(onehot, axis=0)
+    p = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * p)
+    return RouterOut(weights=weights, experts=top_idx.astype(jnp.int32),
+                     aux_loss=aux, logits=logits)

@@ -1,0 +1,45 @@
+"""CoQMoE dual-stage quantization (paper section 3)."""
+from repro.core.quant.calibrate import TapCollector, maybe_record
+from repro.core.quant.linear_quant import (
+    QLinear,
+    fake_quant_activation,
+    make_qlinear,
+    qlinear_apply,
+    qlinear_apply_prequant,
+    quantize_weight,
+)
+from repro.core.quant.qtypes import (
+    AsymParams,
+    asym_params_from_minmax,
+    QTensor,
+    dequantize_asym,
+    dequantize_sym,
+    int_matmul,
+    np_sqnr_db,
+    qmax,
+    qmin,
+    quantize_asym,
+    quantize_sym,
+    quantize_sym_calibrated,
+    sym_scale_from_absmax,
+)
+from repro.core.quant.reparam import (
+    ReparamFactors,
+    apply_to_consumer,
+    apply_to_layernorm,
+    apply_to_rmsnorm,
+    calibrate_per_channel_asym,
+    calibrate_per_channel_sym,
+    reparam_factors,
+    transform_activation,
+)
+from repro.core.quant.softmax_quant import (
+    SQRT2,
+    logsqrt2_dequantize,
+    logsqrt2_quantize,
+    logsqrt2_scale_factor,
+    parity_decomposition,
+    quantized_softmax_numerator,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

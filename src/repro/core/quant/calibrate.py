@@ -1,0 +1,73 @@
+"""Activation-statistics collection for PTQ calibration.
+
+The paper calibrates from 32 images (section 5.1): the FP model runs eagerly
+(unjitted) over a small calibration set while `Tap` objects record per-site
+activation statistics. Model apply functions accept an optional ``taps``
+collector and call ``taps.record(site, x)`` at quantization sites.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class TapCollector:
+    """Records running min/max/absmax per named site (host-side, eager)."""
+
+    def __init__(self) -> None:
+        self.stats: Dict[str, Dict[str, np.ndarray]] = {}
+        self.samples: Dict[str, list] = {}
+        self.keep_samples: bool = False
+
+    def record(self, site: str, x: jnp.ndarray) -> None:
+        d = x.shape[-1]
+        flat = np.asarray(x, dtype=np.float32).reshape(-1, d)
+        st = self.stats.get(site)
+        if st is None:
+            self.stats[site] = {
+                "min": flat.min(axis=0),
+                "max": flat.max(axis=0),
+                "absmax": np.abs(flat).max(),
+            }
+        else:
+            st["min"] = np.minimum(st["min"], flat.min(axis=0))
+            st["max"] = np.maximum(st["max"], flat.max(axis=0))
+            st["absmax"] = max(st["absmax"], float(np.abs(flat).max()))
+        if self.keep_samples:
+            self.samples.setdefault(site, []).append(flat)
+
+    # -- views ---------------------------------------------------------------
+    def channel_minmax(self, site: str):
+        st = self.stats[site]
+        return jnp.asarray(st["min"]), jnp.asarray(st["max"])
+
+    def absmax(self, site: str) -> float:
+        return float(self.stats[site]["absmax"])
+
+    def sites(self):
+        return sorted(self.stats)
+
+    def scoped(self, prefix: str) -> "ScopedTaps":
+        return ScopedTaps(self, prefix)
+
+
+class ScopedTaps:
+    """Per-layer view of a TapCollector: prepends ``prefix.`` to site names."""
+
+    def __init__(self, base, prefix: str) -> None:
+        self.base = base
+        self.prefix = prefix
+
+    def record(self, site: str, x: jnp.ndarray) -> None:
+        self.base.record(f"{self.prefix}.{site}", x)
+
+    def scoped(self, prefix: str) -> "ScopedTaps":
+        return ScopedTaps(self.base, f"{self.prefix}.{prefix}")
+
+
+def maybe_record(taps: Optional[TapCollector], site: str, x: jnp.ndarray) -> None:
+    """No-op under jit (taps is None in jitted paths)."""
+    if taps is not None:
+        taps.record(site, x)

@@ -1,0 +1,79 @@
+"""INT8 symmetric linear-layer quantization (paper Eqs. 7/9).
+
+Weights: per-output-channel symmetric INT8. Activations: per-tensor symmetric
+INT8 with a calibrated static scale (the post-norm activations' scale is the
+reparam s_tilde). The matmul runs int8 x int8 -> int32 on the MXU; the single
+product-of-scales rescale of Eq. 9 is applied once on the int32 accumulator.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.core.quant.qtypes import int_matmul, qmax, quantize_sym, sym_scale_from_absmax
+
+
+class QLinear(NamedTuple):
+    """Quantized linear layer y = dequant(x_q @ w_q) + b."""
+
+    w_q: jnp.ndarray  # int8 [in, out]  (or [E, in, out] for expert stacks)
+    w_scale: jnp.ndarray  # f32 [out]   per-output-channel
+    a_scale: jnp.ndarray  # f32 scalar  per-tensor activation scale
+    b: Optional[jnp.ndarray]  # f32 [out] or None
+
+
+def quantize_weight(w: jnp.ndarray, bits: int = 8) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-output-channel symmetric quant; w: [..., in, out] -> scale [..., out]."""
+    absmax = jnp.max(jnp.abs(w), axis=-2, keepdims=True)
+    scale = sym_scale_from_absmax(absmax, bits)
+    w_q = quantize_sym(w, scale, bits)
+    return w_q, scale.squeeze(-2)
+
+
+def make_qlinear(
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    a_absmax: jnp.ndarray,
+    w_bits: int = 8,
+    a_bits: int = 8,
+) -> QLinear:
+    w_q, w_scale = quantize_weight(w, w_bits)
+    a_scale = sym_scale_from_absmax(jnp.asarray(a_absmax, jnp.float32), a_bits)
+    return QLinear(w_q=w_q, w_scale=w_scale, a_scale=a_scale,
+                   b=None if b is None else jnp.asarray(b, jnp.float32))
+
+
+def qlinear_apply(x: jnp.ndarray, q: QLinear, a_bits: int = 8) -> jnp.ndarray:
+    """Eq. 9: y = s_x s_w (X_q W_q) + b. x: [..., in] f32/bf16."""
+    x_q = quantize_sym(x.astype(jnp.float32), q.a_scale, a_bits)
+    acc = int_matmul(x_q, q.w_q)  # int32 [..., out]
+    y = acc.astype(jnp.float32) * (q.a_scale * q.w_scale)
+    if q.b is not None:
+        y = y + q.b
+    return y
+
+
+def qlinear_apply_prequant(x_q: jnp.ndarray, q: QLinear) -> jnp.ndarray:
+    """Same as qlinear_apply but the input is already int8 (fused pipelines)."""
+    acc = int_matmul(x_q, q.w_q)
+    y = acc.astype(jnp.float32) * (q.a_scale * q.w_scale)
+    if q.b is not None:
+        y = y + q.b
+    return y
+
+
+def fake_quant_activation(x: jnp.ndarray, a_scale: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Quantize-dequantize (used by the oracle and fidelity benchmarks)."""
+    q = jnp.clip(jnp.round(x / a_scale), -(2 ** (bits - 1)), qmax(bits))
+    return q * a_scale
+
+
+def fake_quant_weight(w: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Per-output-channel symmetric quantize-dequantize (PTQ simulation).
+
+    Numerically identical values to the int8 deployment path; the int32
+    accumulation itself is exercised by the kernel tests.
+    """
+    w_q, scale = quantize_weight(w, bits)
+    return (w_q.astype(jnp.float32) * scale[..., None, :]).astype(w.dtype)

@@ -1,0 +1,333 @@
+"""End-to-end PTQ driver (CoQMoE section 3): calibrate -> reparameterize ->
+quantize.
+
+Pipeline (offline, mirrors the paper's 32-image calibration):
+
+  1. ``calibrate_model``  — run the FP model eagerly over a small calibration
+     set; ``TapCollector`` records per-channel min/max at every post-norm
+     site and per-tensor absmax at every other linear-input site.
+  2. ``ptq_model``        — per layer:
+       * post-norm reparam (Eqs. 10-16): per-channel asymmetric params fold
+         into the norm's (gamma, beta) and inversely into EVERY consumer —
+         QKV, MLP fc1, and in MoE blocks every expert's fc1 plus the gating
+         network. RMSNorm archs use the symmetric (r2 == 0) variant
+         (DESIGN.md section 4).
+       * inserts ``a_scale`` leaves (the per-layer symmetric scale s_tilde)
+         that the runtime quantizer in ``models.layers.apply_norm`` uses;
+       * inserts ``wo_a_scale`` per-tensor scales for the remaining linear
+         inputs (attention out-proj, MLP/expert fc2);
+       * weight int8 per-output-channel symmetric quantization (simulated
+         via quantize-dequantize; identical values to the int8 kernels).
+
+  ``fold_only=True`` performs ONLY the Eq. 10-16 fold — the result must be
+  numerically equivalent to the FP model (the property the reparam is built
+  on; tested in tests/test_quant.py).
+
+The 4-bit log-sqrt2 post-softmax quantizer is runtime behaviour
+(``cfg.quant.enable`` routes attention through the quantized kernel), not a
+param transform, so it needs no work here.
+
+Embedding lookups are not matmuls and stay FP (noted in DESIGN.md); the
+modality-frontend input projection consumes raw stub embeddings and is
+weight-quantized only.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.quant.calibrate import TapCollector
+from repro.core.quant.linear_quant import fake_quant_weight
+from repro.core.quant.qtypes import qmax
+
+# Leaf keys treated as quantizable linear weights (per-out-channel int8).
+QUANT_WEIGHT_KEYS = frozenset(
+    {
+        "wq", "wk", "wv", "wo", "wi", "gate", "lm_head", "head",
+        "patch_proj", "frontend_proj", "in_proj", "out_proj",
+    }
+)
+
+
+# ---------------------------------------------------------------------------
+# Calibration
+# ---------------------------------------------------------------------------
+
+def calibrate_model(cfg: ModelConfig, params, batches: Sequence[dict]) -> TapCollector:
+    """Run the FP model eagerly over calibration batches, recording taps."""
+    from repro import models
+
+    taps = TapCollector()
+    for batch in batches:
+        models.forward(params, cfg, batch, taps=taps)
+    return taps
+
+
+# ---------------------------------------------------------------------------
+# Fold machinery
+# ---------------------------------------------------------------------------
+
+def _copy(tree):
+    if isinstance(tree, dict):
+        return {k: _copy(v) for k, v in tree.items()}
+    return tree
+
+
+def _get(tree, path: Tuple[str, ...]):
+    for k in path:
+        if not isinstance(tree, dict) or k not in tree:
+            return None
+        tree = tree[k]
+    return tree
+
+
+def _set(tree, path: Tuple[str, ...], val):
+    for k in path[:-1]:
+        tree = tree[k]
+    tree[path[-1]] = val
+
+
+def _stacked_factors(taps: TapCollector, names: List[str], bits: int,
+                     symmetric: bool):
+    """Per-layer reparam factors from recorded min/max: arrays [L, D]."""
+    mins, maxs = [], []
+    for n in names:
+        st = taps.stats[n]
+        mins.append(st["min"])
+        maxs.append(st["max"])
+    xmin = jnp.asarray(np.stack(mins))  # [L, D]
+    xmax = jnp.asarray(np.stack(maxs))
+    if symmetric:
+        absmax = jnp.maximum(jnp.maximum(jnp.abs(xmin), jnp.abs(xmax)), 1e-8)
+        s = absmax / qmax(bits)
+        z = None
+    else:
+        span = jnp.maximum(xmax - xmin, 1e-8)
+        s = span / (2**bits - 1)
+        z = jnp.round(-xmin / s)
+    s_tilde = jnp.mean(s, axis=-1)  # [L]
+    r1 = s / s_tilde[:, None]
+    r2 = jnp.zeros_like(s) if z is None else z - 2.0 ** (bits - 1)
+    return r1, r2, s, s_tilde
+
+
+def _fold_norm(norm_p: dict, r1, r2, s, rms: bool):
+    """Eq. 11 on (possibly stacked) norm params. r1/r2/s: [..., D]."""
+    if rms:
+        # (1 + gamma)' = (1 + gamma) / r1  (rmsnorm uses the (1+g) convention)
+        norm_p["scale"] = (1.0 + norm_p["scale"]) / r1 - 1.0
+    else:
+        norm_p["bias"] = (norm_p["bias"] + s * r2) / r1
+        norm_p["scale"] = norm_p["scale"] / r1
+
+
+def _fold_consumer(layer_p: dict, w_path: Tuple[str, ...], b_key: str,
+                   r1, sr2, add_bias: bool):
+    """Eq. 14/15/16: W' = diag(r1) W, b' = b - W^T (s . r2).
+
+    W: [..., D, O] with the reparam'd dim at axis -2; r1/sr2: [..., D] with
+    leading axes broadcast against W's leading (layer/expert) axes.
+    """
+    w = _get(layer_p, w_path)
+    if w is None:
+        return
+    extra = w.ndim - r1.ndim - 1  # expert axes between layer dim and D
+    shp = r1.shape[:-1] + (1,) * extra + (r1.shape[-1], 1)
+    _set(layer_p, w_path, w * r1.reshape(shp))
+    corr = jnp.sum(w * sr2.reshape(shp), axis=-2)  # [..., O]
+    b_path = w_path[:-1] + (b_key,)
+    b = _get(layer_p, b_path)
+    if b is not None:
+        _set(layer_p, b_path, b - corr)
+    elif add_bias:
+        _set(layer_p, b_path, -corr)
+
+
+def _insert_scale(layer_p: dict, path: Tuple[str, ...], key: str, val):
+    node = _get(layer_p, path) if path else layer_p
+    if node is not None:
+        node[key] = val
+
+
+def _absmax_scale(taps: TapCollector, names: List[str], bits: int):
+    """Per-tensor symmetric activation scales, stacked [L]."""
+    vals = [taps.absmax(n) / qmax(bits) for n in names]
+    return jnp.asarray(vals, jnp.float32)
+
+
+# Per-family layer-group table: (params_key, scope_prefix, norm sites).
+# Each norm site: (norm_path, tap_suffix, [(consumer_w_path, bias_key)]).
+_ATTN_SITE = (("ln1",), "post_ln1", [(("attn", "wq"), "bq"),
+                                     (("attn", "wk"), "bk"),
+                                     (("attn", "wv"), "bv")])
+_MLP_SITE = (("ln2",), "post_ln2", [(("mlp", "wi"), "bi")])
+_MOE_SITE = (("ln2",), "post_ln2", [(("moe", "gate"), "gate_b"),
+                                    (("moe", "wi"), "bi")])
+_MID_SITES = [  # (subtree, tap_suffix) -> wo_a_scale insertion points
+    (("attn",), "attn_out"),
+    (("xattn",), "x.attn_out"),  # enc-dec cross attention
+    (("mlp",), "mlp_mid"),
+    (("moe",), "moe_mid"),
+]
+
+
+def _layer_groups(cfg: ModelConfig, params) -> List[Tuple[str, str, list]]:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "vit", "vit_moe"):
+        groups = []
+        for key, prefix in (("layers", "L"), ("layers_local", "Llocal"),
+                            ("layers_global", "Lglobal"),
+                            ("pairs_dense", "Ldense"), ("pairs_moe", "Lmoe")):
+            if key not in params:
+                continue
+            sub = params[key]
+            sites = [_ATTN_SITE, _MOE_SITE if "moe" in sub else _MLP_SITE]
+            groups.append((key, prefix, sites))
+        return groups
+    if fam in ("ssm", "hybrid"):
+        return [("layers", "L", [((("ln",)), "post_ln1",
+                                  [(("mamba", "in_proj"), "in_bias")])])]
+    if fam == "encdec":
+        return [
+            ("enc_layers", "Lenc", [_ATTN_SITE, _MLP_SITE]),
+            ("dec_layers", "Ldec", [
+                _ATTN_SITE,
+                ((("lnx",)), "post_lnx", [(("xattn", "wq"), "bq")]),
+                _MLP_SITE,
+            ]),
+        ]
+    raise ValueError(f"PTQ: unsupported family {fam!r}")
+
+
+def _quantize_weights(tree, bits: int):
+    if isinstance(tree, dict):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = _quantize_weights(v, bits)
+            elif k in QUANT_WEIGHT_KEYS and hasattr(v, "ndim") and v.ndim >= 2:
+                out[k] = fake_quant_weight(v, bits)
+            else:
+                out[k] = v
+        return out
+    return tree
+
+
+def _n_stack(sub: dict) -> int:
+    leaf = jax.tree.leaves(sub)[0]
+    return leaf.shape[0]
+
+
+def _fold_group_unstacked(sub: dict, scope: str, sites, taps: TapCollector,
+                          a_bits: int, rms: bool, fold_only: bool):
+    """Fold one unstacked (no leading layer dim) block, e.g. zamba2's shared
+    attention block."""
+    for norm_path, suffix, consumers in sites:
+        name = f"{scope}.{suffix}"
+        if name not in taps.stats:
+            continue
+        r1, r2, s, s_tilde = _stacked_factors(taps, [name], a_bits, rms)
+        _fold_norm(_get(sub, norm_path), r1[0], r2[0], s[0], rms)
+        for w_path, b_key in consumers:
+            _fold_consumer(sub, w_path, b_key, r1[0], (s * r2)[0],
+                           add_bias=not rms)
+        if not fold_only:
+            _insert_scale(sub, norm_path, "a_scale", s_tilde[0])
+    if not fold_only:
+        for mid_path, suffix in _MID_SITES:
+            name = f"{scope}.{suffix}"
+            if _get(sub, mid_path) is None or name not in taps.stats:
+                continue
+            _insert_scale(sub, mid_path, "wo_a_scale",
+                          _absmax_scale(taps, [name], a_bits)[0])
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def ptq_model(cfg: ModelConfig, params, taps: TapCollector, *,
+              fold_only: bool = False):
+    """Return the PTQ-transformed param tree (original is untouched)."""
+    rms = cfg.norm == "rmsnorm"
+    a_bits = cfg.quant.a_bits
+    w_bits = cfg.quant.w_bits
+    p = _copy(params)
+
+    for key, prefix, sites in _layer_groups(cfg, p):
+        sub = p[key]
+        n = _n_stack(sub)
+        for norm_path, suffix, consumers in sites:
+            names = [f"{prefix}{i:03d}.{suffix}" for i in range(n)]
+            if any(nm not in taps.stats for nm in names):
+                continue
+            r1, r2, s, s_tilde = _stacked_factors(taps, names, a_bits, rms)
+            _fold_norm(_get(sub, norm_path), r1, r2, s, rms)
+            for w_path, b_key in consumers:
+                _fold_consumer(sub, w_path, b_key, r1, s * r2,
+                               add_bias=not rms)
+            if not fold_only:
+                _insert_scale(sub, norm_path, "a_scale", s_tilde)
+        if not fold_only:
+            for mid_path, suffix in _MID_SITES:
+                names = [f"{prefix}{i:03d}.{suffix}" for i in range(n)]
+                if _get(sub, mid_path) is None:
+                    continue
+                if any(nm not in taps.stats for nm in names):
+                    continue
+                _insert_scale(sub, mid_path, "wo_a_scale",
+                              _absmax_scale(taps, names, a_bits))
+
+    # zamba2: the single *shared* attention+MLP block (stats of all of its
+    # applications merged during calibration — one weight set, Eq. 15 spirit).
+    if cfg.family == "hybrid" and "shared" in p:
+        _fold_group_unstacked(p["shared"], "shared",
+                              [_ATTN_SITE, _MLP_SITE], taps, a_bits, rms,
+                              fold_only)
+
+    # Final norm -> head consumer (single, unstacked site).
+    fn_site = "final_norm"
+    head_key = None
+    if cfg.family in ("vit", "vit_moe"):
+        head_key = "head"
+    elif not cfg.tie_embeddings and "lm_head" in p:
+        head_key = "lm_head"
+    if fn_site in taps.stats and head_key is not None:
+        r1, r2, s, s_tilde = _stacked_factors(taps, [fn_site], a_bits, rms)
+        _fold_norm(p["final_norm"], r1[0], r2[0], s[0], rms)
+        w = p[head_key]
+        corr = jnp.sum(w * (s[0] * r2[0])[:, None], axis=0)
+        p[head_key] = w * r1[0][:, None]
+        if cfg.family in ("vit", "vit_moe"):
+            p["head_b"] = p["head_b"] - corr
+        elif not rms:
+            p["lm_head_b"] = -corr  # added to logits by logits_from_hidden
+        if not fold_only:
+            p["final_norm"]["a_scale"] = s_tilde[0]
+
+    # Encoder-output norm feeds every decoder layer's cross K/V (enc-dec).
+    if cfg.family == "encdec" and "enc_norm_out" in taps.stats:
+        r1, r2, s, s_tilde = _stacked_factors(
+            taps, ["enc_norm_out"], a_bits, rms
+        )
+        _fold_norm(p["enc_norm"], r1[0], r2[0], s[0], rms)
+        for wk, bk in ((("xattn", "wk"), "bk"), (("xattn", "wv"), "bv")):
+            _fold_consumer(p["dec_layers"], wk, bk,
+                           r1, s * r2, add_bias=not rms)
+        if not fold_only:
+            p["enc_norm"]["a_scale"] = s_tilde[0]
+
+    if not fold_only:
+        p = _quantize_weights(p, w_bits)
+    return p
+
+
+def quantized_config(cfg: ModelConfig) -> ModelConfig:
+    """The runtime config to pair with ``ptq_model`` output (W8A8 + Attn4)."""
+    import dataclasses
+
+    return cfg.replace(quant=dataclasses.replace(cfg.quant, enable=True))

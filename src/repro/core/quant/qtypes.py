@@ -1,0 +1,117 @@
+"""Quantization primitives: symmetric/asymmetric uniform quantizers (paper
+section 2.2, Eqs. 6-9) and the quantized-tensor container.
+
+All quantizers are pure jnp and differentiable-free (PTQ only, as in the
+paper). Integer matmuls use ``preferred_element_type=int32`` so XLA lowers
+them to the MXU int8 path on TPU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def qmax(bits: int) -> int:
+    return 2 ** (bits - 1) - 1
+
+
+def qmin(bits: int) -> int:
+    return -(2 ** (bits - 1))
+
+
+def int_dtype(bits: int):
+    return jnp.int8 if bits <= 8 else jnp.int16
+
+
+class QTensor(NamedTuple):
+    """A symmetric-quantized tensor: ``x ~= q * scale`` (Eq. 7)."""
+
+    q: jnp.ndarray  # int8/int16
+    scale: jnp.ndarray  # f32, scalar (per-tensor) or broadcastable (per-channel)
+
+    def dequant(self) -> jnp.ndarray:
+        return self.q.astype(jnp.float32) * self.scale
+
+
+class AsymParams(NamedTuple):
+    """Asymmetric quantization parameters (Eq. 6): per-channel (s, z)."""
+
+    scale: jnp.ndarray  # f32 [D]
+    zero: jnp.ndarray  # int32 [D]
+
+
+# ---------------------------------------------------------------------------
+# Symmetric (Eq. 7)
+# ---------------------------------------------------------------------------
+
+def sym_scale_from_absmax(absmax: jnp.ndarray, bits: int) -> jnp.ndarray:
+    return jnp.maximum(absmax, 1e-8) / qmax(bits)
+
+
+def quantize_sym(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    q = jnp.round(x / scale)
+    return jnp.clip(q, qmin(bits), qmax(bits)).astype(int_dtype(bits))
+
+
+def dequantize_sym(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_sym_calibrated(
+    x: jnp.ndarray, bits: int, axis: Optional[Sequence[int]] = None
+) -> QTensor:
+    """Calibrate absmax over ``axis`` (None = per-tensor) and quantize."""
+    absmax = jnp.max(jnp.abs(x)) if axis is None else jnp.max(
+        jnp.abs(x), axis=tuple(axis), keepdims=True
+    )
+    scale = sym_scale_from_absmax(absmax, bits)
+    return QTensor(quantize_sym(x, scale, bits), scale)
+
+
+# ---------------------------------------------------------------------------
+# Asymmetric (Eq. 6)
+# ---------------------------------------------------------------------------
+
+def asym_params_from_minmax(
+    xmin: jnp.ndarray, xmax: jnp.ndarray, bits: int
+) -> AsymParams:
+    # the representable range must include 0 (standard convention) — also
+    # keeps the zero-point finite for constant tensors far from zero
+    xmin = jnp.minimum(xmin, 0.0)
+    xmax = jnp.maximum(xmax, 0.0)
+    span = jnp.maximum(xmax - xmin, 1e-8)
+    scale = span / (2**bits - 1)
+    zero = jnp.round(-xmin / scale) + qmin(bits)
+    return AsymParams(scale.astype(jnp.float32), zero.astype(jnp.int32))
+
+
+def quantize_asym(x: jnp.ndarray, p: AsymParams, bits: int) -> jnp.ndarray:
+    q = jnp.round(x / p.scale) + p.zero
+    return jnp.clip(q, qmin(bits), qmax(bits)).astype(jnp.int32)
+
+
+def dequantize_asym(q: jnp.ndarray, p: AsymParams) -> jnp.ndarray:
+    return (q - p.zero).astype(jnp.float32) * p.scale
+
+
+# ---------------------------------------------------------------------------
+# Integer matmul helper (MXU int8 path on TPU)
+# ---------------------------------------------------------------------------
+
+def int_matmul(a_q: jnp.ndarray, b_q: jnp.ndarray) -> jnp.ndarray:
+    """int8 x int8 -> int32 accumulate; lowers to the TPU MXU int8 datapath."""
+    return jnp.matmul(
+        a_q.astype(jnp.int8), b_q.astype(jnp.int8),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def np_sqnr_db(x_ref: np.ndarray, x_hat: np.ndarray) -> float:
+    """Signal-to-quantization-noise ratio in dB (benchmark metric)."""
+    num = float(np.sum(x_ref.astype(np.float64) ** 2))
+    den = float(np.sum((x_ref.astype(np.float64) - x_hat.astype(np.float64)) ** 2))
+    if den == 0:
+        return float("inf")
+    return 10.0 * np.log10(num / den)

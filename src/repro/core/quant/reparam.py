@@ -1,0 +1,136 @@
+"""Post-norm scale reparameterization (CoQMoE section 3.1, Eqs. 10-16).
+
+Converts *per-channel asymmetric* quantization of post-LayerNorm activations
+into *per-layer symmetric* quantization by folding transformation factors into
+the norm's (gamma, beta) and inversely into every consumer linear layer's
+(W, b) -- QKV projections, MLP fc1, and in MoE blocks every expert's fc1 plus
+the gating network (Eqs. 15-16).
+
+Math note (recorded in DESIGN.md): the paper's Eq. 10 prints ``r1 = s_tilde/s``
+but the equivalence in Eq. 13 together with integer-grid alignment requires
+``r1 = s / s_tilde`` (the RepQ-ViT convention). With that choice:
+
+    X'_d = (X_d + s_d r2_d) / r1_d            (Eq. 12)
+    round(X'_d / s_tilde) = round(X_d / s_d) + z_d - 2^{b-1}
+
+i.e. per-layer symmetric quantization of X' reproduces the per-channel
+asymmetric integer grid of X exactly, and
+
+    X' (diag(r1) W) + (b - W^T (s . r2)) == X W + b   (Eq. 13, any r1)
+
+RMSNorm adaptation (no additive beta): we calibrate per-channel *symmetric*
+scales (z == 2^{b-1}, r2 == 0) and fold only r1 -- see DESIGN.md section 4.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.quant.qtypes import qmax
+
+
+class ReparamFactors(NamedTuple):
+    r1: jnp.ndarray  # f32 [D]   = s / s_tilde
+    r2: jnp.ndarray  # f32 [D]   = z - 2^{b-1}  (zeros for symmetric/RMSNorm)
+    s: jnp.ndarray  # f32 [D]    per-channel scales (calibrated)
+    s_tilde: jnp.ndarray  # f32 scalar  unified per-layer scale
+
+
+# ---------------------------------------------------------------------------
+# Calibration of the *complex* quantizer (offline only; never runs on device)
+# ---------------------------------------------------------------------------
+
+def calibrate_per_channel_asym(x: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Unsigned-convention per-channel asymmetric params from samples.
+
+    x: [..., D] activation samples. Returns (s[D], z[D]) with
+    X_qu = round(X/s) + z in [0, 2^b - 1].
+    """
+    d = x.shape[-1]
+    flat = x.reshape(-1, d)
+    xmin = jnp.min(flat, axis=0)
+    xmax = jnp.max(flat, axis=0)
+    span = jnp.maximum(xmax - xmin, 1e-8)
+    s = span / (2**bits - 1)
+    # z is deliberately NOT clipped into [0, 2^b-1]: channels whose range does
+    # not straddle zero need an out-of-range zero-point for an exact grid; it
+    # is folded away by the reparameterization and never materialized on device.
+    z = jnp.round(-xmin / s)
+    return s.astype(jnp.float32), z.astype(jnp.float32)
+
+
+def calibrate_per_channel_sym(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-channel symmetric scales (RMSNorm path: no zero-point home)."""
+    d = x.shape[-1]
+    flat = x.reshape(-1, d)
+    absmax = jnp.maximum(jnp.max(jnp.abs(flat), axis=0), 1e-8)
+    return (absmax / qmax(bits)).astype(jnp.float32)
+
+
+def factors_from_minmax(
+    xmin: jnp.ndarray, xmax: jnp.ndarray, bits: int, symmetric: bool
+) -> ReparamFactors:
+    """Factors straight from calibrated per-channel min/max (TapCollector).
+
+    symmetric=True is the RMSNorm path (no zero-point home): per-channel
+    symmetric scales, r2 == 0.
+    """
+    if symmetric:
+        absmax = jnp.maximum(jnp.maximum(jnp.abs(xmin), jnp.abs(xmax)), 1e-8)
+        s = absmax / qmax(bits)
+        return reparam_factors(s.astype(jnp.float32), None, bits)
+    span = jnp.maximum(xmax - xmin, 1e-8)
+    s = span / (2**bits - 1)
+    z = jnp.round(-xmin / s)
+    return reparam_factors(s.astype(jnp.float32), z.astype(jnp.float32), bits)
+
+
+def reparam_factors(
+    s: jnp.ndarray, z: Optional[jnp.ndarray], bits: int
+) -> ReparamFactors:
+    """Eq. 10 (corrected): r1 = s/s_tilde, r2 = z - 2^{b-1}; s_tilde = E[s]."""
+    s_tilde = jnp.mean(s)
+    r1 = s / s_tilde
+    if z is None:
+        r2 = jnp.zeros_like(s)
+    else:
+        r2 = z - 2.0 ** (bits - 1)
+    return ReparamFactors(r1=r1, r2=r2, s=s, s_tilde=s_tilde)
+
+
+# ---------------------------------------------------------------------------
+# Folding (Eqs. 11, 14, 15, 16)
+# ---------------------------------------------------------------------------
+
+def apply_to_layernorm(
+    gamma: jnp.ndarray, beta: jnp.ndarray, f: ReparamFactors
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. 11: beta' = (beta + s.r2)/r1, gamma' = gamma/r1."""
+    beta_p = (beta + f.s * f.r2) / f.r1
+    gamma_p = gamma / f.r1
+    return gamma_p, beta_p
+
+
+def apply_to_rmsnorm(gamma: jnp.ndarray, f: ReparamFactors) -> jnp.ndarray:
+    """RMSNorm variant: r2 == 0 by construction, fold r1 only."""
+    return gamma / f.r1
+
+
+def apply_to_consumer(
+    w: jnp.ndarray, b: Optional[jnp.ndarray], f: ReparamFactors
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. 14 (and 15/16 for experts & gate): W' = diag(r1) W, b' = b - W^T(s.r2).
+
+    w: [D, out] consumer weight whose *input* is the reparameterized activation.
+    """
+    w_p = w * f.r1[:, None]
+    shift = f.s * f.r2
+    corr = jnp.einsum("do,d->o", w, shift)
+    b_p = (b if b is not None else 0.0) - corr
+    return w_p, b_p
+
+
+def transform_activation(x: jnp.ndarray, f: ReparamFactors) -> jnp.ndarray:
+    """Eq. 12 (reference only -- at runtime the fold into gamma/beta does this)."""
+    return (x + f.s * f.r2) / f.r1

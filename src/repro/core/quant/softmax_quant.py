@@ -1,0 +1,79 @@
+"""Post-softmax log-sqrt2 quantization (CoQMoE section 3.2, Eqs. 17-21).
+
+The quantizer acts on the softmax *numerator* f(x) = exp(x - max) in (0, 1],
+so the scale is s = 1 (paper section 3.2). Dequantization is reparameterized
+into an exponent shift plus a two-value parity LUT:
+
+    A_q  = clip(round(-2 log2 A), 0, 2^b - 1)            (Eq. 18)
+    A_hat = 2^{-ceil(A_q/2)} * (1 + odd(A_q) (sqrt2 - 1))  (Eq. 19)
+
+TPU adaptation (DESIGN.md section 2): the FPGA executes Eq. 21 as
+``(V_q >> floor(A_q/2)) * s'``; the TPU MXU has no shifter datapath, so we
+materialize A_hat directly -- its values are powers of two (exact in bf16,
+zero mantissa error) times the parity constant. The exact two-matmul parity
+decomposition used for validation:
+
+    A_hat @ V = (A_even @ V) + sqrt2 * (A_odd @ V)
+
+where A_even/A_odd hold exact powers of two. (Eq. 21 prints floor; ceil is
+required for odd codes to land on 2^{-(2k+1)/2} -- typo noted in DESIGN.md.)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+SQRT2 = 1.4142135623730951
+
+
+def logsqrt2_quantize(a: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """Eq. 18: A_q = clip(round(-2 log2 A), 0, 2^b - 1); returns int8 codes."""
+    a = jnp.maximum(a, 2.0 ** (-(2.0**bits)))  # guard log(0)
+    q = jnp.round(-2.0 * jnp.log2(a))
+    return jnp.clip(q, 0, 2**bits - 1).astype(jnp.int8)
+
+
+def logsqrt2_dequantize(a_q: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """Eq. 19: exponent shift + parity LUT (exact)."""
+    a_q = a_q.astype(jnp.int32)
+    shift = (a_q + 1) // 2  # ceil(A_q / 2)
+    parity = (a_q & 1).astype(dtype)  # 1 at odd codes
+    base = jnp.exp2(-shift.astype(dtype))
+    return base * (1.0 + parity * (SQRT2 - 1.0))
+
+
+def logsqrt2_scale_factor(a_q: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 20: s' = 1 + odd(A_q)(sqrt2 - 1)."""
+    return 1.0 + (a_q.astype(jnp.int32) & 1).astype(jnp.float32) * (SQRT2 - 1.0)
+
+
+def parity_decomposition(a_q: jnp.ndarray, dtype=jnp.float32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Split codes into (even, odd) exact power-of-two planes (Eq. 21 analogue).
+
+    Returns (a_even, a_odd) with a_even + sqrt2 * a_odd == A_hat, where both
+    planes contain only exact powers of two (or zero).
+    """
+    a_q = a_q.astype(jnp.int32)
+    shift = (a_q + 1) // 2
+    base = jnp.exp2(-shift.astype(dtype))
+    odd = (a_q & 1) == 1
+    a_even = jnp.where(odd, 0.0, base).astype(dtype)
+    a_odd = jnp.where(odd, base, 0.0).astype(dtype)
+    return a_even, a_odd
+
+
+def quantized_softmax_numerator(
+    scores: jnp.ndarray, bits: int = 4
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """3-pass fused softmax (paper section 4.3), numerator-quantized.
+
+    Pass 1: row max. Pass 2: numerator f(x) and denominator l(x) (exact).
+    Returns (A_q int codes of the numerator, l row-denominator). The caller
+    applies Pass 3: out = (A_hat @ V) * recip(l).
+    """
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    f = jnp.exp(scores - m)
+    l = jnp.sum(f, axis=-1, keepdims=True)
+    a_q = logsqrt2_quantize(f, bits=bits)
+    return a_q, l

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticPipeline, make_pipeline
+
+__all__ = ["SyntheticPipeline", "make_pipeline"]

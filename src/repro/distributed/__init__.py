@@ -1,0 +1,10 @@
+from repro.distributed.sharding_rules import (
+    batch_axes,
+    cache_specs,
+    input_shardings,
+    opt_state_specs,
+    param_specs,
+    spec_for_axes,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,219 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style GSPMD).
+
+Weight rules (single- and multi-pod; the pod axis carries pure DP):
+
+  vocab / qkv / kv / mlp / expert / ssm_inner -> 'model'   (TP / EP)
+  embed                                       -> 'data'    (FSDP)
+  layers / None                               -> replicated
+
+A PartitionSpec may not reuse a mesh axis, so rules apply left-to-right and
+later duplicates degrade to replicated — e.g. MoE expert tensors
+[layers, expert, embed, mlp] become P(None, 'model', 'data', None): EP wins
+the 'model' axis, expert-internal mlp stays unsharded (re-sharded during the
+perf pass if profitable).
+
+Activations: batch -> ('pod', 'data'); long-context decode (global_batch=1)
+shards the KV/state *sequence* dim over 'data' instead (context parallelism).
+Optimizer state inherits the param spec when shapes match (ZeRO), else is
+replicated (Adafactor's tiny factored vectors).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+DEFAULT_RULES: Tuple[Tuple[str, Optional[str]], ...] = (
+    ("vocab", "model"),
+    ("embed", "data"),
+    ("qkv", "model"),
+    ("kv", "model"),
+    ("heads", "model"),
+    ("mlp", "model"),
+    ("expert", "model"),
+    ("ssm_inner", "model"),
+    ("layers", None),
+)
+
+# Serving (decode) rules: weight-stationary TP — no FSDP on the embed dim.
+# Decode re-gathers FSDP-sharded params every step (pure overhead once the
+# model fits TP-sharded in HBM); EXPERIMENTS.md section Perf, iteration 3.
+SERVING_RULES: Tuple[Tuple[str, Optional[str]], ...] = tuple(
+    (k, None if k == "embed" else v) for k, v in DEFAULT_RULES
+)
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...], rules=DEFAULT_RULES,
+                  shape: Optional[Tuple[int, ...]] = None,
+                  mesh: Optional[Mesh] = None) -> P:
+    """Resolve one tensor's logical axes, deduping mesh axes left-to-right.
+
+    When (shape, mesh) are given, axes whose dim is not divisible by the
+    mesh-axis size degrade to replicated — jit in_shardings requires exact
+    divisibility (e.g. seamless's vocab 256206 is not 16-divisible)."""
+    table = dict(rules)
+    used = set()
+    out = []
+    for i, ax in enumerate(axes):
+        mesh_ax = table.get(ax) if ax is not None else None
+        if mesh_ax is not None and shape is not None and mesh is not None:
+            if shape[i] % mesh.shape.get(mesh_ax, 1) != 0:
+                mesh_ax = None
+        if mesh_ax is None or mesh_ax in used:
+            out.append(None)
+        else:
+            used.add(mesh_ax)
+            out.append(mesh_ax)
+    return P(*out)
+
+
+def param_specs(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                rules=DEFAULT_RULES):
+    """PartitionSpec tree matching the model's param tree."""
+    from repro import models
+
+    axes_tree = models.model_param_axes(cfg)
+    if mesh is None:
+        return jax.tree.map(
+            lambda ax: spec_for_axes(ax, rules),
+            axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+    shapes_tree = models.model_param_shapes(cfg)
+    return jax.tree.map(
+        lambda ax, sh: spec_for_axes(ax, rules, tuple(sh.shape), mesh),
+        axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        ),
+    )
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return mesh.shape[ax]
+
+
+def _fit(entries, shape, mesh: Mesh) -> P:
+    """Drop spec entries whose dim is not divisible (or whose mesh axis is
+    already used)."""
+    used = set()
+    out = []
+    for dim, ax in zip(shape, entries):
+        axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        if (ax is None or any(a in used for a in axes)
+                or dim % _axis_size(mesh, ax) != 0):
+            out.append(None)
+        else:
+            used.update(axes)
+            out.append(ax)
+    return P(*out)
+
+
+def _cache_leaf_spec(key: str, shape, mesh: Mesh, batch, seq_ax):
+    """Spec for one KV-cache / SSM-state leaf by key name and rank.
+
+    GQA archs with fewer KV heads than the model axis shard the cache
+    *sequence* over 'model' (context-parallel decode). Perf note
+    (EXPERIMENTS.md section Perf, iteration 1): the earlier head_dim
+    fallback made QK^T contract over a sharded dim -> a psum of the full
+    [B, H, 1, S] score tensor every layer; sequence sharding leaves QK/PV
+    local and reduces only the per-row softmax stats and the [B, H, 1, hd]
+    output (~1000x fewer collective bytes on gemma2-2b decode_32k)."""
+    ndim = len(shape)
+    if key in ("k", "v"):  # [L, B, S, KVH, hd]
+        if shape[3] % _axis_size(mesh, "model") == 0:
+            ent = (None, batch, seq_ax, "model", None)
+        elif seq_ax is None:
+            ent = (None, batch, "model", None, None)  # context parallel
+        else:
+            ent = (None, batch, seq_ax, None, "model")
+        return _fit(ent, shape, mesh)
+    if key in ("k_scale", "v_scale"):  # [L, B, S, KVH]
+        if shape[3] % _axis_size(mesh, "model") == 0:
+            ent = (None, batch, seq_ax, "model")
+        elif seq_ax is None:
+            ent = (None, batch, "model", None)
+        else:
+            ent = (None, batch, seq_ax, None)
+        return _fit(ent, shape, mesh)
+    if key == "h":  # mamba1 [L,B,di,N] | mamba2 [L,B,H,P,N]
+        return _fit((None, batch, "model") + (None,) * (ndim - 3), shape, mesh)
+    if key == "conv":  # [L, B, W-1, C]
+        return _fit((None, batch, None, "model"), shape, mesh)
+    return P()
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                cache_tree):
+    """Spec tree for a decode cache (same structure as cache_shapes)."""
+    ba = batch_axes(mesh)
+    if shape.global_batch == 1:
+        batch, seq_ax = None, "data"  # context parallelism
+    else:
+        batch, seq_ax = (ba if len(ba) > 1 else ba[0]), None
+
+    def walk(tree):
+        return {
+            k: walk(v) if isinstance(v, dict)
+            else _cache_leaf_spec(k, tuple(v.shape), mesh, batch, seq_ax)
+            for k, v in tree.items()
+        }
+
+    return walk(cache_tree)
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    specs_tree):
+    """Spec tree matching ``models.input_specs`` output."""
+    ba = batch_axes(mesh)
+    batch = ba if len(ba) > 1 else ba[0]
+    if shape.global_batch == 1:
+        batch = None
+    out = {}
+    for name, spec in specs_tree.items():
+        if name == "cache":
+            out["cache"] = cache_specs(cfg, shape, mesh, spec)
+        elif name == "index":
+            out["index"] = P()
+        else:
+            sh = tuple(spec.shape)
+            out[name] = (
+                _fit((batch,) + (None,) * (len(sh) - 1), sh, mesh)
+                if sh else P()
+            )
+    return out
+
+
+def opt_state_specs(opt_state_shapes, params_specs, params_shapes):
+    """Optimizer-state specs: inherit the param spec when shapes match
+    (AdamW m/v, Adafactor unfactored v), else replicate (factored vr/vc)."""
+    flat_ps, _ = jax.tree.flatten(params_specs)
+    flat_sh = [tuple(s.shape) for s in jax.tree.leaves(params_shapes)]
+    by_shape = {}
+    for sh, sp in zip(flat_sh, flat_ps):
+        by_shape.setdefault(sh, sp)
+
+    def one(leaf):
+        return by_shape.get(tuple(leaf.shape), P())
+
+    return jax.tree.map(one, opt_state_shapes)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,183 @@
+"""Pallas TPU unified sparse/dense grouped matmul — CoQMoE section 4.2(b).
+
+The paper deploys N_L compute units behind one round-robin router that
+streams token tiles to CUs while each expert's weights are fetched from
+off-chip exactly once per layer (temporal locality, Fig. 5(c)); a
+runtime-reconfigurable selection policy switches the same hardware between
+sparse (MoE expert) and dense (MLP) modes.
+
+TPU-native realization: tokens arrive pre-sorted by expert id (the sort is
+the router); the kernel walks *work items* = (group, m-tile) pairs built from
+``group_sizes`` and streamed in via scalar prefetch. For each work item the
+group's weight tile stays HBM-resident exactly as long as its token rows
+need it — each expert's weights cross HBM->VMEM once per layer regardless of
+token parallelism (the paper's O(1) weight-traffic property). Dense mode is
+the same kernel with num_groups == 1.
+
+Work-item construction (the "router table"): group g covers sorted rows
+[start_g, end_g); it touches m-tiles floor(start/bm) .. floor((end-1)/bm).
+Total work items <= nm + G (each group adds at most one partial tile), a
+static bound, so the grid is static while the routing stays fully dynamic.
+
+Grid is (n_tiles_n, n_work): n outer so all visits to one output tile are
+consecutive; a VMEM accumulator carries partial sums across the (<=2) groups
+sharing a tile and flushes on the last visit. Optional ``w_scale`` [G, N]
+applies per-expert per-channel dequant (int8 expert weights) to each
+partial before accumulation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _route_metadata(group_sizes: jnp.ndarray, block_m: int, n_work: int):
+    """Work-item table of length ``n_work``: (g_ids, m_ids, row_start,
+    row_end) per item. Padding items ride on the final tile with an *empty*
+    row range so they contribute nothing and trigger no extra tile visits."""
+    sizes = group_sizes.astype(jnp.int32)
+    ends = jnp.cumsum(sizes)
+    starts = ends - sizes
+    n_m = jnp.maximum((ends[-1] + block_m - 1) // block_m, 1)
+    first = starts // block_m
+    last = jnp.where(sizes > 0, (ends - 1) // block_m, first)
+    tiles = jnp.where(sizes > 0, last - first + 1, 0)
+    off = jnp.cumsum(tiles)  # inclusive prefix
+    w = jnp.arange(n_work, dtype=jnp.int32)
+    active = w < off[-1]
+    g = jnp.searchsorted(off, w, side="right").astype(jnp.int32)
+    g = jnp.clip(g, 0, sizes.shape[0] - 1)
+    off_excl = off - tiles  # exclusive prefix per group
+    m = jnp.clip(first[g] + (w - off_excl[g]), 0, n_m - 1)
+    row_start = jnp.where(active, starts[g], 0)
+    row_end = jnp.where(active, ends[g], 0)
+    return g, m.astype(jnp.int32), row_start, row_end
+
+
+def _gmm_kernel(
+    g_ids,  # [n_work] scalar prefetch
+    m_ids,  # [n_work]
+    row_start,  # [n_work] first sorted row of this work item's group
+    row_end,  # [n_work] one-past-last row (start == end for padding)
+    x_ref,  # [bm, Din]
+    w_ref,  # [1, Din, bn]
+    *rest,  # (w_scale_ref?, o_ref, acc)
+    block_m: int,
+    n_work: int,
+    has_scale: bool,
+    int8_full: bool,
+):
+    if has_scale:
+        ws_ref, o_ref, acc = rest
+    else:
+        ws_ref = None
+        o_ref, acc = rest
+    w = pl.program_id(1)
+    g = g_ids[w]
+    m = m_ids[w]
+
+    prev = jnp.where(w > 0, m_ids[jnp.maximum(w - 1, 0)], -1)
+    nxt = jnp.where(w < n_work - 1, m_ids[jnp.minimum(w + 1, n_work - 1)], -2)
+
+    @pl.when(prev != m)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    rows = m * block_m + jax.lax.broadcasted_iota(
+        jnp.int32, (block_m, 1), 0
+    )
+    in_group = (rows >= row_start[w]) & (rows < row_end[w])  # [bm, 1]
+
+    if int8_full:
+        xi = jnp.where(in_group, x_ref[...], 0).astype(jnp.int8)
+        part = jax.lax.dot(
+            xi, w_ref[0], preferred_element_type=jnp.int32
+        ).astype(jnp.float32)
+    else:
+        xm = jnp.where(in_group, x_ref[...].astype(jnp.float32), 0.0)
+        part = jax.lax.dot(
+            xm, w_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    if has_scale:
+        part = part * ws_ref[0][None, :]
+    acc[...] += part
+
+    @pl.when(nxt != m)
+    def _flush():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+def grouped_matmul(
+    x: jnp.ndarray,  # [T, Din] rows sorted by group
+    w: jnp.ndarray,  # [G, Din, Dout]
+    group_sizes: jnp.ndarray,  # [G] int32, sum == T
+    *,
+    w_scale: Optional[jnp.ndarray] = None,  # [G, Dout] per-expert dequant
+    out_dtype=None,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    T, Din = x.shape
+    G, _, Dout = w.shape
+    block_m = min(block_m, max(T, 1))
+    block_n = min(block_n, Dout)
+    n_m = pl.cdiv(T, block_m)
+    n_n = pl.cdiv(Dout, block_n)
+    t_pad, n_pad = n_m * block_m, n_n * block_n
+    n_work = n_m + G
+
+    xp = jnp.pad(x, ((0, t_pad - T), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, n_pad - Dout)))
+
+    g_ids, m_ids, row_start, row_end = _route_metadata(
+        group_sizes, block_m, n_work
+    )
+
+    int8_full = x.dtype == jnp.int8 and w.dtype == jnp.int8
+    if out_dtype is None:
+        out_dtype = jnp.float32 if int8_full else x.dtype
+    has_scale = w_scale is not None
+
+    in_specs = [
+        pl.BlockSpec((block_m, Din), lambda n, wk, g_, m_, s_, e_: (m_[wk], 0)),
+        pl.BlockSpec((1, Din, block_n), lambda n, wk, g_, m_, s_, e_: (g_[wk], 0, n)),
+    ]
+    args = [xp, wp]
+    if has_scale:
+        wsp = jnp.pad(w_scale.astype(jnp.float32), ((0, 0), (0, n_pad - Dout)))
+        in_specs.append(
+            pl.BlockSpec((1, block_n), lambda n, wk, g_, m_, s_, e_: (g_[wk], n))
+        )
+        args.append(wsp)
+
+    kernel = functools.partial(
+        _gmm_kernel,
+        block_m=block_m,
+        n_work=n_work,
+        has_scale=has_scale,
+        int8_full=int8_full,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(n_n, n_work),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec(
+                (block_m, block_n), lambda n, wk, g_, m_, s_, e_: (m_[wk], n)
+            ),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((t_pad, n_pad), out_dtype),
+        interpret=interpret,
+    )(g_ids, m_ids, row_start, row_end, *args)
+
+    return out[:T, :Dout]

@@ -1,0 +1,163 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+Backend selection:
+  * TPU backend          -> pl.pallas_call kernels (VMEM-tiled)
+  * CPU / tests          -> pure-jnp reference (ref.py)
+  * REPRO_PALLAS=interpret -> pallas kernels in interpret mode (correctness
+                              validation of the kernel bodies on CPU)
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env in ("interpret", "pallas", "ref"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset=0,
+    quant_bits: int = 0,
+    logit_softcap: float = 0.0,
+    local_window: int = 0,
+    k_scale: Optional[jnp.ndarray] = None,
+    v_scale: Optional[jnp.ndarray] = None,
+    kv_valid_len: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Streaming attention; GQA-native (k/v carry KVH heads)."""
+    mode = _mode()
+    if mode in ("pallas", "interpret"):
+        from repro.kernels.quant_attention import streaming_attention
+
+        return streaming_attention(
+            q, k, v,
+            causal=causal, q_offset=q_offset, quant_bits=quant_bits,
+            logit_softcap=logit_softcap, local_window=local_window,
+            k_scale=k_scale, v_scale=v_scale, kv_valid_len=kv_valid_len,
+            interpret=(mode == "interpret"),
+        )
+    return _ref.flash_attention_ref(
+        q, k, v,
+        causal=causal, q_offset=q_offset, quant_bits=quant_bits,
+        logit_softcap=logit_softcap, local_window=local_window,
+        k_scale=k_scale, v_scale=v_scale, kv_valid_len=kv_valid_len,
+    )
+
+
+def grouped_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    group_sizes: jnp.ndarray,
+) -> jnp.ndarray:
+    """Unified sparse/dense linear: y[t] = x[t] @ w[group(t)]."""
+    mode = _mode()
+    if mode in ("pallas", "interpret"):
+        from repro.kernels.expert_linear import grouped_matmul as gmm
+
+        return gmm(x, w, group_sizes, interpret=(mode == "interpret"))
+    # ragged_dot is the fast XLA path on CPU/GPU (grouped_matmul_ref is the
+    # oracle used by tests; ragged_dot matches it exactly).
+    return jax.lax.ragged_dot(x, w, group_sizes.astype(jnp.int32))
+
+
+def _row_groups(group_sizes: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    ends = jnp.cumsum(group_sizes)
+    return jnp.searchsorted(ends, jnp.arange(n_rows), side="right")
+
+
+def grouped_mlp(
+    x: jnp.ndarray,
+    wi: jnp.ndarray,
+    wo: jnp.ndarray,
+    group_sizes: jnp.ndarray,
+    *,
+    act: str = "silu",
+    glu: bool = True,
+    bi: Optional[jnp.ndarray] = None,  # [G, hid] per-expert fc1 bias
+    bo: Optional[jnp.ndarray] = None,  # [G, out] per-expert fc2 bias
+    taps=None,  # PTQ calibration collector (records the fc2 input site)
+    mid_a_scale: Optional[jnp.ndarray] = None,  # PTQ runtime fc2-input scale
+    mid_a_bits: int = 8,
+) -> jnp.ndarray:
+    from repro.core.quant.calibrate import maybe_record
+    from repro.models.layers import act_fn
+
+    seg = None
+    if bi is not None or bo is not None:
+        seg = _row_groups(group_sizes, x.shape[0])
+    h = grouped_matmul(x, wi, group_sizes)
+    if bi is not None:
+        h = h + bi[seg]
+    if glu:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = act_fn(act)(g) * u
+    else:
+        h = act_fn(act)(h)
+    maybe_record(taps, "moe_mid", h)
+    if mid_a_scale is not None:
+        from repro.core.quant.linear_quant import fake_quant_activation
+
+        h = fake_quant_activation(
+            h.astype(jnp.float32), mid_a_scale, bits=mid_a_bits
+        ).astype(h.dtype)
+    y = grouped_matmul(h, wo, group_sizes)
+    if bo is not None:
+        y = y + bo[seg]
+    return y
+
+
+def selective_scan(x, dt, b, c, a, d):
+    """Mamba-1 selective scan: VMEM-resident state on TPU (O(S*d) HBM).
+
+    Returns (y [B,S,di], h_last [B,di,N]). The ref path exists for the
+    kernel tests; the model's CPU lowering keeps the chunked associative
+    scan in models/ssm.py (bounded memory without a kernel).
+    """
+    mode = _mode()
+    if mode in ("pallas", "interpret"):
+        from repro.kernels.selective_scan import selective_scan as ss
+
+        return ss(x, dt, b, c, a, d, interpret=(mode == "interpret"))
+    y = _ref.selective_scan_ref(x, dt, b, c, a, d)
+    # ref h_last for parity (small shapes only — test/debug path)
+    decay = jnp.exp(dt[..., None].astype(jnp.float32) * a)
+    u = (dt * x)[..., None].astype(jnp.float32) * b[:, :, None, :].astype(jnp.float32)
+    import jax as _jax
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = _jax.lax.associative_scan(op, (decay, u), axis=1)
+    return y, h[:, -1]
+
+
+def int8_matmul(
+    x_q: jnp.ndarray,
+    w_q: jnp.ndarray,
+    x_scale: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    mode = _mode()
+    if mode in ("pallas", "interpret"):
+        from repro.kernels.int8_matmul import int8_matmul as imm
+
+        return imm(x_q, w_q, x_scale, w_scale, bias,
+                   interpret=(mode == "interpret"))
+    return _ref.int8_matmul_ref(x_q, w_q, x_scale, w_scale, bias)

@@ -1,0 +1,178 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the ground truth the kernel tests ``assert_allclose`` against, and
+the CPU execution path for tests/benchmarks/dry-run lowering.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.softmax_quant import logsqrt2_dequantize
+
+LOG2E = 1.4426950408889634  # log2(e)
+
+
+# ---------------------------------------------------------------------------
+# Streaming (flash-style) attention oracle — mirrors kernels/quant_attention.py
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # [B, Sq, H, hd]
+    k: jnp.ndarray,  # [B, Sk, KVH, hd] (GQA native; KVH divides H)
+    v: jnp.ndarray,  # [B, Sk, KVH, hd]
+    *,
+    causal: bool = True,
+    q_offset=0,  # absolute position of q[0] (decode: cache index; traceable)
+    quant_bits: int = 0,
+    logit_softcap: float = 0.0,
+    local_window: int = 0,
+    k_scale: Optional[jnp.ndarray] = None,  # [B, Sk, KVH] int8-KV dequant scales
+    v_scale: Optional[jnp.ndarray] = None,
+    kv_valid_len: Optional[jnp.ndarray] = None,  # [B] cache fill level
+) -> jnp.ndarray:
+    """The single attention oracle: GQA, local windows, softcap, log-sqrt2
+    quantized softmax numerator (paper sections 3.2/4.3), int8 KV dequant."""
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, hd)
+    # Never materialize an f32 copy of the K/V cache: the QK^T einsum takes
+    # the cache dtype directly and accumulates in f32 (what the Pallas
+    # kernel does per-tile in VMEM). An explicit astype here doubles the
+    # per-layer cache HBM traffic at the XLA level (EXPERIMENTS.md
+    # section Perf, iteration 2).
+    if k_scale is not None:
+        # int8 cache: fold the per-position dequant scale into the scores
+        # (cheaper than scaling K: [B,S,KVH] vs [B,S,KVH,hd])
+        scores = jnp.einsum(
+            "bqkgh,bskh->bkgqs", qg, k,
+            preferred_element_type=jnp.float32,
+        ) * k_scale.transpose(0, 2, 1)[:, :, None, None, :] / math.sqrt(hd)
+    else:
+        scores = jnp.einsum(
+            "bqkgh,bskh->bkgqs", qg, k,
+            preferred_element_type=jnp.float32,
+        ) / math.sqrt(hd)
+    if logit_softcap > 0:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    # q_offset: scalar, or [B] (continuous batching: per-slot positions)
+    off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B,))
+    qpos = off[:, None] + jnp.arange(Sq)  # [B, Sq]
+    kpos = jnp.arange(Sk)
+    ok = jnp.ones((B, Sq, Sk), bool)
+    if causal:
+        ok &= kpos[None, None, :] <= qpos[:, :, None]
+    if local_window > 0:
+        ok &= qpos[:, :, None] - kpos[None, None, :] < local_window
+    mask = ok[:, None, None]  # [B,1,1,Sq,Sk]
+    if kv_valid_len is not None:
+        valid = kpos[None, :] < kv_valid_len[:, None]  # [B, Sk]
+        mask = mask & valid[:, None, None, None, :]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    m = jnp.maximum(jnp.max(scores, axis=-1, keepdims=True), -1e30)
+    f = jnp.exp(scores - m)
+    l = jnp.sum(f, axis=-1, keepdims=True)
+    if quant_bits > 0:
+        # Eq. 18 in affine-code form: -2 log2(exp(s - m)) == -2 log2(e) (s - m)
+        # (what the kernel computes: no log needed, one fma per logit).
+        # Structural (-inf) mask positions are exactly zero — the FPGA PEs
+        # simply never stream those K blocks; the clip ceiling only applies
+        # to *in-range* small probabilities (paper section 3.2 semantics).
+        codes = jnp.clip(
+            jnp.round(-2.0 * LOG2E * (scores - m)), 0, 2**quant_bits - 1
+        )
+        f = jnp.where(mask, logsqrt2_dequantize(codes.astype(jnp.int32)), 0.0)
+    if v_scale is not None:
+        # fold the V dequant scale into the probabilities (f: [B,KVH,G,Sq,Sk])
+        f = f * v_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    out = jnp.einsum(
+        "bkgqs,bskh->bqkgh", f.astype(v.dtype) if v.dtype != jnp.int8 else f,
+        v if v.dtype != jnp.int8 else v.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) / jnp.maximum(l.transpose(0, 3, 1, 2, 4), 1e-30)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Unified sparse/dense grouped matmul oracle — mirrors kernels/expert_linear.py
+# ---------------------------------------------------------------------------
+
+def grouped_matmul_ref(
+    x: jnp.ndarray,  # [T, Din] rows sorted by group
+    w: jnp.ndarray,  # [G, Din, Dout]
+    group_sizes: jnp.ndarray,  # [G] int32, sum == T
+) -> jnp.ndarray:
+    """Row t multiplies the weight of its group: y[t] = x[t] @ w[g(t)]."""
+    T = x.shape[0]
+    ends = jnp.cumsum(group_sizes)
+    seg = jnp.searchsorted(ends, jnp.arange(T), side="right")  # [T] group ids
+    w_per_row = w[seg]  # [T, Din, Dout] (oracle only; never materialized on TPU)
+    return jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
+                      w_per_row.astype(jnp.float32)).astype(x.dtype)
+
+
+def grouped_mlp_ref(
+    x: jnp.ndarray,  # [T, D] sorted by group
+    wi: jnp.ndarray,  # [G, D, Dh]  (Dh = 2*ff for GLU)
+    wo: jnp.ndarray,  # [G, ff, D]
+    group_sizes: jnp.ndarray,
+    act: str = "silu",
+    glu: bool = True,
+) -> jnp.ndarray:
+    from repro.models.layers import act_fn  # local import avoids cycle
+
+    h = grouped_matmul_ref(x, wi, group_sizes)
+    if glu:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = act_fn(act)(g) * u
+    else:
+        h = act_fn(act)(h)
+    return grouped_matmul_ref(h, wo, group_sizes)
+
+
+# ---------------------------------------------------------------------------
+# Selective-scan oracle — mirrors kernels/selective_scan.py
+# ---------------------------------------------------------------------------
+
+def selective_scan_ref(
+    x: jnp.ndarray,  # [B, S, di]
+    dt: jnp.ndarray,  # [B, S, di] (post-softplus)
+    b: jnp.ndarray,  # [B, S, N]
+    c: jnp.ndarray,  # [B, S, N]
+    a: jnp.ndarray,  # [di, N] negative decay rates
+    d: jnp.ndarray,  # [di]
+) -> jnp.ndarray:
+    """h_t = exp(dt_t a) h_{t-1} + (dt_t x_t) B_t;  y_t = h_t C_t + D x_t."""
+    decay = jnp.exp(dt[..., None].astype(jnp.float32) * a)  # [B,S,di,N]
+    u = (dt * x)[..., None].astype(jnp.float32) * b[:, :, None, :].astype(jnp.float32)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(op, (decay, u), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c.astype(jnp.float32))
+    return (y + x.astype(jnp.float32) * d).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# INT8 tiled matmul oracle — mirrors kernels/int8_matmul.py
+# ---------------------------------------------------------------------------
+
+def int8_matmul_ref(
+    x_q: jnp.ndarray,  # int8 [M, K]
+    w_q: jnp.ndarray,  # int8 [K, N]
+    x_scale: jnp.ndarray,  # f32 scalar
+    w_scale: jnp.ndarray,  # f32 [N] per-output-channel
+    bias: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    acc = jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    y = acc.astype(jnp.float32) * (x_scale * w_scale)
+    if bias is not None:
+        y = y + bias
+    return y

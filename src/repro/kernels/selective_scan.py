@@ -1,0 +1,125 @@
+"""Pallas TPU selective-scan kernel (Mamba-1) — the SSM hot-spot.
+
+The XLA-level chunked associative scan must materialize the discretized
+states ``[B, C, d_inner, N]`` at every fusion boundary (the dominant memory
+term of the falcon-mamba train/prefill cells — EXPERIMENTS.md §Roofline).
+This kernel is the TPU-native fix: the recurrent state ``h [bd, N]`` lives
+in VMEM scratch for the whole sequence; HBM sees only the streamed inputs
+``x/dt`` ([S, bd]) and ``B/C`` ([S, N]) plus the output — O(S·d) traffic
+instead of O(S·d·N).
+
+Grid: (B, d_inner/bd, S/bs) with the sequence dim innermost (sequential on
+TPU, so the scratch state carries across S blocks). Inside a block the
+recurrence steps row-by-row with a fori_loop: h = exp(dt·A)·h + (dt·x)⊗B;
+y_t = h·C_t + D·x_t.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(
+    x_ref,  # [1, bs, bd]
+    dt_ref,  # [1, bs, bd]
+    b_ref,  # [1, bs, N]
+    c_ref,  # [1, bs, N]
+    a_ref,  # [bd, N]
+    d_ref,  # [1, bd]
+    o_ref,  # [1, bs, bd]
+    hout_ref,  # [1, bd, N] final state (for prefill -> decode handoff)
+    h_s,  # scratch [bd, N] f32
+    y_s,  # scratch [bs, bd] f32
+    *,
+    block_s: int,
+):
+    i_s = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(i_s == 0)
+    def _init():
+        h_s[...] = jnp.zeros_like(h_s)
+
+    a = a_ref[...]  # [bd, N] (negative)
+    x = x_ref[0].astype(jnp.float32)  # [bs, bd]
+    dt = dt_ref[0].astype(jnp.float32)
+    bb = b_ref[0].astype(jnp.float32)  # [bs, N]
+    cc = c_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        dt_t = dt[t][:, None]  # [bd, 1]
+        decay = jnp.exp(dt_t * a)  # [bd, N]
+        u = (dt[t] * x[t])[:, None] * bb[t][None, :]  # [bd, N]
+        h = decay * h + u
+        y_s[t, :] = h @ cc[t]  # [bd]
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_s[...])
+    h_s[...] = h
+    o_ref[0] = (y_s[...] + x * d_ref[0][None, :]).astype(o_ref.dtype)
+
+    @pl.when(i_s == n_s - 1)
+    def _emit_state():
+        hout_ref[0] = h_s[...]
+
+
+def selective_scan(
+    x: jnp.ndarray,  # [B, S, di]
+    dt: jnp.ndarray,  # [B, S, di] (post-softplus)
+    b: jnp.ndarray,  # [B, S, N]
+    c: jnp.ndarray,  # [B, S, N]
+    a: jnp.ndarray,  # [di, N] (negative decay rates)
+    d: jnp.ndarray,  # [di] skip weight
+    *,
+    block_s: int = 128,
+    block_d: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, S, di = x.shape
+    N = b.shape[-1]
+    block_s = min(block_s, S)
+    block_d = min(block_d, di)
+    n_s = pl.cdiv(S, block_s)
+    n_d = pl.cdiv(di, block_d)
+    s_pad = n_s * block_s
+    if s_pad != S:
+        # pad with dt=0 (identity decay, zero input — exact no-op steps)
+        pad = ((0, 0), (0, s_pad - S), (0, 0))
+        x, dt = jnp.pad(x, pad), jnp.pad(dt, pad)
+        b, c = jnp.pad(b, pad), jnp.pad(c, pad)
+    assert di % block_d == 0, (di, block_d)
+
+    grid = (B, n_d, n_s)
+    out = pl.pallas_call(
+        functools.partial(_scan_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda ib, id_, is_: (ib, is_, id_)),
+            pl.BlockSpec((1, block_s, block_d), lambda ib, id_, is_: (ib, is_, id_)),
+            pl.BlockSpec((1, block_s, N), lambda ib, id_, is_: (ib, is_, 0)),
+            pl.BlockSpec((1, block_s, N), lambda ib, id_, is_: (ib, is_, 0)),
+            pl.BlockSpec((block_d, N), lambda ib, id_, is_: (id_, 0)),
+            pl.BlockSpec((1, block_d), lambda ib, id_, is_: (0, id_)),
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (1, block_s, block_d), lambda ib, id_, is_: (ib, is_, id_)
+            ),
+            pl.BlockSpec((1, block_d, N), lambda ib, id_, is_: (ib, id_, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_d, N), jnp.float32),
+            pltpu.VMEM((block_s, block_d), jnp.float32),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, s_pad, di), x.dtype),
+            jax.ShapeDtypeStruct((B, di, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, b, c, a, d.reshape(1, -1))
+    y, h_last = out
+    return y[:, :S], h_last

@@ -1,0 +1,50 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+      --steps 200 --batch 8 --seq 256 --ckpt /tmp/ckpt
+
+Runs the fault-tolerant trainer on the current host's devices (a reduced
+mesh); the production 256/512-chip mesh is exercised by the dry-run. The
+same Trainer/TrainState/step code path serves both — only the mesh and the
+batch geometry differ.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import TRAIN_4K, get_config, smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config of the same family (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = TRAIN_4K.replace(seq_len=args.seq, global_batch=args.batch)
+    mesh = make_host_mesh()
+    tc = TrainerConfig(
+        total_steps=args.steps, lr=args.lr,
+        checkpoint_dir=args.ckpt, checkpoint_every=args.ckpt_every,
+        grad_compress=args.grad_compress, seed=args.seed,
+    )
+    trainer = Trainer(cfg, shape, mesh, tc)
+    state = trainer.run()
+    print(f"finished at step {int(state.step)}; "
+          f"final loss {trainer.history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

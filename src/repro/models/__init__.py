@@ -1,0 +1,160 @@
+"""Model registry: one uniform API over every family.
+
+``module_for(cfg)`` returns the family module; each module exposes
+``abstract_params(cfg)``, ``forward(params, cfg, tokens, frontend_embeds,
+taps)`` and (decoder families) ``prefill`` / ``decode_step`` / ``init_cache``
+/ ``cache_shapes``.
+
+``input_specs(cfg, shape)`` builds the ShapeDtypeStruct stand-ins for every
+model input of a (arch x shape) dry-run cell — weak-type-correct, shardable,
+no device allocation.
+"""
+from __future__ import annotations
+
+from types import ModuleType
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, ssm_lm, transformer, vit
+from repro.models.param import init_params, param_logical_axes, param_shapes
+
+_FAMILY_MODULES: Dict[str, ModuleType] = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": ssm_lm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+    "vit": vit,
+    "vit_moe": vit,
+}
+
+
+def module_for(cfg: ModelConfig) -> ModuleType:
+    return _FAMILY_MODULES[cfg.family]
+
+
+def abstract_params(cfg: ModelConfig):
+    return module_for(cfg).abstract_params(cfg)
+
+
+def model_param_shapes(cfg: ModelConfig, dtype=jnp.float32):
+    return param_shapes(abstract_params(cfg), dtype)
+
+
+def model_param_axes(cfg: ModelConfig):
+    return param_logical_axes(abstract_params(cfg))
+
+
+def init_model_params(cfg: ModelConfig, rng, dtype=jnp.float32):
+    return init_params(abstract_params(cfg), rng, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins) and matching synthetic-batch construction
+# ---------------------------------------------------------------------------
+
+def _frontend_tokens(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Tokens contributed by the modality frontend for a given cell."""
+    if not cfg.frontend:
+        return 0
+    if cfg.family == "encdec":
+        return shape.seq_len  # frames ARE the encoder sequence
+    return min(cfg.frontend_tokens, max(shape.seq_len // 2, 8))
+
+
+def text_tokens_for(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Text-token length such that frontend + text == shape.seq_len."""
+    if cfg.family == "encdec":
+        return encdec.dec_len_for(shape.seq_len)
+    if cfg.family in ("vit", "vit_moe"):
+        return cfg.image_tokens - 1  # patches; +CLS makes image_tokens
+    return shape.seq_len - _frontend_tokens(cfg, shape)
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, *, batch_override: Optional[int] = None
+) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell.
+
+    train/prefill: the full sequence; decode: one new token + cache structs
+    (the cache is an *argument* of serve_step, so it appears here).
+    """
+    B = batch_override or shape.global_batch
+    mod = module_for(cfg)
+    t32 = jnp.int32
+    if cfg.family in ("vit", "vit_moe"):
+        return {
+            "patches": jax.ShapeDtypeStruct((B, cfg.image_tokens - 1, vit.PATCH_DIM), jnp.bfloat16),
+            "labels": jax.ShapeDtypeStruct((B,), t32),
+        }
+    s_text = text_tokens_for(cfg, shape)
+    specs: Dict[str, Any] = {}
+    if cfg.frontend:
+        n_front = _frontend_tokens(cfg, shape)
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, n_front, cfg.frontend_dim), jnp.bfloat16
+        )
+    if shape.kind in ("train", "prefill"):
+        specs["tokens"] = jax.ShapeDtypeStruct((B, s_text), t32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, s_text), t32)
+        return specs
+    # decode: one token step against a seq_len-deep cache
+    specs["tokens"] = jax.ShapeDtypeStruct((B, 1), t32)
+    specs["cache"] = mod.cache_shapes(cfg, B, shape.seq_len, dtype=jnp.bfloat16)
+    specs["index"] = jax.ShapeDtypeStruct((), t32)
+    return specs
+
+
+def synth_batch(cfg: ModelConfig, shape: ShapeConfig, rng,
+                *, batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """Materialized random batch matching ``input_specs`` (smoke/examples)."""
+    specs = input_specs(cfg, shape, batch_override=batch_override)
+    out: Dict[str, Any] = {}
+    for name, spec in specs.items():
+        if name == "cache":
+            out["cache"] = module_for(cfg).init_cache(
+                cfg, batch_override or shape.global_batch, shape.seq_len,
+                dtype=jnp.bfloat16,
+            )
+            continue
+        rng, k = jax.random.split(rng)
+        if isinstance(spec, jax.ShapeDtypeStruct):
+            if spec.dtype == jnp.int32:
+                hi = cfg.vocab_size or cfg.num_classes or 2
+                out[name] = (
+                    jnp.zeros(spec.shape, jnp.int32)
+                    if spec.shape == ()
+                    else jax.random.randint(k, spec.shape, 0, hi, jnp.int32)
+                )
+            else:
+                out[name] = jax.random.normal(k, spec.shape, jnp.float32).astype(spec.dtype)
+    return out
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, Any], taps=None):
+    """Uniform teacher-forced forward over a synth/input batch."""
+    mod = module_for(cfg)
+    if cfg.family in ("vit", "vit_moe"):
+        return mod.forward(params, cfg, batch["patches"], taps=taps)
+    return mod.forward(
+        params, cfg, batch["tokens"],
+        frontend_embeds=batch.get("frontend_embeds"), taps=taps,
+    )
+
+
+__all__ = [
+    "abstract_params",
+    "forward",
+    "init_model_params",
+    "input_specs",
+    "model_param_axes",
+    "model_param_shapes",
+    "module_for",
+    "synth_batch",
+    "text_tokens_for",
+]

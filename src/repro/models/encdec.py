@@ -1,0 +1,247 @@
+"""seamless-m4t encoder-decoder. The audio frontend is a stub: the encoder
+consumes precomputed frame embeddings [B, S_enc, frontend_dim].
+
+Decoder layers carry self-attention (causal, cached) + cross-attention over
+the encoder memory (K/V computed once at prefill and cached).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.quant.calibrate import maybe_record
+from repro.models.layers import (
+    apply_norm,
+    attention_block,
+    mlp_apply,
+    project_memory_kv,
+)
+from repro.models.param import PDef, dense, stack_tree
+from repro.models.transformer import (
+    _attn_pdefs,
+    _mlp_pdefs,
+    _norm_pdefs,
+    logits_from_hidden,
+)
+
+
+def dec_len_for(seq_len: int) -> int:
+    """Decoder token length for a given encoder frame length (shape cells)."""
+    return max(seq_len // 4, 128)
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    enc_layer = {
+        "ln1": _norm_pdefs(cfg),
+        "attn": _attn_pdefs(cfg, bias=True),
+        "ln2": _norm_pdefs(cfg),
+        "mlp": _mlp_pdefs(cfg, cfg.d_ff, bias=True),
+    }
+    dec_layer = {
+        "ln1": _norm_pdefs(cfg),
+        "attn": _attn_pdefs(cfg, bias=True),
+        "lnx": _norm_pdefs(cfg),
+        "xattn": _attn_pdefs(cfg, bias=True),
+        "ln2": _norm_pdefs(cfg),
+        "mlp": _mlp_pdefs(cfg, cfg.d_ff, bias=True),
+    }
+    return {
+        "embed": PDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                      init="small_normal"),
+        "frontend_proj": dense(cfg.frontend_dim, cfg.d_model, None, "embed"),
+        "enc_layers": stack_tree(enc_layer, cfg.encoder_layers),
+        "enc_norm": _norm_pdefs(cfg),
+        "dec_layers": stack_tree(dec_layer, cfg.decoder_layers),
+        "final_norm": _norm_pdefs(cfg),
+        "lm_head": dense(cfg.d_model, cfg.vocab_size, "embed", "vocab", scale=0.02),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray, taps=None) -> jnp.ndarray:
+    x = frames.astype(params["frontend_proj"].dtype) @ params["frontend_proj"]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        h = apply_norm(x, lp["ln1"], cfg)
+        attn, _ = attention_block(h, lp["attn"], cfg, cfg.attn,
+                                  positions=positions, causal=False)
+        x = x + attn
+        h = apply_norm(x, lp["ln2"], cfg)
+        return x + mlp_apply(h, lp["mlp"], cfg), None
+
+    if taps is not None:
+        for i in range(cfg.encoder_layers):
+            lp = jax.tree.map(lambda a: a[i], params["enc_layers"])
+            lt = taps.scoped(f"Lenc{i:03d}")
+            h = apply_norm(x, lp["ln1"], cfg)
+            maybe_record(lt, "post_ln1", h)
+            attn, _ = attention_block(h, lp["attn"], cfg, cfg.attn,
+                                      positions=positions, causal=False,
+                                      taps=lt)
+            x = x + attn
+            h = apply_norm(x, lp["ln2"], cfg)
+            maybe_record(lt, "post_ln2", h)
+            x = x + mlp_apply(h, lp["mlp"], cfg, taps=lt)
+    else:
+        if cfg.remat:
+            x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_layers"])
+        else:
+            x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    x = apply_norm(x, params["enc_norm"], cfg)
+    maybe_record(taps, "enc_norm_out", x)
+    return x
+
+
+def _decoder(params, cfg, x, memory, *, positions, caches=None,
+             cross_kv=None, cache_index=None):
+    """Scanned decoder. ``cross_kv`` (decode): per-layer precomputed
+    cross-attention K/V {"k": [L,B,S_enc,KVH,hd], "v": ...}; when absent the
+    cross K/V is projected from ``memory`` inline (train/prefill)."""
+
+    def body(x, xs):
+        lp = xs["p"]
+        h = apply_norm(x, lp["ln1"], cfg)
+        attn, new_self = attention_block(
+            h, lp["attn"], cfg, cfg.attn, positions=positions, causal=True,
+            cache=xs.get("self_kv"), cache_index=cache_index,
+        )
+        x = x + attn
+        h = apply_norm(x, lp["lnx"], cfg)
+        if "cross_kv" in xs:
+            mkv = (xs["cross_kv"]["k"], xs["cross_kv"]["v"])
+            xattn, _ = attention_block(
+                h, lp["xattn"], cfg, cfg.attn, positions=positions,
+                memory_kv=mkv,
+            )
+        else:
+            xattn, _ = attention_block(
+                h, lp["xattn"], cfg, cfg.attn, positions=positions,
+                memory=memory,
+            )
+        x = x + xattn
+        h = apply_norm(x, lp["ln2"], cfg)
+        x = x + mlp_apply(h, lp["mlp"], cfg)
+        return x, new_self
+
+    if cfg.remat and caches is None:
+        body = jax.checkpoint(body)
+    xs = {"p": params["dec_layers"]}
+    if caches is not None:
+        xs["self_kv"] = caches
+    if cross_kv is not None:
+        xs["cross_kv"] = cross_kv
+    x, new_caches = jax.lax.scan(body, x, xs)
+    return x, new_caches
+
+
+def compute_cross_kv(params, cfg: ModelConfig, memory: jnp.ndarray) -> dict:
+    """Per-decoder-layer cross K/V from encoder memory (prefill, once)."""
+    def one(lp):
+        k, v = project_memory_kv(memory, lp["xattn"], cfg.attn)
+        return {"k": k, "v": v}
+
+    return jax.lax.map(one, params["dec_layers"])
+
+
+def forward(params, cfg: ModelConfig, tokens: jnp.ndarray,
+            frontend_embeds: Optional[jnp.ndarray] = None,
+            taps=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Teacher-forced: encode frames, decode tokens. Returns (logits, aux)."""
+    memory = encode(params, cfg, frontend_embeds, taps=taps)
+    x = params["embed"][tokens]
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    if taps is not None:
+        # eager decoder for calibration
+        for i in range(cfg.decoder_layers):
+            lp = jax.tree.map(lambda a: a[i], params["dec_layers"])
+            lt = taps.scoped(f"Ldec{i:03d}")
+            h = apply_norm(x, lp["ln1"], cfg)
+            maybe_record(lt, "post_ln1", h)
+            attn, _ = attention_block(h, lp["attn"], cfg, cfg.attn,
+                                      positions=positions, causal=True,
+                                      taps=lt)
+            x = x + attn
+            h = apply_norm(x, lp["lnx"], cfg)
+            maybe_record(lt, "post_lnx", h)
+            xattn, _ = attention_block(h, lp["xattn"], cfg, cfg.attn,
+                                       positions=positions, memory=memory,
+                                       taps=lt.scoped("x"))
+            x = x + xattn
+            h = apply_norm(x, lp["ln2"], cfg)
+            maybe_record(lt, "post_ln2", h)
+            x = x + mlp_apply(h, lp["mlp"], cfg, taps=lt)
+    else:
+        x, _ = _decoder(params, cfg, x, memory, positions=positions)
+    return logits_from_hidden(params, cfg, x, taps=taps), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Decode cache: decoder self-attn KV (depth max_len//4, the decoder's
+    share of the cell budget) + per-layer precomputed cross K/V over an
+    encoder memory of length max_len. Quantized serving stores the self
+    cache in int8 (the cross K/V is written once at prefill and stays at
+    the activation dtype — a single pass, not a growing stream)."""
+    a = cfg.attn
+    L = cfg.decoder_layers
+    dec_len = dec_len_for(max_len)
+    int8 = cfg.quant.enable and cfg.quant.kv_cache_int8
+    self_dt = jnp.int8 if int8 else dtype
+    kv = lambda n, dt: jnp.zeros(
+        (L, batch, n, a.num_kv_heads, a.head_dim), dt)
+    cache = {
+        "self": {"k": kv(dec_len, self_dt), "v": kv(dec_len, self_dt)},
+        "cross": {"k": kv(max_len, dtype), "v": kv(max_len, dtype)},
+    }
+    if int8:
+        sc = lambda: jnp.zeros((L, batch, dec_len, a.num_kv_heads),
+                               jnp.float32)
+        cache["self"]["k_scale"] = sc()
+        cache["self"]["v_scale"] = sc()
+    return cache
+
+
+def cache_shapes(cfg, batch, max_len, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray,
+            frontend_embeds: Optional[jnp.ndarray] = None,
+            max_len: Optional[int] = None):
+    """Encode + run decoder prompt. Returns (last_logits, caches) where
+    caches = {'self': self-attn KV, 'cross': per-layer cross K/V}."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    memory = encode(params, cfg, frontend_embeds)
+    cross_kv = compute_cross_kv(params, cfg, memory)
+    x = params["embed"][tokens]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    a = cfg.attn
+    int8 = cfg.quant.enable and cfg.quant.kv_cache_int8
+    kv_dt = jnp.int8 if int8 else x.dtype
+    kv = lambda n: jnp.zeros((cfg.decoder_layers, B, n, a.num_kv_heads, a.head_dim), kv_dt)
+    self_kv = {"k": kv(max_len), "v": kv(max_len)}
+    if int8:
+        self_kv["k_scale"] = jnp.zeros(
+            (cfg.decoder_layers, B, max_len, a.num_kv_heads), jnp.float32)
+        self_kv["v_scale"] = jnp.zeros(
+            (cfg.decoder_layers, B, max_len, a.num_kv_heads), jnp.float32)
+    x, new_self = _decoder(params, cfg, x, None, positions=positions,
+                           caches=self_kv, cross_kv=cross_kv,
+                           cache_index=jnp.zeros((), jnp.int32))
+    logits = logits_from_hidden(params, cfg, x[:, -1:, :])
+    return logits, {"self": new_self, "cross": cross_kv}
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray, caches,
+                index: jnp.ndarray):
+    x = params["embed"][tokens]
+    idx = jnp.asarray(index, jnp.int32)
+    positions = (idx[:, None] if idx.ndim else idx) + jnp.arange(1, dtype=jnp.int32)
+    x, new_self = _decoder(params, cfg, x, None,
+                           positions=positions, caches=caches["self"],
+                           cross_kv=caches["cross"], cache_index=index)
+    logits = logits_from_hidden(params, cfg, x)
+    return logits, {"self": new_self, "cross": caches["cross"]}

@@ -1,0 +1,203 @@
+"""zamba2-7b hybrid: scanned Mamba-2 backbone + ONE shared attention+MLP
+block (single weight set) applied after every ``shared_attn_every``-th layer.
+
+Each application of the shared block has its own KV cache slice (indexed by
+application number); the block input re-injects the embedding stream
+(x + x0) — DESIGN.md notes this simplification vs. the released concat+LoRA.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.quant.calibrate import maybe_record
+from repro.models.layers import apply_norm, attention_block, mlp_apply
+from repro.models.param import PDef, stack_tree
+from repro.models.ssm import mamba2_block, mamba2_pdefs
+from repro.models.transformer import (
+    _attn_pdefs,
+    _mlp_pdefs,
+    _norm_pdefs,
+    logits_from_hidden,
+)
+
+
+def _n_apps(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.shared_attn_every
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    layer = {"ln": _norm_pdefs(cfg), "mamba": mamba2_pdefs(cfg)}
+    tree = {
+        "embed": PDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                      init="small_normal"),
+        "layers": stack_tree(layer, cfg.num_layers),
+        "shared": {
+            "ln1": _norm_pdefs(cfg),
+            "attn": _attn_pdefs(cfg),
+            "ln2": _norm_pdefs(cfg),
+            "mlp": _mlp_pdefs(cfg, cfg.d_ff),
+        },
+        "final_norm": _norm_pdefs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = PDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                               init="small_normal")
+    return tree
+
+
+def _shared_block(x, x0, params, cfg, *, positions, cache=None,
+                  cache_index=None, taps=None):
+    """One application of the shared attention+MLP block."""
+    sp = params["shared"]
+    inp = x + x0
+    h = apply_norm(inp, sp["ln1"], cfg)
+    maybe_record(taps, "post_ln1", h)
+    attn_out, new_cache = attention_block(
+        h, sp["attn"], cfg, cfg.attn,
+        positions=positions, causal=True,
+        cache=cache, cache_index=cache_index, taps=taps,
+    )
+    y = inp + attn_out
+    h = apply_norm(y, sp["ln2"], cfg)
+    maybe_record(taps, "post_ln2", h)
+    y = y + mlp_apply(h, sp["mlp"], cfg, taps=taps)
+    return x + y - inp, new_cache  # residual delta back onto the mamba stream
+
+
+def _run(params, cfg, x, *, positions, states=None, kv=None, cache_index=None,
+         taps=None):
+    every = cfg.shared_attn_every
+    x0 = x
+
+    def apply_shared(x, kv_carry, app_idx):
+        if kv_carry is None:
+            y, _ = _shared_block(x, x0, params, cfg, positions=positions)
+            return y, None
+        cache = jax.tree.map(lambda a: a[app_idx], kv_carry)
+        y, new_cache = _shared_block(
+            x, x0, params, cfg, positions=positions,
+            cache=cache, cache_index=cache_index,
+        )
+        kv_carry = jax.tree.map(
+            lambda full, c: jax.lax.dynamic_update_index_in_dim(full, c, app_idx, 0),
+            kv_carry, new_cache,
+        )
+        return y, kv_carry
+
+    if taps is not None:  # eager calibration path
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            h = apply_norm(x, lp["ln"], cfg)
+            maybe_record(taps.scoped(f"L{i:03d}"), "post_ln1", h)
+            y, _ = mamba2_block(h, lp["mamba"], cfg)
+            x = x + y
+            if i % every == every - 1:
+                # one weight set: stats of every application merge (correct)
+                x, _ = _shared_block(x, x0, params, cfg, positions=positions,
+                                     taps=taps.scoped("shared"))
+        return x, None, None
+
+    def body(carry, xs):
+        x, kv_carry = carry
+        lp = xs["p"]
+        i = xs["i"]
+        h = apply_norm(x, lp["ln"], cfg)
+        y, new_state = mamba2_block(h, lp["mamba"], cfg, state=xs.get("state"))
+        x = x + y
+
+        def with_shared(args):
+            x, kv_carry = args
+            return apply_shared(x, kv_carry, i // every)
+
+        def without(args):
+            return args
+
+        if kv is None:
+            # training/prefill-lowering without kv cache: still must apply the
+            # shared block; cond keeps HLO compact across the scan.
+            x, kv_carry2 = jax.lax.cond(
+                i % every == every - 1,
+                lambda a: (apply_shared(a[0], None, 0)[0], a[1]),
+                without, (x, kv_carry),
+            )
+            kv_carry = kv_carry2
+        else:
+            x, kv_carry = jax.lax.cond(
+                i % every == every - 1, with_shared, without, (x, kv_carry)
+            )
+        return (x, kv_carry), new_state
+
+    if cfg.remat and states is None and kv is None:
+        body = jax.checkpoint(body)
+    xs = {"p": params["layers"], "i": jnp.arange(cfg.num_layers, dtype=jnp.int32)}
+    if states is not None:
+        xs["state"] = states
+    (x, kv_out), new_states = jax.lax.scan(body, (x, kv), xs)
+    return x, new_states, kv_out
+
+
+def forward(params, cfg: ModelConfig, tokens: jnp.ndarray,
+            frontend_embeds=None, taps=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = params["embed"][tokens]
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x, _, _ = _run(params, cfg, x, positions=positions, taps=taps)
+    return logits_from_hidden(params, cfg, x, taps=taps), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    a = cfg.attn
+    di = s.d_inner(cfg.d_model)
+    nh = s.num_ssm_heads(cfg.d_model)
+    L, A = cfg.num_layers, _n_apps(cfg)
+    conv_dim = di + 2 * s.state_dim
+    int8 = cfg.quant.enable and cfg.quant.kv_cache_int8
+    kv_dtype = jnp.int8 if int8 else dtype
+    cache = {
+        "ssm": {
+            "h": jnp.zeros((L, batch, nh, s.head_dim, s.state_dim), jnp.float32),
+            "conv": jnp.zeros((L, batch, s.conv_width - 1, conv_dim), dtype),
+        },
+        "kv": {
+            "k": jnp.zeros((A, batch, max_len, a.num_kv_heads, a.head_dim), kv_dtype),
+            "v": jnp.zeros((A, batch, max_len, a.num_kv_heads, a.head_dim), kv_dtype),
+        },
+    }
+    if int8:
+        cache["kv"]["k_scale"] = jnp.zeros((A, batch, max_len, a.num_kv_heads), jnp.float32)
+        cache["kv"]["v_scale"] = jnp.zeros((A, batch, max_len, a.num_kv_heads), jnp.float32)
+    return cache
+
+
+def cache_shapes(cfg, batch, max_len, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray,
+            frontend_embeds=None, max_len: Optional[int] = None):
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = params["embed"][tokens]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    cache = init_cache(cfg, B, max_len, dtype=x.dtype)
+    x, new_states, kv_out = _run(
+        params, cfg, x, positions=positions, states=None, kv=cache["kv"],
+        cache_index=jnp.zeros((), jnp.int32),
+    )
+    logits = logits_from_hidden(params, cfg, x[:, -1:, :])
+    return logits, {"ssm": new_states, "kv": kv_out}
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray, caches,
+                index: jnp.ndarray):
+    x = params["embed"][tokens]
+    positions = index + jnp.arange(1, dtype=jnp.int32)
+    x, new_states, kv_out = _run(
+        params, cfg, x, positions=positions, states=caches["ssm"],
+        kv=caches["kv"], cache_index=index,
+    )
+    return logits_from_hidden(params, cfg, x), {"ssm": new_states, "kv": kv_out}

@@ -1,0 +1,282 @@
+"""Shared model layers: norms, RoPE, GQA attention (fp + CoQMoE-quantized),
+MLP variants. Pure functions over param pytrees.
+
+Attention dispatches through ``repro.kernels.ops`` so the TPU build uses the
+Pallas streaming kernels while CPU (tests / dry-run) uses the jnp reference.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnConfig, ModelConfig
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + gamma)).astype(dt)  # gemma-style (1+g); init gamma=0
+
+
+def layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+              eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma + beta).astype(dt)
+
+
+def apply_norm(x: jnp.ndarray, p: dict, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.norm == "layernorm":
+        y = layernorm(x, p["scale"], p["bias"])
+    else:
+        y = rmsnorm(x, p["scale"])
+    if "a_scale" in p:
+        # PTQ runtime: per-layer symmetric quantizer with the reparam scale
+        # s_tilde (the ``a_scale`` leaf is inserted by core.quant.ptq after
+        # the Eq. 10-16 fold; absent in FP models).
+        from repro.core.quant.linear_quant import fake_quant_activation
+
+        y = fake_quant_activation(y.astype(jnp.float32), p["a_scale"],
+                                  bits=cfg.quant.a_bits).astype(y.dtype)
+    return y
+
+
+def maybe_fake_quant(x: jnp.ndarray, p: dict, key: str, cfg: ModelConfig):
+    """Per-tensor symmetric activation quant at a linear input site."""
+    if key in p:
+        from repro.core.quant.linear_quant import fake_quant_activation
+
+        return fake_quant_activation(
+            x.astype(jnp.float32), p[key], bits=cfg.quant.a_bits
+        ).astype(x.dtype)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return partial(jax.nn.gelu, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def mlp_apply(x: jnp.ndarray, p: dict, cfg: ModelConfig, taps=None) -> jnp.ndarray:
+    """GLU (wi fused [d, 2ff]) or plain MLP (wi [d, ff]); wo [ff, d]."""
+    from repro.core.quant.calibrate import maybe_record
+
+    a = act_fn(cfg.act)
+    h = x @ p["wi"]
+    if "bi" in p:
+        h = h + p["bi"]
+    if cfg.glu:
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = a(gate) * up
+    else:
+        h = a(h)
+    maybe_record(taps, "mlp_mid", h)
+    h = maybe_fake_quant(h, p, "wo_a_scale", cfg)
+    y = h @ p["wo"]
+    if "bo" in p:
+        y = y + p["bo"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + cache handling; the core attention
+# math lives behind kernels/ops.attention -> Pallas on TPU, ref.py on CPU)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per (position, head) symmetric int8: x [B,S,KVH,hd] -> (int8, scale)."""
+    absmax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1), 1e-6)
+    scale = absmax / 127.0  # [B, S, KVH]
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -128, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def project_memory_kv(memory: jnp.ndarray, p: dict, a: AttnConfig) -> tuple:
+    """Cross-attention K/V from encoder memory (computed once, then cached)."""
+    B, S_enc = memory.shape[0], memory.shape[1]
+    k = (memory @ p["wk"]).reshape(B, S_enc, a.num_kv_heads, a.head_dim)
+    v = (memory @ p["wv"]).reshape(B, S_enc, a.num_kv_heads, a.head_dim)
+    if "bk" in p:
+        k = k + p["bk"].reshape(1, 1, a.num_kv_heads, a.head_dim)
+        v = v + p["bv"].reshape(1, 1, a.num_kv_heads, a.head_dim)
+    return k, v
+
+
+def attention_block(
+    x: jnp.ndarray,  # [B, S, D]
+    p: dict,
+    cfg: ModelConfig,
+    a: AttnConfig,
+    *,
+    positions: jnp.ndarray,  # [S] (decode: absolute positions, traceable)
+    causal: bool = True,
+    local_window: int = 0,
+    cache: Optional[dict] = None,
+    cache_index=None,  # scalar int32, decode fill position
+    memory: Optional[jnp.ndarray] = None,  # cross-attention (enc-dec)
+    memory_kv: Optional[tuple] = None,  # precomputed cross (k, v) [B,S,KVH,hd]
+    taps=None,
+) -> tuple[jnp.ndarray, Optional[dict]]:
+    """Full MSA block: qkv proj -> rope -> streaming attention -> out proj.
+
+    cache (decode): {"k": [B,Smax,KVH,hd] (int8 or fp), "v": ...,
+    optional "k_scale"/"v_scale": [B,Smax,KVH]}.
+    """
+    from repro.kernels import ops  # lazy: avoids import cycle
+
+    B, S, D = x.shape
+    src = memory if memory is not None else x
+    q = (x @ p["wq"]).reshape(B, S, a.num_heads, a.head_dim)
+    if "bq" in p:
+        q = q + p["bq"].reshape(1, 1, a.num_heads, a.head_dim)
+    if memory_kv is not None:
+        k, v = memory_kv
+    else:
+        k = (src @ p["wk"]).reshape(B, src.shape[1], a.num_kv_heads, a.head_dim)
+        v = (src @ p["wv"]).reshape(B, src.shape[1], a.num_kv_heads, a.head_dim)
+        if "bk" in p:
+            k = k + p["bk"].reshape(1, 1, a.num_kv_heads, a.head_dim)
+            v = v + p["bv"].reshape(1, 1, a.num_kv_heads, a.head_dim)
+    if a.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        if memory_kv is None:
+            k = rmsnorm(k, p["k_norm"])
+    is_cross = memory is not None or memory_kv is not None
+    if not is_cross:
+        q = rope(q, positions, a.rope_theta)
+        k = rope(k, positions, a.rope_theta)
+    quant_bits = cfg.quant.attn_bits if cfg.quant.enable else 0
+    new_cache = None
+    if cache is not None:
+        # cache_index: scalar (lockstep batch) or [B] vector (continuous
+        # batching: every serving slot fills its own position).
+        idx = jnp.asarray(cache_index, jnp.int32)
+        ragged = idx.ndim == 1
+        smax = cache["k"].shape[1]
+        # Sliding-window ring cache (perf iteration 4): local-attention
+        # layers allocate only `window` slots; positions write at
+        # idx % smax. RoPE is applied at the *absolute* position before
+        # caching, so slot order never matters; the ring size itself
+        # enforces the window, and the window mask is dropped at decode.
+        ring = 0 < local_window and smax <= local_window
+
+        def put(buf, new, base_idx):
+            if not ragged:
+                start = (0, base_idx) + (0,) * (buf.ndim - 2)
+                return jax.lax.dynamic_update_slice(
+                    buf, new.astype(buf.dtype), start
+                )
+            return jax.vmap(
+                lambda c, n, i: jax.lax.dynamic_update_slice(
+                    c, n.astype(c.dtype), (i,) + (0,) * (c.ndim - 1)
+                )
+            )(buf, new, base_idx)
+
+        int8_kv = cache["k"].dtype == jnp.int8
+        if int8_kv:
+            k_q, k_s = quantize_kv(k)
+            v_q, v_s = quantize_kv(v)
+        else:
+            k_q, v_q, k_s, v_s = k, v, None, None
+
+        if ring and S > 1:
+            # prefill into a ring: keep the last `smax` entries, rotated so
+            # entry for position p lands in slot p % smax
+            def ring_fill(buf, new):
+                kept = new[:, -smax:] if new.shape[1] >= smax else new
+                if new.shape[1] >= smax:
+                    shift = (new.shape[1] - smax) % smax
+                    kept = jnp.roll(kept, shift, axis=1)
+                    return put(buf, kept, jnp.int32(0))
+                return put(buf, kept, jnp.int32(0))
+
+            new_cache = {"k": ring_fill(cache["k"], k_q),
+                         "v": ring_fill(cache["v"], v_q)}
+            if int8_kv:
+                new_cache["k_scale"] = ring_fill(cache["k_scale"], k_s)
+                new_cache["v_scale"] = ring_fill(cache["v_scale"], v_s)
+            # prefill attention runs over the fresh full-length K/V
+            out = ops.attention(
+                q, k_q if not int8_kv else k_q, v_q,
+                causal=causal, q_offset=idx, quant_bits=quant_bits,
+                logit_softcap=a.logit_softcap, local_window=local_window,
+                k_scale=k_s, v_scale=v_s,
+            )
+        else:
+            write_idx = idx % smax if ring else idx
+            k_cache = put(cache["k"], k_q, write_idx)
+            v_cache = put(cache["v"], v_q, write_idx)
+            new_cache = {"k": k_cache, "v": v_cache}
+            ks = vs = None
+            if int8_kv:
+                ks = put(cache["k_scale"], k_s, write_idx)
+                vs = put(cache["v_scale"], v_s, write_idx)
+                new_cache["k_scale"], new_cache["v_scale"] = ks, vs
+            valid = jnp.broadcast_to(
+                jnp.minimum(idx + S, smax) if ring else idx + S, (B,)
+            ).astype(jnp.int32)
+            out = ops.attention(
+                q, k_cache, v_cache,
+                causal=causal, q_offset=idx, quant_bits=quant_bits,
+                logit_softcap=a.logit_softcap,
+                local_window=0 if ring else local_window,
+                k_scale=ks, v_scale=vs, kv_valid_len=valid,
+            )
+    else:
+        out = ops.attention(
+            q, k, v,
+            causal=causal and not is_cross,
+            quant_bits=quant_bits,
+            logit_softcap=a.logit_softcap,
+            local_window=0 if is_cross else local_window,
+        )
+    from repro.core.quant.calibrate import maybe_record
+
+    out = out.reshape(B, S, a.num_heads * a.head_dim)
+    maybe_record(taps, "attn_out", out)
+    out = maybe_fake_quant(out, p, "wo_a_scale", cfg)
+    y = out @ p["wo"]
+    if "bo" in p:
+        y = y + p["bo"]
+    return y, new_cache

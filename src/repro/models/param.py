@@ -1,0 +1,106 @@
+"""Single-source param definitions.
+
+Every model family describes its parameters once as a pytree of ``PDef``
+(shape + logical axes + initializer). From that single tree we derive:
+
+  * ``init_params``  — materialized arrays (smoke tests, examples, training)
+  * ``param_shapes`` — ShapeDtypeStructs (multi-pod dry-run: no allocation)
+  * logical axes     — resolved to PartitionSpecs by distributed/sharding_rules
+
+Logical axis vocabulary (resolved by sharding rules):
+  embed | vocab | qkv | kv | mlp | expert | ssm_inner | heads | layers | null
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PDef:
+    """Declarative parameter definition."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis per dim (None = replicated)
+    init: str = "normal"  # normal | zeros | ones | small_normal | conv
+    scale: Optional[float] = None  # stddev override for normal init
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack(pdef: PDef, n: int) -> PDef:
+    """Prepend a scanned-layers dim."""
+    return dataclasses.replace(
+        pdef, shape=(n,) + pdef.shape, axes=("layers",) + pdef.axes
+    )
+
+
+def stack_tree(tree, n: int):
+    return jax.tree.map(
+        lambda p: stack(p, n), tree, is_leaf=lambda x: isinstance(x, PDef)
+    )
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    return shape[-2] if len(shape) >= 2 else max(shape[-1], 1)
+
+
+def _materialize(pdef: PDef, key, dtype) -> jnp.ndarray:
+    if pdef.init == "zeros":
+        return jnp.zeros(pdef.shape, dtype)
+    if pdef.init == "ones":
+        return jnp.ones(pdef.shape, dtype)
+    std = pdef.scale if pdef.scale is not None else 1.0 / math.sqrt(_fan_in(pdef.shape))
+    if pdef.init == "small_normal":
+        std = 0.02
+    return (jax.random.normal(key, pdef.shape, jnp.float32) * std).astype(dtype)
+
+
+def is_pdef(x) -> bool:
+    return isinstance(x, PDef)
+
+
+def init_params(tree, rng, dtype=jnp.float32):
+    """Materialize a PDef tree into arrays (one fold of the rng per leaf)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_pdef)
+    keys = jax.random.split(rng, len(leaves))
+    out = [_materialize(p, k, p.dtype if p.dtype != jnp.float32 else dtype)
+           for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_shapes(tree, dtype=jnp.float32):
+    """ShapeDtypeStruct stand-ins — the dry-run path (no allocation)."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(
+            p.shape, p.dtype if p.dtype != jnp.float32 else dtype
+        ),
+        tree,
+        is_leaf=is_pdef,
+    )
+
+
+def param_logical_axes(tree):
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=is_pdef)
+
+
+def param_count_tree(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_pdef)
+    return sum(int(jnp.prod(jnp.asarray(p.shape))) for p in leaves)
+
+
+# Convenience constructors -------------------------------------------------
+
+def dense(d_in: int, d_out: int, ax_in: Optional[str], ax_out: Optional[str],
+          init: str = "normal", scale: Optional[float] = None) -> PDef:
+    return PDef((d_in, d_out), (ax_in, ax_out), init=init, scale=scale)
+
+
+def vector(d: int, ax: Optional[str], init: str = "zeros") -> PDef:
+    return PDef((d,), (ax,), init=init)

@@ -1,0 +1,295 @@
+"""Mamba-1 (falcon-mamba) and Mamba-2 (zamba2 backbone) SSM blocks.
+
+The selective scan is a linear recurrence h_t = a_t * h_{t-1} + b_t executed
+with ``jax.lax.associative_scan`` (parallel prefix — TPU-friendly, log-depth)
+for train/prefill, and a single fused step for decode (O(1) state update —
+this is what makes long_500k decode tractable for SSM archs).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import PDef, dense, vector
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+def linear_recurrence(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + b_t (h_{-1}=0) scanned over axis=1 (seq).
+
+    Reference form: materializes the full [B, S, ...] state. Production
+    blocks use the chunked form below, which never holds more than one
+    chunk's states (the discretized a/b tensors at full S x d_inner x N are
+    ~1e14 bytes for the assigned shapes).
+    """
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h
+
+
+def _chunk_recurrence(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray):
+    """In-chunk recurrence with carried initial state.
+
+    a, b: [B, C, ...]; h0: [B, ...]. Returns (h [B, C, ...], h_last).
+    h_t = A_t . h0 + B_t where (A, B) is the cumulative affine composition.
+    """
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    A_cum, B_cum = jax.lax.associative_scan(op, (a, b), axis=1)
+    h = A_cum * h0[:, None] + B_cum
+    return h, h[:, -1]
+
+
+def _pad_chunks(x: jnp.ndarray, chunk: int):
+    """[B, S, ...] -> [nch, B, C, ...] (zero-padded to a chunk multiple)."""
+    B, S = x.shape[:2]
+    nch = -(-S // chunk)
+    pad = nch * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    x = x.reshape((B, nch, chunk) + x.shape[2:])
+    return jnp.moveaxis(x, 1, 0)
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray],
+                  state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: [B,S,C]; w: [C,W]; state: [B,W-1,C] history.
+
+    Returns (y [B,S,C], new_state [B,W-1,C]).
+    """
+    B, S, C = x.shape
+    W = w.shape[1]
+    hist = state if state is not None else jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)  # [B, S+W-1, C]
+    y = jnp.zeros((B, S, C), x.dtype)
+    for i in range(W):  # width is 4: unrolled shift-multiply-accumulate
+        y = y + xp[:, i : i + S, :] * w[:, i]
+    if b is not None:
+        y = y + b
+    new_state = xp[:, S : S + W - 1, :]  # last W-1 inputs
+    return y, new_state
+
+
+def _softplus(x):
+    return jax.nn.softplus(x)
+
+
+def _use_scan_kernel() -> bool:
+    """Route Mamba-1 through the Pallas selective-scan kernel on TPU (or in
+    interpret mode); the CPU lowering keeps the chunked associative scan."""
+    import os
+
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env in ("interpret", "pallas"):
+        return True
+    if env == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+def mamba1_pdefs(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    dtr = s.dt_rank or -(-d // 16)
+    n = s.state_dim
+    return {
+        "in_proj": dense(d, 2 * di, "embed", "ssm_inner"),
+        "conv_w": PDef((di, s.conv_width), ("ssm_inner", None), init="normal",
+                       scale=1.0 / math.sqrt(s.conv_width)),
+        "conv_b": vector(di, "ssm_inner"),
+        "x_proj": dense(di, dtr + 2 * n, "ssm_inner", None),
+        "dt_proj": dense(dtr, di, None, "ssm_inner"),
+        "dt_bias": PDef((di,), ("ssm_inner",), init="ones"),
+        "A_log": PDef((di, n), ("ssm_inner", None), init="ones"),
+        "D": PDef((di,), ("ssm_inner",), init="ones"),
+        "out_proj": dense(di, d, "ssm_inner", "embed"),
+    }
+
+
+def mamba1_block(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+                 state: Optional[dict] = None) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: [B,S,D] -> [B,S,D]. state (decode): {'h':[B,di,N], 'conv':[B,W-1,di]}."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    di = s.d_inner(D)
+    dtr = s.dt_rank or -(-D // 16)
+    n = s.state_dim
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)  # [B,S,di]
+    xs, new_conv = causal_conv1d(
+        xs, p["conv_w"], p["conv_b"],
+        state=None if state is None else state["conv"],
+    )
+    xs = jax.nn.silu(xs)
+    proj = xs @ p["x_proj"]  # [B,S,dtr+2n]
+    dt, Bc, Cc = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = _softplus(dt @ p["dt_proj"] + p["dt_bias"])  # [B,S,di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [di,N]
+    if state is None and _use_scan_kernel():
+        # TPU: the Pallas selective-scan kernel keeps h in VMEM for the
+        # whole sequence — O(S*d) HBM instead of O(S*d*N) fusion boundaries
+        # (y already includes the D*x skip term).
+        from repro.kernels import ops
+
+        y, new_h = ops.selective_scan(xs, dt, Bc, Cc, A, p["D"])
+        y = y.astype(jnp.float32)
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+        out = y.astype(x.dtype) @ p["out_proj"]
+        return out, {"h": new_h, "conv": new_conv}
+    if state is None:
+        # Chunked selective scan: discretized (a, b) exist one chunk at a
+        # time — [B, C, di, N] instead of [B, S, di, N].
+        chunk = min(s.scan_chunk, S)
+
+        def body(h0, sl):
+            dtc = sl["dt"].astype(jnp.float32)
+            a = jnp.exp(dtc[..., None] * A)  # [B,C,di,N]
+            b = (dtc * sl["x"].astype(jnp.float32))[..., None] \
+                * sl["B"][:, :, None, :].astype(jnp.float32)
+            h, h_last = _chunk_recurrence(a, b, h0)
+            y = jnp.einsum("bcdn,bcn->bcd", h, sl["C"].astype(jnp.float32))
+            return h_last, y.astype(sl["x"].dtype)
+
+        sls = {"dt": _pad_chunks(dt, chunk), "x": _pad_chunks(xs, chunk),
+               "B": _pad_chunks(Bc, chunk), "C": _pad_chunks(Cc, chunk)}
+        h0 = jnp.zeros((B, di, n), jnp.float32)
+        new_h, ys = jax.lax.scan(body, h0, sls)
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, -1, di)[:, :S]
+    else:
+        a1 = jnp.exp(dt[:, 0, :, None].astype(jnp.float32) * A)
+        b1 = (dt * xs)[:, 0, :, None].astype(jnp.float32) \
+            * Bc[:, 0, None, :].astype(jnp.float32)
+        h = (a1 * state["h"] + b1)[:, None]  # S==1 decode
+        new_h = h[:, 0]
+        y = jnp.einsum("bsdn,bsn->bsd", h, Cc.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return out, {"h": new_h, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (zamba2 backbone): scalar per-head decay, SSD-style
+# ---------------------------------------------------------------------------
+
+def mamba2_pdefs(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.num_ssm_heads(d)
+    n = s.state_dim
+    conv_dim = di + 2 * n  # conv over (x, B, C)
+    return {
+        "in_proj": dense(d, 2 * di + 2 * n + nh, "embed", "ssm_inner"),
+        "conv_w": PDef((conv_dim, s.conv_width), ("ssm_inner", None),
+                       init="normal", scale=1.0 / math.sqrt(s.conv_width)),
+        "conv_b": vector(conv_dim, "ssm_inner"),
+        "A_log": PDef((nh,), ("ssm_inner",), init="ones"),
+        "dt_bias": PDef((nh,), ("ssm_inner",), init="ones"),
+        "D": PDef((nh,), ("ssm_inner",), init="ones"),
+        "norm_scale": vector(di, "ssm_inner", "zeros"),
+        "out_proj": dense(di, d, "ssm_inner", "embed"),
+    }
+
+
+def mamba2_block(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+                 state: Optional[dict] = None) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """SSD block. state (decode): {'h':[B,H,P,N], 'conv':[B,W-1,conv_dim]}."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    di = s.d_inner(D)
+    nh = s.num_ssm_heads(D)
+    P = s.head_dim
+    n = s.state_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xbc, new_conv = causal_conv1d(
+        xbc, p["conv_w"], p["conv_b"],
+        state=None if state is None else state["conv"],
+    )
+    xbc = jax.nn.silu(xbc)
+    xs, Bc, Cc = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = _softplus(dt + p["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [H]
+    xh = xs.reshape(B, S, nh, P)
+    if state is None:
+        # Chunked SSD in *matrix form* (Mamba-2 paper section 6; perf
+        # iteration 5): per-head scalar decay lets the intra-chunk
+        # contribution collapse to an attention-like [B, H, C, C] score
+        # matmul — never materializing the [B, C, H, P, N] discretized
+        # states (235 GB/chunk at zamba2 train_4k; scores are 0.12 GB).
+        # All exponents are of non-positive values (decay), so it is
+        # numerically stable.
+        chunk = min(s.scan_chunk, S)
+
+        def body(h0, sl):
+            dtc = sl["dt"].astype(jnp.float32)  # [B,C,H]
+            x = sl["x"].astype(jnp.float32)  # [B,C,H,P]
+            Bcc = sl["B"].astype(jnp.float32)  # [B,C,N]
+            Ccc = sl["C"].astype(jnp.float32)  # [B,C,N]
+            lam = jnp.cumsum(dtc * A, axis=1)  # [B,C,H], non-increasing
+            cb = jnp.einsum("btn,bsn->bts", Ccc, Bcc)  # [B,C,C]
+            seg = lam[:, :, None, :] - lam[:, None, :, :]  # [B,t,s,H] <= 0
+            C_ = dtc.shape[1]
+            tri = jnp.tril(jnp.ones((C_, C_), bool))[None, :, :, None]
+            # double-where: above the diagonal seg > 0 and exp overflows;
+            # zeroing seg first keeps the *backward* free of inf*0 = NaN
+            seg = jnp.where(tri, seg, 0.0)
+            M = jnp.where(
+                tri,
+                jnp.exp(seg) * dtc[:, None, :, :] * cb[..., None],
+                0.0,
+            )  # [B,t,s,H]
+            y_intra = jnp.einsum("btsh,bshp->bthp", M, x)
+            y_inter = jnp.exp(lam)[..., None] * jnp.einsum(
+                "bcn,bhpn->bchp", Ccc, h0)
+            dec = jnp.exp(lam[:, -1:, :] - lam) * dtc  # [B,C,H]
+            h_new = jnp.einsum("bshp,bsh,bsn->bhpn", x, dec, Bcc) \
+                + jnp.exp(lam[:, -1])[..., None, None] * h0
+            # stack chunk outputs at the activation dtype: the f32 scan
+            # carry (h) keeps full state precision; the per-chunk y stream
+            # is ordinary activation data (perf iteration 6)
+            return h_new, (y_intra + y_inter).astype(sl["x"].dtype)
+
+        sls = {"dt": _pad_chunks(dt, chunk), "x": _pad_chunks(xh, chunk),
+               "B": _pad_chunks(Bc, chunk), "C": _pad_chunks(Cc, chunk)}
+        h0 = jnp.zeros((B, nh, P, n), jnp.float32)
+        new_h, ys = jax.lax.scan(body, h0, sls)
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, -1, nh, P)[:, :S]
+    else:
+        a1 = jnp.exp(dt[:, 0].astype(jnp.float32) * A)[..., None, None]
+        b1 = (dt[:, 0, :, None] * xh[:, 0].astype(jnp.float32))[..., None] \
+            * Bc[:, 0, None, None, :].astype(jnp.float32)
+        h = (a1 * state["h"] + b1)[:, None]
+        new_h = h[:, 0]
+        y = jnp.einsum("bshpn,bsn->bshp", h, Cc.astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(B, S, di)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * (1.0 + p["norm_scale"])
+    out = y.astype(x.dtype) @ p["out_proj"]
+    new_state = {"h": new_h, "conv": new_conv}
+    return out, new_state

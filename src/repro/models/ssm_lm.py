@@ -1,0 +1,96 @@
+"""falcon-mamba LM: embed -> scanned Mamba-1 blocks (pre-RMSNorm, residual)
+-> final norm -> tied head. Decode state is O(1) per layer (long_500k-safe).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.quant.calibrate import maybe_record
+from repro.models.layers import apply_norm
+from repro.models.param import PDef, stack_tree
+from repro.models.ssm import mamba1_block, mamba1_pdefs
+from repro.models.transformer import logits_from_hidden, _norm_pdefs
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    layer = {"ln": _norm_pdefs(cfg), "mamba": mamba1_pdefs(cfg)}
+    tree = {
+        "embed": PDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                      init="small_normal"),
+        "layers": stack_tree(layer, cfg.num_layers),
+        "final_norm": _norm_pdefs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = PDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                               init="small_normal")
+    return tree
+
+
+def _run(params, cfg, x, states=None, taps=None):
+    if taps is not None:
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            h = apply_norm(x, lp["ln"], cfg)
+            maybe_record(taps.scoped(f"L{i:03d}"), "post_ln1", h)
+            y, _ = mamba1_block(h, lp["mamba"], cfg)
+            x = x + y
+        return x, None
+
+    def body(x, xs):
+        lp = xs["p"]
+        h = apply_norm(x, lp["ln"], cfg)
+        y, new_state = mamba1_block(
+            h, lp["mamba"], cfg, state=xs.get("state")
+        )
+        return x + y, new_state
+
+    if cfg.remat and states is None:
+        body = jax.checkpoint(body)
+    xs = {"p": params["layers"]}
+    if states is not None:
+        xs["state"] = states
+    x, new_states = jax.lax.scan(body, x, xs)
+    return x, new_states
+
+
+def forward(params, cfg: ModelConfig, tokens: jnp.ndarray,
+            frontend_embeds=None, taps=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = params["embed"][tokens]
+    x, _ = _run(params, cfg, x, taps=taps)
+    return logits_from_hidden(params, cfg, x, taps=taps), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """SSM 'cache' = recurrent state; max_len is irrelevant (O(1) state)."""
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    L = cfg.num_layers
+    return {
+        "h": jnp.zeros((L, batch, di, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((L, batch, s.conv_width - 1, di), dtype),
+    }
+
+
+def cache_shapes(cfg, batch, max_len, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray,
+            frontend_embeds=None, max_len: Optional[int] = None):
+    x = params["embed"][tokens]
+    # parallel scan path (states=None) still emits each layer's final state,
+    # which lax.scan stacks into exactly the init_cache structure.
+    x, new_states = _run(params, cfg, x, states=None)
+    logits = logits_from_hidden(params, cfg, x[:, -1:, :])
+    return logits, new_states
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray, states,
+                index=None):
+    x = params["embed"][tokens]  # [B,1,D]
+    x, new_states = _run(params, cfg, x, states=states)
+    return logits_from_hidden(params, cfg, x), new_states

@@ -1,0 +1,372 @@
+"""Generic decoder-only LM: dense, MoE (all-layer), and VLM families.
+
+Layers are *scanned* (stacked params, jax.lax.scan) so 90+-layer archs lower
+to compact HLO; remat wraps the scan body for training. gemma2's local/global
+alternation scans over layer *pairs* so the window stays static per sub-block.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.moe.dispatch import (
+    capacity,
+    grouped_combine,
+    grouped_dispatch,
+    gshard_dispatch_combine,
+)
+from repro.core.moe.router import route_topk
+from repro.core.quant.calibrate import maybe_record
+from repro.models.layers import apply_norm, attention_block, mlp_apply
+from repro.models.param import PDef, dense, stack_tree, vector
+
+
+# ---------------------------------------------------------------------------
+# Param definitions
+# ---------------------------------------------------------------------------
+
+def _norm_pdefs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": vector(d, "embed", "ones"), "bias": vector(d, "embed", "zeros")}
+    return {"scale": vector(d, "embed", "zeros")}  # rmsnorm (1+g) convention
+
+
+def _attn_pdefs(cfg: ModelConfig, bias: bool = False) -> dict:
+    a = cfg.attn
+    d = cfg.d_model
+    p = {
+        "wq": dense(d, a.q_dim, "embed", "qkv"),
+        "wk": dense(d, a.kv_dim, "embed", "qkv"),
+        "wv": dense(d, a.kv_dim, "embed", "qkv"),
+        "wo": dense(a.q_dim, d, "qkv", "embed"),
+    }
+    if bias:
+        p["bq"] = vector(a.q_dim, "qkv")
+        p["bk"] = vector(a.kv_dim, "qkv")
+        p["bv"] = vector(a.kv_dim, "qkv")
+        p["bo"] = vector(d, "embed")
+    if a.qk_norm:
+        p["q_norm"] = vector(a.head_dim, None, "zeros")
+        p["k_norm"] = vector(a.head_dim, None, "zeros")
+    return p
+
+
+def _mlp_pdefs(cfg: ModelConfig, d_ff: int, bias: bool = False) -> dict:
+    d = cfg.d_model
+    hid = 2 * d_ff if cfg.glu else d_ff
+    p = {"wi": dense(d, hid, "embed", "mlp"), "wo": dense(d_ff, d, "mlp", "embed")}
+    if bias:
+        p["bi"] = vector(hid, "mlp")
+        p["bo"] = vector(d, "embed")
+    return p
+
+
+def _moe_pdefs(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    hid = 2 * m.d_ff if cfg.glu else m.d_ff
+    return {
+        "gate": dense(d, m.num_experts, "embed", None, scale=0.02),
+        "wi": PDef((m.num_experts, d, hid), ("expert", "embed", "mlp")),
+        "wo": PDef((m.num_experts, m.d_ff, d), ("expert", "mlp", "embed")),
+    }
+
+
+def _layer_pdefs(cfg: ModelConfig) -> dict:
+    p = {"ln1": _norm_pdefs(cfg), "ln2": _norm_pdefs(cfg), "attn": _attn_pdefs(cfg)}
+    if cfg.moe is not None and cfg.moe.moe_every == 1:
+        p["moe"] = _moe_pdefs(cfg)
+    else:
+        p["mlp"] = _mlp_pdefs(cfg, cfg.d_ff)
+    if cfg.post_block_norm:
+        p["post_ln1"] = _norm_pdefs(cfg)
+        p["post_ln2"] = _norm_pdefs(cfg)
+    return p
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    n_layers = cfg.num_layers
+    tree: dict = {
+        "embed": PDef((cfg.vocab_size, d), ("vocab", "embed"), init="small_normal"),
+        "final_norm": _norm_pdefs(cfg),
+    }
+    if cfg.attn is not None and cfg.attn.alternate_local_global:
+        assert n_layers % 2 == 0
+        tree["layers_local"] = stack_tree(_layer_pdefs(cfg), n_layers // 2)
+        tree["layers_global"] = stack_tree(_layer_pdefs(cfg), n_layers // 2)
+    else:
+        tree["layers"] = stack_tree(_layer_pdefs(cfg), n_layers)
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = dense(d, cfg.vocab_size, "embed", "vocab", scale=0.02)
+    if cfg.frontend:
+        tree["frontend_proj"] = dense(cfg.frontend_dim, d, None, "embed")
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _moe_apply(x: jnp.ndarray, p: dict, cfg: ModelConfig, taps=None):
+    """MoE FFN on [B,S,D]; returns (y, aux_loss)."""
+    from repro.kernels import ops
+
+    from repro.models.layers import act_fn
+
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    r = route_topk(xt, p["gate"], p.get("gate_b"), m.top_k)
+    if m.impl == "gshard":
+        # Hierarchical (grouped) GShard: tokens split into G groups with
+        # per-group capacity so the dispatch one-hot is [G, Tg, E, Cg]
+        # (the flat [T, E, C] form is O(T^2) bytes at 1M-token cells).
+        if T >= 2048 and T % 2048 == 0:
+            G = T // 2048
+        elif T % B == 0:
+            G = B
+        else:
+            G = 1
+        Tg = T // G
+        cap = capacity(Tg, m.top_k, m.num_experts, m.capacity_factor)
+        xg = xt.reshape(G, Tg, D)
+        eg = r.experts.reshape(G, Tg, m.top_k)
+        wg = r.weights.reshape(G, Tg, m.top_k)
+        disp, comb = jax.vmap(
+            lambda xx, ee, ww: gshard_dispatch_combine(
+                xx, ee, ww, m.num_experts, cap
+            )
+        )(xg, eg, wg)
+        ein = jnp.einsum("gtec,gtd->gecd", disp.astype(x.dtype), xg)
+        h = jnp.einsum("gecd,edh->gech", ein, p["wi"])
+        if "bi" in p:
+            h = h + p["bi"][None, :, None, :]
+        if cfg.glu:
+            g, u = jnp.split(h, 2, axis=-1)
+            h = act_fn(cfg.act)(g) * u
+        else:
+            h = act_fn(cfg.act)(h)
+        eout = jnp.einsum("gech,ehd->gecd", h, p["wo"])
+        if "bo" in p:
+            eout = eout + p["bo"][None, :, None, :]
+        y = jnp.einsum("gtec,gecd->gtd", comb.astype(x.dtype), eout)
+        y = y.reshape(T, D)
+    else:  # grouped: the paper's sort-based unified kernel
+        dsp = grouped_dispatch(xt, r.experts, r.weights, m.num_experts)
+        y_sorted = ops.grouped_mlp(
+            dsp.x_sorted, p["wi"], p["wo"], dsp.group_sizes,
+            act=cfg.act, glu=cfg.glu, bi=p.get("bi"), bo=p.get("bo"),
+            taps=taps, mid_a_scale=p.get("wo_a_scale"),
+            mid_a_bits=cfg.quant.a_bits,
+        )
+        y = grouped_combine(y_sorted, dsp, B * S)
+    return y.reshape(B, S, D), r.aux_loss
+
+
+def _block(x, p, cfg, *, positions, local_window, causal=True,
+           cache=None, cache_index=None, taps=None):
+    """One transformer block; returns (x, aux_loss, new_cache)."""
+    h = apply_norm(x, p["ln1"], cfg)
+    maybe_record(taps, "post_ln1", h)
+    attn_out, new_cache = attention_block(
+        h, p["attn"], cfg, cfg.attn,
+        positions=positions, causal=causal, local_window=local_window,
+        cache=cache, cache_index=cache_index, taps=taps,
+    )
+    if cfg.post_block_norm:
+        attn_out = apply_norm(attn_out, p["post_ln1"], cfg)
+    x = x + attn_out
+    h = apply_norm(x, p["ln2"], cfg)
+    maybe_record(taps, "post_ln2", h)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        ff, aux = _moe_apply(h, p["moe"], cfg, taps=taps)
+    else:
+        ff = mlp_apply(h, p["mlp"], cfg, taps=taps)
+    if cfg.post_block_norm:
+        ff = apply_norm(ff, p["post_ln2"], cfg)
+    x = x + ff
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill teacher-forced)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, tokens, frontend_embeds):
+    x = params["embed"][tokens]  # [B, S_text, D]
+    if cfg.frontend and frontend_embeds is not None:
+        fe = frontend_embeds.astype(x.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([fe, x], axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return x
+
+
+def _run_layers(params, cfg, x, *, positions, caches=None, cache_index=None,
+                taps=None):
+    """Scan over stacked layers. Returns (x, aux_total, new_caches)."""
+    alternating = cfg.attn is not None and cfg.attn.alternate_local_global
+    remat = cfg.remat and caches is None
+
+    def make_body(local_window, causal=True):
+        def body(carry, xs):
+            x = carry["x"]
+            layer_p = xs["p"]
+            cache = xs.get("cache")
+            x, aux, new_cache = _block(
+                x, layer_p, cfg,
+                positions=positions, local_window=local_window, causal=causal,
+                cache=cache, cache_index=cache_index, taps=None,
+            )
+            carry = {"x": x, "aux": carry["aux"] + aux}
+            return carry, new_cache
+
+        return jax.checkpoint(body) if remat else body
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if taps is not None:
+        # calibration path: run layers eagerly (unscanned) to record taps
+        return _run_layers_eager(params, cfg, x, positions=positions, taps=taps)
+    if alternating:
+        # pairs: (local, global) x L/2 — window static per scan
+        carry = {"x": x, "aux": aux0}
+
+        def pair_body(carry, xs):
+            carry, c1 = make_body(cfg.attn.local_window)(carry, {"p": xs["local"], **({"cache": xs["cache_local"]} if caches else {})})
+            carry, c2 = make_body(0)(carry, {"p": xs["global"], **({"cache": xs["cache_global"]} if caches else {})})
+            return carry, {"local": c1, "global": c2}
+
+        xs = {"local": params["layers_local"], "global": params["layers_global"]}
+        if caches is not None:
+            xs["cache_local"] = caches["local"]
+            xs["cache_global"] = caches["global"]
+        carry, new_caches = jax.lax.scan(pair_body, carry, xs)
+        return carry["x"], carry["aux"], (new_caches if caches is not None else None)
+    carry = {"x": x, "aux": aux0}
+    xs = {"p": params["layers"]}
+    if caches is not None:
+        xs["cache"] = caches
+    body = make_body(cfg.attn.local_window if (cfg.attn and cfg.attn.local_window and not alternating) else 0)
+    carry, new_caches = jax.lax.scan(body, carry, xs)
+    return carry["x"], carry["aux"], (new_caches if caches is not None else None)
+
+
+def _run_layers_eager(params, cfg, x, *, positions, taps):
+    """Unscanned layer loop for PTQ calibration (records activation taps)."""
+    alternating = cfg.attn is not None and cfg.attn.alternate_local_global
+    aux_total = jnp.zeros((), jnp.float32)
+    if alternating:
+        n = cfg.num_layers // 2
+        for i in range(n):
+            for kind, win in (("layers_local", cfg.attn.local_window), ("layers_global", 0)):
+                lp = jax.tree.map(lambda a: a[i], params[kind])
+                scope = f"L{kind.removeprefix('layers_')}{i:03d}"
+                x, aux, _ = _block(x, lp, cfg, positions=positions,
+                                   local_window=win, taps=taps.scoped(scope))
+                aux_total += aux
+    else:
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, aux, _ = _block(x, lp, cfg, positions=positions,
+                               local_window=cfg.attn.local_window if cfg.attn else 0,
+                               taps=taps.scoped(f"L{i:03d}"))
+            aux_total += aux
+    return x, aux_total, None
+
+
+def logits_from_hidden(params, cfg, x, taps=None):
+    from repro.core.quant.calibrate import maybe_record
+
+    x = apply_norm(x, params["final_norm"], cfg)
+    maybe_record(taps, "final_norm", x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+        if "lm_head_b" in params:  # PTQ final-norm fold correction
+            logits = logits + params["lm_head_b"]
+    if cfg.final_logit_softcap > 0:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def forward(params, cfg: ModelConfig, tokens: jnp.ndarray,
+            frontend_embeds: Optional[jnp.ndarray] = None,
+            taps=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Teacher-forced forward. Returns (logits [B,S,V], moe_aux_loss)."""
+    x = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, aux, _ = _run_layers(params, cfg, x, positions=positions, taps=taps)
+    return logits_from_hidden(params, cfg, x, taps=taps), aux
+
+
+# ---------------------------------------------------------------------------
+# KV cache / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    a = cfg.attn
+    int8 = cfg.quant.enable and cfg.quant.kv_cache_int8
+    kv_dtype = jnp.int8 if int8 else dtype
+    def one(n, length):
+        c = {
+            "k": jnp.zeros((n, batch, length, a.num_kv_heads, a.head_dim), kv_dtype),
+            "v": jnp.zeros((n, batch, length, a.num_kv_heads, a.head_dim), kv_dtype),
+        }
+        if int8:
+            c["k_scale"] = jnp.zeros((n, batch, length, a.num_kv_heads), jnp.float32)
+            c["v_scale"] = jnp.zeros((n, batch, length, a.num_kv_heads), jnp.float32)
+        return c
+    if a.alternate_local_global:
+        # sliding-window layers keep a ring of window slots, not max_len
+        # (perf iteration 4: 8x less KV capacity/traffic at 32k decode)
+        n = cfg.num_layers // 2
+        local_len = min(max_len, a.local_window) if a.local_window else max_len
+        return {"local": one(n, local_len), "global": one(n, max_len)}
+    return one(cfg.num_layers, max_len)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs of the cache (dry-run: no allocation)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray,
+            frontend_embeds: Optional[jnp.ndarray] = None,
+            max_len: Optional[int] = None):
+    """Run the prompt, building the cache. Returns (last_logits, cache)."""
+    B = tokens.shape[0]
+    x = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    S = x.shape[1]
+    max_len = max_len or S
+    positions = jnp.arange(S, dtype=jnp.int32)
+    cache = init_cache(cfg, B, max_len, dtype=x.dtype)
+    x, aux, new_caches = _run_layers(
+        params, cfg, x, positions=positions, caches=cache,
+        cache_index=jnp.zeros((), jnp.int32),
+    )
+    logits = logits_from_hidden(params, cfg, x[:, -1:, :])
+    return logits, new_caches
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray, caches,
+                index: jnp.ndarray):
+    """One decode step. tokens [B,1]; index = cache fill position —
+    scalar (lockstep) or [B] (continuous batching, per-slot)."""
+    x = _embed_inputs(params, cfg, tokens, None)
+    idx = jnp.asarray(index, jnp.int32)
+    positions = (idx[:, None] if idx.ndim else idx) + jnp.arange(1, dtype=jnp.int32)
+    x, aux, new_caches = _run_layers(
+        params, cfg, x, positions=positions, caches=caches, cache_index=index
+    )
+    logits = logits_from_hidden(params, cfg, x)
+    return logits, new_caches

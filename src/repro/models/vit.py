@@ -1,0 +1,135 @@
+"""ViT / DeiT / M3ViT (MoE-ViT) — the paper's own architectures.
+
+Input is flattened 16x16x3 patches [B, 196, 768] (ImageNet is not available
+in-container; the benchmark harness feeds calibrated synthetic patches).
+M3ViT replaces every other MLP with a 16-expert top-2 MoE block (scan over
+(dense, moe) layer pairs).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.quant.calibrate import maybe_record
+from repro.models.layers import apply_norm, attention_block, mlp_apply
+from repro.models.param import PDef, dense, stack_tree, vector
+from repro.models.transformer import (
+    _attn_pdefs,
+    _mlp_pdefs,
+    _moe_pdefs,
+    _moe_apply,
+    _norm_pdefs,
+)
+
+PATCH_DIM = 768  # 16*16*3
+
+
+def _vit_layer_pdefs(cfg: ModelConfig, moe: bool) -> dict:
+    p = {
+        "ln1": _norm_pdefs(cfg),
+        "attn": _attn_pdefs(cfg, bias=True),
+        "ln2": _norm_pdefs(cfg),
+    }
+    if moe:
+        m = _moe_pdefs(cfg)
+        m["gate_b"] = vector(cfg.moe.num_experts, None)
+        hid = 2 * cfg.moe.d_ff if cfg.glu else cfg.moe.d_ff
+        m["bi"] = PDef((cfg.moe.num_experts, hid), ("expert", "mlp"))
+        m["bo"] = PDef((cfg.moe.num_experts, cfg.d_model), ("expert", "embed"))
+        p["moe"] = m
+    else:
+        p["mlp"] = _mlp_pdefs(cfg, cfg.d_ff, bias=True)
+    return p
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    tree: dict = {
+        "patch_proj": dense(PATCH_DIM, d, None, "embed"),
+        "patch_bias": vector(d, "embed"),
+        "cls_token": PDef((1, 1, d), (None, None, "embed"), init="small_normal"),
+        "pos_embed": PDef((cfg.image_tokens, d), (None, "embed"), init="small_normal"),
+        "final_norm": _norm_pdefs(cfg),
+        "head": dense(d, cfg.num_classes, "embed", None, scale=0.02),
+        "head_b": vector(cfg.num_classes, None),
+    }
+    if cfg.family == "vit_moe":
+        n_pairs = cfg.num_layers // 2
+        tree["pairs_dense"] = stack_tree(_vit_layer_pdefs(cfg, moe=False), n_pairs)
+        tree["pairs_moe"] = stack_tree(_vit_layer_pdefs(cfg, moe=True), n_pairs)
+    else:
+        tree["layers"] = stack_tree(_vit_layer_pdefs(cfg, moe=False), cfg.num_layers)
+    return tree
+
+
+def _vit_block(x, lp, cfg, *, positions, taps=None):
+    h = apply_norm(x, lp["ln1"], cfg)
+    maybe_record(taps, "post_ln1", h)
+    attn, _ = attention_block(h, lp["attn"], cfg, cfg.attn,
+                              positions=positions, causal=False, taps=taps)
+    x = x + attn
+    h = apply_norm(x, lp["ln2"], cfg)
+    maybe_record(taps, "post_ln2", h)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in lp:
+        ff, aux = _moe_apply(h, lp["moe"], cfg, taps=taps)
+    else:
+        ff = mlp_apply(h, lp["mlp"], cfg, taps=taps)
+    return x + ff, aux
+
+
+def forward(params, cfg: ModelConfig, patches: jnp.ndarray,
+            frontend_embeds=None, taps=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """patches: [B, image_tokens-1, PATCH_DIM] -> (class logits [B, C], aux)."""
+    B = patches.shape[0]
+    x = patches.astype(params["patch_proj"].dtype) @ params["patch_proj"] + params["patch_bias"]
+    cls = jnp.broadcast_to(params["cls_token"], (B, 1, cfg.d_model)).astype(x.dtype)
+    x = jnp.concatenate([cls, x], axis=1) + params["pos_embed"]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if taps is not None:  # eager calibration path
+        if cfg.family == "vit_moe":
+            for i in range(cfg.num_layers // 2):
+                for kind in ("pairs_dense", "pairs_moe"):
+                    lp = jax.tree.map(lambda a: a[i], params[kind])
+                    scope = f"L{kind.removeprefix('pairs_')}{i:03d}"
+                    x, aux = _vit_block(x, lp, cfg, positions=positions,
+                                        taps=taps.scoped(scope))
+                    aux_total += aux
+        else:
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                x, aux = _vit_block(x, lp, cfg, positions=positions,
+                                    taps=taps.scoped(f"L{i:03d}"))
+                aux_total += aux
+    elif cfg.family == "vit_moe":
+        def body(carry, xs):
+            x, aux = carry
+            x, a1 = _vit_block(x, xs["dense"], cfg, positions=positions)
+            x, a2 = _vit_block(x, xs["moe"], cfg, positions=positions)
+            return (x, aux + a1 + a2), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, aux_total),
+            {"dense": params["pairs_dense"], "moe": params["pairs_moe"]},
+        )
+    else:
+        def body(carry, lp):
+            x, aux = carry
+            x, a = _vit_block(x, lp, cfg, positions=positions)
+            return (x, aux + a), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["layers"])
+
+    x = apply_norm(x, params["final_norm"], cfg)
+    maybe_record(taps, "final_norm", x)
+    logits = x[:, 0, :] @ params["head"] + params["head_b"]
+    return logits, aux_total

@@ -1,0 +1,17 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+)
+from repro.optim.schedules import constant, warmup_cosine, warmup_linear
+from repro.optim.compress import (
+    CompressState,
+    compress_grads,
+    decompress_sum,
+    init_compress_state,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

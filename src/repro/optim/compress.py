@@ -1,0 +1,61 @@
+"""INT8 gradient compression with error feedback — the paper's quantization
+theme applied to the distributed substrate (beyond-paper; DESIGN.md section 5).
+
+Gradients are quantized per-tensor symmetric INT8 *before* the data-parallel
+all-reduce and dequantized after, cutting collective bytes 4x vs f32 (2x vs
+bf16). The quantization error is carried in a per-tensor residual and added
+back into the next step's gradient (error feedback), which keeps SGD-style
+convergence (Karimireddy et al. 2019).
+
+Used by train_step when ``grad_compress=True``: the all-reduce runs over the
+int8 payload inside shard_map; under pjit the same compress/decompress pair
+brackets the implicit reduction (XLA reduces the int32-summed codes).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    residual: Any  # pytree of f32 error-feedback residuals
+
+
+def init_compress_state(params) -> CompressState:
+    return CompressState(
+        residual=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    )
+
+
+def _quantize_one(g: jnp.ndarray, r: jnp.ndarray):
+    gf = g.astype(jnp.float32) + r
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127)
+    new_r = gf - q * scale  # error feedback residual
+    return q.astype(jnp.int8), scale, new_r
+
+
+def compress_grads(grads, state: CompressState) -> Tuple[Any, Any, CompressState]:
+    """Returns (int8 codes tree, scales tree, new residual state)."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(state.residual)
+    qs = [_quantize_one(g, r) for g, r in zip(flat_g, flat_r)]
+    codes = tdef.unflatten([q[0] for q in qs])
+    scales = tdef.unflatten([q[1] for q in qs])
+    new_state = CompressState(residual=tdef.unflatten([q[2] for q in qs]))
+    return codes, scales, new_state
+
+
+def decompress_sum(codes_sum, scales, n_participants: int):
+    """Dequantize an all-reduced (summed) int32 code tree.
+
+    Every participant quantizes with its own scale; psum of codes requires a
+    shared scale, so the caller psum-maxes the scale first (see train_step).
+    The mean over participants divides by ``n_participants``.
+    """
+    return jax.tree.map(
+        lambda c, s: c.astype(jnp.float32) * s / n_participants,
+        codes_sum, scales,
+    )

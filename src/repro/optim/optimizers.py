@@ -1,0 +1,157 @@
+"""Optimizers as pure (init, update) pairs over param pytrees.
+
+AdamW for the small/medium archs; Adafactor (factored second moment, no
+momentum) for the 100B+ archs so optimizer state fits HBM at scale
+(DESIGN.md section 5). Optimizer state inherits the param sharding (ZeRO via
+GSPMD: same PartitionSpec tree as the params).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], tuple]  # (g, s, p, step)
+    # (param_specs, param_shapes) -> opt-state PartitionSpec tree (ZeRO:
+    # state inherits the param sharding; tiny factored vectors replicate)
+    state_specs: Callable[[Any, Any], Any] = lambda ps, sh: None
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.asarray(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            step_ = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}
+
+    def state_specs(param_specs, param_shapes):
+        return {"m": param_specs, "v": param_specs}
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018) — factored second moment
+# ---------------------------------------------------------------------------
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(schedule, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {"v": jax.tree.map(one, params)}
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)  # increasing decay schedule
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                u = g * jax.lax.rsqrt(vr[..., None] / denom[..., None]) \
+                    * jax.lax.rsqrt(vc[..., None, :])
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v)
+                new_s = {"v": v}
+            # update clipping (RMS of the step bounded by clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            newp = p.astype(jnp.float32) - lr * (
+                u + weight_decay * p.astype(jnp.float32)
+            )
+            return newp.astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["v"])
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (tdef.unflatten([o[0] for o in out]),
+                {"v": tdef.unflatten([o[1] for o in out])})
+
+    def state_specs(param_specs, param_shapes):
+        from jax.sharding import PartitionSpec as P
+
+        def one(spec, shape_leaf):
+            if _factored(shape_leaf.shape):
+                return {"vr": P(), "vc": P()}  # tiny: replicate
+            return {"v": spec}
+
+        flat_sp, tdef = jax.tree.flatten(
+            param_specs, is_leaf=lambda x: isinstance(x, P))
+        flat_sh = tdef.flatten_up_to(param_shapes)
+        return {"v": tdef.unflatten(
+            [one(sp, sh) for sp, sh in zip(flat_sp, flat_sh)])}
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+def make_optimizer(name: str, schedule, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(schedule, **kw)
+    if name == "adafactor":
+        return adafactor(schedule, **kw)
+    raise ValueError(name)

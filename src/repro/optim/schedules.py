@@ -1,0 +1,36 @@
+"""Learning-rate schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return f
+
+
+def warmup_linear(lr: float, warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        step = step.astype(jnp.float32)
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        decay = jnp.maximum(
+            (total - step) / max(total - warmup, 1), floor / max(lr, 1e-30)
+        )
+        return lr * w * jnp.minimum(decay, 1.0)
+
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        step = step.astype(jnp.float32)
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor / max(lr, 1e-30) + (1 - floor / max(lr, 1e-30)) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t)
+        )
+        return lr * w * cos
+
+    return f

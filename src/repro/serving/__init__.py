@@ -1,0 +1,3 @@
+from repro.serving.engine import ServeEngine, build_serve_step
+
+__all__ = ["ServeEngine", "build_serve_step"]

@@ -1,0 +1,175 @@
+"""Batched serving engine: prefill + decode with the CoQMoE quantized
+inference path (INT8 K/V cache + 4-bit log-sqrt2 attention probabilities
+when ``cfg.quant.enable``).
+
+``build_serve_step`` is the unit the multi-pod dry-run lowers for decode
+shape cells: one new token per sequence against a seq_len-deep cache.
+
+``ServeEngine`` adds slot-based continuous batching on top: a fixed batch of
+decode slots; finished sequences release their slot and queued prompts are
+prefilled into it (cache writes at the slot index).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding_rules import (
+    SERVING_RULES,
+    cache_specs,
+    input_shardings,
+    param_specs,
+)
+
+
+def serving_config(cfg: ModelConfig) -> ModelConfig:
+    """Serving always uses the *dropless* grouped (unified-kernel) MoE path:
+    capacity-based GShard dispatch may drop tokens, which is acceptable in
+    training but makes generation non-deterministic vs the prompt run."""
+    if cfg.moe is not None and cfg.moe.impl != "grouped":
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, impl="grouped"))
+    return cfg
+
+
+def lowering_config(cfg: ModelConfig) -> ModelConfig:
+    """Cost-model stand-in for the dry-run: on TPU the grouped path is the
+    Pallas megablox kernel (each expert's weights stream HBM->VMEM once);
+    XLA's ragged_dot lowering on the host backend is a *dense* all-experts
+    contraction, which would overstate decode FLOPs ~1000x. The GShard
+    einsum with generous capacity has the kernel's true cost shape —
+    weights read once, compute proportional to routed tokens — so decode
+    cells lower through it (EXPERIMENTS.md section Perf, qwen3 iteration)."""
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, impl="gshard", capacity_factor=4.0))
+    return cfg
+
+
+def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     *, donate_cache: bool = True, for_lowering: bool = False):
+    """Jitted decode step: (params, tokens [B,1], cache, index) ->
+    (logits, new_cache). The cache buffer is donated (updated in place)."""
+    cfg = lowering_config(cfg) if for_lowering else serving_config(cfg)
+    mod = models.module_for(cfg)
+
+    def serve_step(params, tokens, cache, index):
+        return mod.decode_step(params, cfg, tokens, cache, index)
+
+    p_specs = param_specs(cfg, mesh, rules=SERVING_RULES)
+    in_tree = models.input_specs(cfg, shape)
+    b_specs = input_shardings(cfg, shape, mesh, in_tree)
+    named = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return jax.jit(
+        serve_step,
+        in_shardings=(
+            named(p_specs),
+            named(b_specs["tokens"]),
+            named(b_specs["cache"]),
+            named(b_specs["index"]),
+        ),
+        out_shardings=None,
+        donate_argnums=(2,) if donate_cache else (),
+    )
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int
+    generated: Optional[List[int]] = None
+
+
+class ServeEngine:
+    """Slot-based batched generation (single-host driver).
+
+    greedy sampling; per-slot bookkeeping on host, all model math jitted.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 max_len: int = 512) -> None:
+        assert cfg.family not in ("vit", "vit_moe"), "decoder families only"
+        self.cfg = serving_config(cfg)
+        cfg = self.cfg
+        self.params = params
+        self.mod = models.module_for(cfg)
+        self.B = batch_slots
+        self.max_len = max_len
+        self.cache = self.mod.init_cache(cfg, batch_slots, max_len)
+        self.pos = np.zeros(batch_slots, np.int32)  # cache fill per slot
+        self.active: Dict[int, Request] = {}  # slot -> request
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, c, i: self.mod.decode_step(p, self.cfg, t, c, i)
+        )
+
+    def submit(self, req: Request) -> None:
+        req.generated = []
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        free = [s for s in range(self.B) if s not in self.active]
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.pop(0)
+            # prefill the slot: feed prompt tokens one microstep at a time
+            # into the shared cache at this slot's rows (token-parallel
+            # prefill would batch this; slot isolation keeps it simple).
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            bsz = toks.shape[0]
+            logits, slot_cache = self.mod.prefill(
+                self.params, self.cfg,
+                toks, max_len=self.max_len,
+            )
+            # merge the slot's prefilled cache rows into the engine cache
+            def merge(full, part):
+                return jax.lax.dynamic_update_slice(
+                    full, part.astype(full.dtype),
+                    (0, slot) + (0,) * (full.ndim - 2),
+                )
+            self.cache = jax.tree.map(merge, self.cache, slot_cache)
+            self.pos[slot] = len(req.prompt)
+            first = int(jnp.argmax(logits[0, -1]))
+            req.generated.append(first)
+            self.active[slot] = req
+
+    def step(self) -> None:
+        """One engine tick: admit queued prompts, decode one token for every
+        active slot, retire finished sequences."""
+        self._admit()
+        if not self.active:
+            return
+        tokens = np.zeros((self.B, 1), np.int32)
+        for slot, req in self.active.items():
+            tokens[slot, 0] = req.generated[-1]
+        # per-slot cache positions: slots decode at their own fill level
+        index = jnp.asarray(self.pos, jnp.int32)
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), self.cache, index
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        done = []
+        for slot, req in self.active.items():
+            req.generated.append(int(nxt[slot]))
+            self.pos[slot] += 1
+            if len(req.generated) >= req.max_new_tokens or \
+                    self.pos[slot] >= self.max_len - 1:
+                done.append(slot)
+        for slot in done:
+            del self.active[slot]
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.active and not self.queue:
+                return
+            self.step()

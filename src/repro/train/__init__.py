@@ -1,0 +1,5 @@
+from repro.train.losses import loss_and_metrics
+from repro.train.train_step import TrainState, build_train_step, init_train_state
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,45 @@
+"""Loss functions: token LM cross-entropy (with z-loss) and classification."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 z_loss: float = 1e-4):
+    """Mean token cross-entropy. logits [..., V], labels [...] int32.
+
+    z_loss regularizes log Z toward 0 (MaxText/PaLM trick — keeps the final
+    logits from drifting, which also helps the PTQ final-norm quantizer).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    nll = lse - ll
+    loss = jnp.mean(nll)
+    if z_loss > 0:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss
+
+
+def loss_and_metrics(params, cfg: ModelConfig, batch: dict):
+    """Uniform loss over a pipeline batch; returns (loss, metrics dict)."""
+    from repro import models
+
+    logits, aux = models.forward(params, cfg, batch)
+    labels = batch["labels"]
+    if logits.ndim == 3 and logits.shape[1] != labels.shape[1]:
+        # frontend families: the frontend positions (prefix) carry no labels
+        logits = logits[:, -labels.shape[1]:, :]
+    xent = softmax_xent(logits, labels)
+    loss = xent
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+    acc = jnp.mean(
+        (jnp.argmax(logits, axis=-1) == batch["labels"]).astype(jnp.float32)
+    )
+    return loss, {"loss": loss, "xent": xent, "moe_aux": aux, "acc": acc}

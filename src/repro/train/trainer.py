@@ -1,0 +1,119 @@
+"""Fault-tolerant training loop: checkpoint/restart, preemption drain,
+straggler monitoring, deterministic data resume."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data import SyntheticPipeline
+from repro.distributed.fault_tolerance import (
+    PreemptionGuard,
+    StragglerMonitor,
+    run_step_with_retry,
+)
+from repro.optim import make_optimizer, warmup_cosine
+from repro.train.train_step import (
+    TrainState,
+    build_train_step,
+    init_train_state,
+)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    lr: float = 3e-4
+    warmup_steps: int = 10
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+    keep_last_k: int = 3
+    log_every: int = 10
+    seed: int = 0
+    grad_compress: bool = False
+    max_grad_norm: float = 1.0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 tc: TrainerConfig) -> None:
+        self.cfg = cfg
+        self.shape = shape
+        self.mesh = mesh
+        self.tc = tc
+        schedule = warmup_cosine(tc.lr, tc.warmup_steps, tc.total_steps)
+        self.optimizer = make_optimizer(cfg.optimizer, schedule)
+        self.pipeline = SyntheticPipeline(cfg, shape, seed=tc.seed)
+        self.ckpt = (
+            CheckpointManager(tc.checkpoint_dir, tc.keep_last_k)
+            if tc.checkpoint_dir else None
+        )
+        self.guard = PreemptionGuard()
+        self.straggler = StragglerMonitor()
+        self.history: List[Dict[str, float]] = []
+        with mesh:
+            self.step_fn = build_train_step(
+                cfg, shape, mesh, self.optimizer,
+                grad_compress=tc.grad_compress,
+                max_grad_norm=tc.max_grad_norm,
+            )
+
+    # -- state ---------------------------------------------------------------
+    def init_or_restore(self) -> TrainState:
+        state = init_train_state(
+            self.cfg, self.optimizer, jax.random.PRNGKey(self.tc.seed),
+            grad_compress=self.tc.grad_compress,
+        )
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            state = self.ckpt.restore(state)
+            state = jax.tree.map(jnp.asarray, state)
+        return state
+
+    # -- loop ----------------------------------------------------------------
+    def run(self, state: Optional[TrainState] = None,
+            on_step: Optional[Callable] = None) -> TrainState:
+        state = state if state is not None else self.init_or_restore()
+        start = int(state.step)
+        with self.mesh:
+            for step in range(start, self.tc.total_steps):
+                batch = {
+                    k: jnp.asarray(v)
+                    for k, v in self.pipeline.batch_for_step(step).items()
+                }
+                t0 = time.perf_counter()
+                state, metrics = run_step_with_retry(
+                    self.step_fn, state, batch
+                )
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.straggler.record(dt, step=step)
+                rec = {k: float(v) for k, v in metrics.items()}
+                rec["step"] = step
+                rec["step_time_s"] = dt
+                self.history.append(rec)
+                if on_step is not None:
+                    on_step(step, rec)
+                if step % self.tc.log_every == 0:
+                    print(
+                        f"step {step:5d} loss {rec['loss']:.4f} "
+                        f"acc {rec.get('acc', 0):.3f} {dt*1e3:.0f} ms"
+                    )
+                should_ckpt = (
+                    self.ckpt is not None
+                    and ((step + 1) % self.tc.checkpoint_every == 0
+                         or self.guard.preempted)
+                )
+                if should_ckpt:
+                    self.ckpt.save(int(state.step), state)
+                if self.guard.preempted:
+                    print(f"preemption requested: drained at step {step}")
+                    break
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return state

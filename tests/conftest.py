@@ -1,0 +1,30 @@
+import os
+
+# Tests run against the pure-jnp reference path by default; kernel tests opt
+# into interpret mode per-call. (Never force 512 fake devices here — smoke
+# tests and benches must see the real single CPU device.)
+os.environ.setdefault("REPRO_PALLAS", "ref")
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches():
+    """Cap jit-executable accumulation across the suite (the box has one
+    core and modest RAM; LLVM OOMs otherwise late in the run)."""
+    yield
+    jax.clear_caches()
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,138 @@
+"""Data pipeline determinism + sharding-rule resolution."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.models as M
+from repro.configs import ASSIGNED, get_shape, smoke_config, get_config
+from repro.data import SyntheticPipeline
+from repro.distributed.sharding_rules import (
+    DEFAULT_RULES,
+    opt_state_specs,
+    param_specs,
+    spec_for_axes,
+)
+
+SHAPE = get_shape("train_4k").replace(seq_len=32, global_batch=8)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_deterministic_across_instances():
+    cfg = smoke_config("llama3-8b")
+    a = SyntheticPipeline(cfg, SHAPE, seed=1).batch_for_step(17)
+    b = SyntheticPipeline(cfg, SHAPE, seed=1).batch_for_step(17)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_pipeline_steps_differ():
+    cfg = smoke_config("llama3-8b")
+    p = SyntheticPipeline(cfg, SHAPE, seed=1)
+    assert not np.array_equal(p.batch_for_step(0)["tokens"],
+                              p.batch_for_step(1)["tokens"])
+
+
+def test_pipeline_host_slices_differ_and_split_batch():
+    cfg = smoke_config("llama3-8b")
+    g = SyntheticPipeline(cfg, SHAPE, seed=1)
+    h0 = SyntheticPipeline(cfg, SHAPE, seed=1, host_id=0, num_hosts=2)
+    h1 = SyntheticPipeline(cfg, SHAPE, seed=1, host_id=1, num_hosts=2)
+    b0, b1 = h0.batch_for_step(3), h1.batch_for_step(3)
+    assert b0["tokens"].shape[0] == SHAPE.global_batch // 2
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_bigram_task_is_learnable_structure():
+    """90% of transitions follow the fixed permutation (the signal a
+    trained bigram model exploits)."""
+    cfg = smoke_config("llama3-8b")
+    p = SyntheticPipeline(cfg, SHAPE, seed=0)
+    b = p.batch_for_step(0)
+    toks, labels = b["tokens"], b["labels"]
+    follows = p._perm[toks] == labels
+    assert 0.8 < follows.mean() < 0.99
+
+
+def test_labels_are_next_tokens():
+    cfg = smoke_config("llama3-8b")
+    b = SyntheticPipeline(cfg, SHAPE, seed=0).batch_for_step(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+def test_spec_dedupes_mesh_axes():
+    # MoE expert tensor: expert wins 'model', mlp degrades to None
+    spec = spec_for_axes(("layers", "expert", "embed", "mlp"))
+    assert spec == P(None, "model", "data", None)
+
+
+def test_spec_respects_divisibility():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # vocab 256206 is not divisible by the model axis in a 16x16 mesh; here
+    # axis size is 1 so anything divides — exercise the code path
+    spec = spec_for_axes(("vocab", "embed"), shape=(256206, 1024), mesh=mesh)
+    assert spec == P("model", "data")
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_param_specs_tree_matches_param_tree(arch):
+    cfg = smoke_config(arch)
+    specs = param_specs(cfg)
+    shapes = M.model_param_shapes(cfg)
+    jax.tree.map(lambda s, sh: None, specs, shapes,
+                 is_leaf=lambda x: isinstance(x, P))  # same structure
+    for s, sh in zip(
+        jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)),
+        jax.tree.leaves(shapes),
+    ):
+        assert isinstance(s, P)
+        assert len(s) <= len(sh.shape)
+
+
+def test_opt_state_specs_inherit_param_spec():
+    from repro.optim import adamw, adafactor, constant
+
+    cfg = smoke_config("llama3-8b")
+    p_specs = param_specs(cfg)
+    p_shapes = M.model_param_shapes(cfg)
+    opt = adamw(constant(1e-3))
+    o_specs = opt.state_specs(p_specs, p_shapes)
+    # m/v trees mirror the param specs exactly (ZeRO sharding)
+    for a, b in zip(
+        jax.tree.leaves(o_specs["m"], is_leaf=lambda x: isinstance(x, P)),
+        jax.tree.leaves(p_specs, is_leaf=lambda x: isinstance(x, P)),
+    ):
+        assert a == b
+
+    fct = adafactor(constant(1e-3))
+    f_specs = fct.state_specs(p_specs, p_shapes)
+    # structure matches the real state; factored leaves replicate
+    f_state = jax.eval_shape(fct.init, p_shapes)
+    jax.tree.map(lambda spec, sh: None, f_specs, f_state,
+                 is_leaf=lambda x: isinstance(x, P))
+    leaves = jax.tree.leaves(f_specs, is_leaf=lambda x: isinstance(x, P))
+    assert all(isinstance(s, P) for s in leaves)
+
+
+def test_input_shardings_match_input_specs_structure():
+    from repro.distributed.sharding_rules import input_shardings
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ("llama3-8b", "falcon-mamba-7b", "seamless-m4t-medium"):
+        cfg = get_config(arch)
+        for shape_name in ("train_4k", "decode_32k"):
+            from repro.configs import get_shape, shape_applicable
+
+            shape = get_shape(shape_name)
+            if not shape_applicable(cfg, shape)[0]:
+                continue
+            tree = M.input_specs(cfg, shape)
+            specs = input_shardings(cfg, shape, mesh, tree)
+            assert set(specs) == set(tree)

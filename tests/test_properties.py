@@ -1,0 +1,158 @@
+"""Hypothesis property tests on system invariants: the grouped-matmul work
+router, sharding-spec fitting, the ring cache, and the chunked scan."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.expert_linear import _route_metadata
+
+
+# ---------------------------------------------------------------------------
+# Work-item router (the megablox-style "RR router table")
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, 200), min_size=1, max_size=12),
+       st.sampled_from([8, 32, 128]))
+def test_route_metadata_covers_every_row_exactly_once(sizes, block_m):
+    """Every sorted token row is claimed by exactly one active work item of
+    its own group, and out-tile visits are contiguous (flush correctness)."""
+    G = len(sizes)
+    T = sum(sizes)
+    n_m = max(-(-T // block_m), 1)
+    n_work = n_m + G
+    g_ids, m_ids, rs, re = _route_metadata(
+        jnp.asarray(sizes, jnp.int32), block_m, n_work)
+    g_ids, m_ids = np.asarray(g_ids), np.asarray(m_ids)
+    rs, re = np.asarray(rs), np.asarray(re)
+    starts = np.cumsum([0] + sizes)[:-1]
+    claimed = np.zeros(T, np.int32)
+    for w in range(n_work):
+        lo = max(rs[w], m_ids[w] * block_m)
+        hi = min(re[w], (m_ids[w] + 1) * block_m)
+        if lo < hi:
+            # the work item's row range must lie inside its group
+            assert rs[w] == starts[g_ids[w]]
+            claimed[lo:hi] += 1
+    assert (claimed == 1).all(), "row coverage must be exactly once"
+    # m_ids non-decreasing => all visits to one out tile are consecutive
+    assert (np.diff(m_ids) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Sharding-spec fitting
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+       st.lists(st.sampled_from(
+           ["embed", "vocab", "mlp", "expert", None]), min_size=1, max_size=4))
+def test_spec_never_produces_nondivisible_sharding(dims, axes):
+    from repro.distributed.sharding_rules import spec_for_axes
+
+    n = min(len(dims), len(axes))
+    dims, axes = tuple(dims[:n]), tuple(axes[:n])
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    spec = spec_for_axes(axes, shape=dims, mesh=FakeMesh())
+    sizes = {"data": 16, "model": 16}
+    used = []
+    for dim, entry in zip(dims, tuple(spec)):
+        if entry is None:
+            continue
+        assert dim % sizes[entry] == 0
+        used.append(entry)
+    assert len(used) == len(set(used)), "mesh axis reused in one spec"
+
+
+# ---------------------------------------------------------------------------
+# Ring cache == full cache within the window
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 8))
+def test_ring_cache_equals_full_history_attention(extra, prompt_len):
+    """For any decode position past the window, ring attention equals
+    attention over the last `window` positions of a full cache."""
+    from repro.configs import smoke_config
+    import repro.models as M
+
+    cfg = smoke_config("gemma2-2b").replace(remat=False)
+    W = cfg.attn.local_window
+    mod = M.module_for(cfg)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    S = W + extra
+    tok = jax.random.randint(jax.random.PRNGKey(extra), (1, S), 0,
+                             cfg.vocab_size)
+    full, _ = mod.forward(params, cfg, tok)
+    lg, cache = mod.prefill(params, cfg, tok[:, :prompt_len], max_len=S)
+    for t in range(prompt_len, S):
+        lg, cache = mod.decode_step(params, cfg, tok[:, t:t + 1], cache,
+                                    jnp.asarray(t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full[:, S - 1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Chunked recurrence == reference for arbitrary chunk sizes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 50), st.integers(1, 16))
+def test_chunked_recurrence_any_chunk_size(S, chunk):
+    from repro.models import ssm
+
+    rng = np.random.default_rng(S * 100 + chunk)
+    a = jnp.asarray(rng.uniform(0.5, 1.0, (1, S, 3)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((1, S, 3)), jnp.float32)
+    h_ref = ssm.linear_recurrence(a, b)
+    # pad with identity (a=1, b=0) like the model does
+    nch = -(-S // chunk)
+    pad = nch * chunk - S
+    ap = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    bp = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+
+    def body(h0, sl):
+        h, hl = ssm._chunk_recurrence(sl[0], sl[1], h0)
+        return hl, h
+
+    hl, hs = jax.lax.scan(
+        body, jnp.zeros((1, 3)),
+        (ssm._pad_chunks(ap, chunk), ssm._pad_chunks(bp, chunk)))
+    h_chunk = jnp.moveaxis(hs, 0, 1).reshape(1, -1, 3)[:, :S]
+    np.testing.assert_allclose(h_chunk, h_ref, atol=2e-5)
+    np.testing.assert_allclose(hl, h_ref[:, -1], atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint flatten/unflatten is a bijection over mixed trees
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.recursive(
+    st.sampled_from([0, 1, 2]),
+    lambda children: st.dictionaries(
+        st.sampled_from(["a", "b", "c"]), children, min_size=1, max_size=3),
+    max_leaves=8,
+))
+def test_checkpoint_flatten_roundtrip(tree_shape):
+    from repro.checkpoint.manager import _flatten, _unflatten_into
+
+    counter = [0]
+
+    def build(t):
+        if isinstance(t, dict):
+            return {k: build(v) for k, v in t.items()}
+        counter[0] += 1
+        return np.full((2,), counter[0], np.int32)
+
+    tree = build(tree_shape)
+    flat = _flatten(tree)
+    rebuilt = _unflatten_into(tree, flat)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(rebuilt)):
+        np.testing.assert_array_equal(a, b)

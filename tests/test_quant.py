@@ -1,0 +1,230 @@
+"""Quantization scheme tests (paper section 3): quantizer math, the log-sqrt2
+reparameterization identities (Eqs. 17-21), the post-norm reparam equivalence
+(Eqs. 10-16), and the end-to-end PTQ driver. Property tests use hypothesis."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.models as M
+from repro.configs import get_shape, smoke_config
+from repro.core.quant import (
+    AsymParams,
+    apply_to_consumer,
+    apply_to_layernorm,
+    calibrate_per_channel_asym,
+    dequantize_asym,
+    dequantize_sym,
+    logsqrt2_dequantize,
+    logsqrt2_quantize,
+    logsqrt2_scale_factor,
+    parity_decomposition,
+    quantize_asym,
+    quantize_sym,
+    reparam_factors,
+    sym_scale_from_absmax,
+    transform_activation,
+)
+from repro.core.quant.ptq import calibrate_model, ptq_model, quantized_config
+
+SQRT2 = np.sqrt(2.0)
+
+
+# ---------------------------------------------------------------------------
+# Uniform quantizers (Eqs. 6-7)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=4,
+                max_size=64),
+       st.sampled_from([4, 8]))
+def test_symmetric_roundtrip_error_bound(vals, bits):
+    x = jnp.asarray(vals, jnp.float32)
+    scale = sym_scale_from_absmax(jnp.max(jnp.abs(x)), bits)
+    err = jnp.abs(dequantize_sym(quantize_sym(x, scale, bits), scale) - x)
+    assert float(jnp.max(err)) <= float(scale) / 2 + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-50, 150, allow_nan=False), min_size=4,
+                max_size=64))
+def test_asymmetric_roundtrip_error_bound(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    from repro.core.quant import asym_params_from_minmax
+
+    p = asym_params_from_minmax(jnp.min(x), jnp.max(x), 8)
+    xq = quantize_asym(x, p, 8)
+    err = jnp.abs(dequantize_asym(xq, p) - x)
+    assert float(jnp.max(err)) <= float(p.scale) / 2 + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# log-sqrt2 post-softmax quantizer (Eqs. 17-21)
+# ---------------------------------------------------------------------------
+
+def test_logsqrt2_codes_are_exact_on_grid():
+    """Values 2^{-k/2} quantize to code k and dequantize exactly."""
+    codes = np.arange(0, 16)
+    vals = jnp.asarray(2.0 ** (-codes / 2.0), jnp.float32)
+    q = logsqrt2_quantize(vals, bits=4)
+    np.testing.assert_array_equal(np.asarray(q), codes)
+    deq = logsqrt2_dequantize(q)
+    np.testing.assert_allclose(deq, vals, rtol=1e-6)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(1e-4, 1.0))
+def test_logsqrt2_relative_error_bound(a):
+    """Within range, relative quantization error <= 2^{1/4} - 1 (~19%)."""
+    v = jnp.asarray([a], jnp.float32)
+    deq = float(logsqrt2_dequantize(logsqrt2_quantize(v, bits=8))[0])
+    assert abs(deq - a) / a <= 2 ** 0.25 - 1 + 1e-3
+
+
+def test_eq19_parity_identity():
+    """Eq. 19: 2^{-A_q/2} == 2^{-ceil(A_q/2)} (1 + odd(A_q)(sqrt2-1))."""
+    codes = jnp.arange(0, 16, dtype=jnp.int32)
+    direct = 2.0 ** (-codes.astype(jnp.float32) / 2.0)
+    reparam = logsqrt2_dequantize(codes)
+    np.testing.assert_allclose(reparam, direct, rtol=1e-6)
+
+
+def test_eq20_scale_factor():
+    codes = jnp.arange(0, 16, dtype=jnp.int32)
+    s = logsqrt2_scale_factor(codes)
+    expected = np.where(np.arange(16) % 2 == 1, SQRT2 - 1 + 1, 1.0)
+    np.testing.assert_allclose(s, expected, rtol=1e-6)
+
+
+def test_parity_decomposition_matmul_exactness(rng):
+    """Eq. 21 analogue: A_hat @ V == (A_even @ V) + sqrt2 (A_odd @ V), with
+    both planes exact powers of two (zero mantissa error)."""
+    codes = jnp.asarray(rng.integers(0, 16, (8, 16)), jnp.int32)
+    v = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+    a_hat = logsqrt2_dequantize(codes)
+    a_even, a_odd = parity_decomposition(codes)
+    lhs = a_hat @ v
+    rhs = a_even @ v + SQRT2 * (a_odd @ v)
+    # identity is exact in math; fp32 summation order differs by ~1 ulp
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-6)
+    # power-of-two planes are exact in bf16
+    for plane in (a_even, a_odd):
+        pl16 = plane.astype(jnp.bfloat16).astype(jnp.float32)
+        np.testing.assert_array_equal(np.asarray(pl16), np.asarray(plane))
+
+
+# ---------------------------------------------------------------------------
+# Post-norm reparameterization (Eqs. 10-16)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 16), st.integers(4, 32))
+def test_reparam_linear_equivalence(d, n):
+    """Eq. 13: X W + b == X' (diag(r1) W) + (b - W^T (s . r2))."""
+    rng = np.random.default_rng(d * 100 + n)
+    x = jnp.asarray(rng.standard_normal((n, d)) * rng.uniform(0.1, 5, d)
+                    + rng.uniform(-3, 3, d), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((d, 3)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(3), jnp.float32)
+    s, z = calibrate_per_channel_asym(x, 8)
+    f = reparam_factors(s, z, 8)
+    x_p = transform_activation(x, f)
+    w_p, b_p = apply_to_consumer(w, b, f)
+    np.testing.assert_allclose(x @ w + b, x_p @ w_p + b_p, rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_reparam_integer_grid_alignment(rng):
+    """round(X'/s_tilde) reproduces the per-channel asymmetric integer grid
+    (the precision-preservation claim of section 3.1)."""
+    d, n = 8, 256
+    x = jnp.asarray(rng.standard_normal((n, d)) * rng.uniform(0.1, 5, d)
+                    + rng.uniform(-3, 3, d), jnp.float32)
+    s, z = calibrate_per_channel_asym(x, 8)
+    f = reparam_factors(s, z, 8)
+    x_p = transform_activation(x, f)
+    grid_sym = jnp.round(x_p / f.s_tilde)
+    grid_asym = jnp.round(x / s) + z - 2.0**7
+    np.testing.assert_allclose(grid_sym, grid_asym, atol=1 + 1e-5)
+
+
+def test_reparam_layernorm_fold(rng):
+    """Folding into (gamma, beta) produces X' without runtime ops (Eq. 11)."""
+    from repro.models.layers import layernorm
+
+    d, n = 16, 64
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    gamma = jnp.asarray(rng.uniform(0.5, 2, d), jnp.float32)
+    beta = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    y = layernorm(x, gamma, beta)
+    s, z = calibrate_per_channel_asym(y, 8)
+    f = reparam_factors(s, z, 8)
+    g_p, b_p = apply_to_layernorm(gamma, beta, f)
+    y_folded = layernorm(x, g_p, b_p)
+    np.testing.assert_allclose(
+        y_folded, transform_activation(y, f), rtol=2e-4, atol=2e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# End-to-end PTQ driver
+# ---------------------------------------------------------------------------
+
+PTQ_ARCHS = ["m3vit-small", "vit-base", "llama3-8b", "nemotron-4-340b",
+             "olmoe-1b-7b", "gemma2-2b", "zamba2-7b", "falcon-mamba-7b",
+             "seamless-m4t-medium"]
+
+
+@pytest.mark.parametrize("arch", PTQ_ARCHS)
+def test_ptq_fold_only_is_equivalent(arch):
+    """Eqs. 10-16 fold alone must not change the model function."""
+    cfg = smoke_config(arch).replace(remat=False)
+    shape = get_shape("train_4k").replace(seq_len=24, global_batch=2)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    batches = [M.synth_batch(cfg, shape, jax.random.PRNGKey(i))
+               for i in range(2)]
+    taps = calibrate_model(cfg, params, batches)
+    p_fold = ptq_model(cfg, params, taps, fold_only=True)
+    lg0, _ = M.forward(params, cfg, batches[0])
+    lg1, _ = M.forward(p_fold, cfg, batches[0])
+    scale = float(jnp.std(lg0)) + 1e-9
+    assert float(jnp.max(jnp.abs(lg0 - lg1))) / scale < 1e-2
+
+
+@pytest.mark.parametrize("arch", ["m3vit-small", "llama3-8b"])
+def test_ptq_quantized_model_is_finite_and_close(arch):
+    cfg = smoke_config(arch).replace(remat=False)
+    shape = get_shape("train_4k").replace(seq_len=24, global_batch=2)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    batches = [M.synth_batch(cfg, shape, jax.random.PRNGKey(i))
+               for i in range(2)]
+    taps = calibrate_model(cfg, params, batches)
+    p_q = ptq_model(cfg, params, taps)
+    lg0, _ = M.forward(params, cfg, batches[0])
+    lgq, _ = M.forward(p_q, quantized_config(cfg), batches[0])
+    assert bool(jnp.isfinite(lgq).all())
+    sqnr = 10 * np.log10(
+        float(jnp.sum(lg0.astype(jnp.float64) ** 2))
+        / max(float(jnp.sum((lg0 - lgq).astype(jnp.float64) ** 2)), 1e-30)
+    )
+    assert sqnr > 10.0, f"SQNR {sqnr:.1f} dB too low"
+
+
+def test_ptq_inserts_activation_scales():
+    cfg = smoke_config("llama3-8b").replace(remat=False)
+    shape = get_shape("train_4k").replace(seq_len=16, global_batch=2)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    taps = calibrate_model(
+        cfg, params, [M.synth_batch(cfg, shape, jax.random.PRNGKey(0))]
+    )
+    p_q = ptq_model(cfg, params, taps)
+    assert "a_scale" in p_q["layers"]["ln1"]
+    assert p_q["layers"]["ln1"]["a_scale"].shape == (cfg.num_layers,)
+    assert "wo_a_scale" in p_q["layers"]["attn"]
+    # weights became int8 grids: every weight value is a multiple of its
+    # per-channel scale (check one)
+    w = p_q["layers"]["attn"]["wq"]
+    assert bool(jnp.isfinite(w).all())

@@ -1,0 +1,99 @@
+"""Serving engine: greedy generation equals step-by-step reference;
+continuous batching with ragged slot positions; quantized path sanity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models as M
+from repro.configs import smoke_config
+from repro.serving.engine import Request, ServeEngine
+
+
+def _greedy_reference(cfg, params, prompt, n_new):
+    """Teacher-forced re-run per token: the slowest correct generation."""
+    mod = M.module_for(cfg)
+    toks = list(map(int, prompt))
+    out = []
+    for _ in range(n_new):
+        logits, _ = mod.forward(
+            params, cfg, jnp.asarray([toks], jnp.int32))
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        toks.append(nxt)
+    return out
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "falcon-mamba-7b"])
+def test_engine_matches_teacher_forced_reference(arch):
+    cfg = smoke_config(arch).replace(remat=False)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+    n_new = 5
+    ref = _greedy_reference(cfg, params, prompt, n_new)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=32)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=n_new))
+    eng.run_until_drained()
+    got = eng.queue or None
+    # request finished; compare generated stream
+    assert ref == _last_generated(eng, 0)[:n_new]
+
+
+def _last_generated(engine, uid):
+    # finished requests are removed from active; track via closure of test
+    # (the engine mutates the submitted Request object in place)
+    for req in engine._all_requests:
+        if req.uid == uid:
+            return req.generated
+    raise KeyError(uid)
+
+
+@pytest.fixture(autouse=True)
+def _track_requests(monkeypatch):
+    """Record every submitted request so tests can inspect results."""
+    orig = ServeEngine.submit
+
+    def wrapped(self, req):
+        if not hasattr(self, "_all_requests"):
+            self._all_requests = []
+        self._all_requests.append(req)
+        return orig(self, req)
+
+    monkeypatch.setattr(ServeEngine, "submit", wrapped)
+
+
+def test_continuous_batching_ragged_slots():
+    """Requests of different lengths served concurrently must each match
+    their solo runs (per-slot positions actually work)."""
+    cfg = smoke_config("llama3-8b").replace(remat=False)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (4, 9, 6)]
+    solo = [_greedy_reference(cfg, params, p, 4) for p in prompts]
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=32)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+    eng.run_until_drained()
+    for i in range(3):
+        assert _last_generated(eng, i)[:4] == solo[i], f"request {i}"
+
+
+def test_quantized_engine_generates_finite():
+    cfg = smoke_config("llama3-8b").replace(remat=False)
+    cfg = cfg.replace(quant=dataclasses.replace(cfg.quant, enable=True))
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    # int8 KV cache is allocated when quant.enable
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=32)
+    assert eng.cache["k"].dtype == jnp.int8
+    rng = np.random.default_rng(0)
+    eng.submit(Request(uid=0,
+                       prompt=rng.integers(0, cfg.vocab_size, 5).astype(np.int32),
+                       max_new_tokens=4))
+    eng.run_until_drained()
+    toks = _last_generated(eng, 0)
+    assert len(toks) == 4
+    assert all(0 <= t < cfg.vocab_size for t in toks)
