@@ -1,6 +1,9 @@
 """Quantized batched serving: continuous batching over ragged requests with
 the CoQMoE inference path — INT8 K/V cache, 4-bit log-sqrt2 attention
-probabilities, and (for MoE archs) the dropless unified expert kernel.
+probabilities, (for MoE archs) the dropless unified expert kernel, and the
+full *materialized int8* weight path: weights stored as int8 + scales
+(``ptq_model(materialize="int8")``) and executed through the int8 kernels,
+at ~1/4 the parameter bytes of the fp tree.
 
   PYTHONPATH=src python examples/serve_quantized.py
   PYTHONPATH=src python examples/serve_quantized.py --arch olmoe-1b-7b
@@ -13,7 +16,9 @@ import jax
 import numpy as np
 
 import repro.models as M
-from repro.configs import smoke_config
+from repro.configs import get_shape, smoke_config
+from repro.core.quant.ptq import INT8_FAMILIES, calibrate_model, ptq_model
+from repro.models.param import tree_bytes
 from repro.serving.engine import Request, ServeEngine
 
 
@@ -31,9 +36,25 @@ def main() -> None:
     prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
                for n in rng.integers(4, 24, args.requests)]
 
+    rows = [("fp", cfg, params), ("int8-kv + attn4", qcfg, params)]
+    if cfg.family in INT8_FAMILIES:
+        # calibrate -> PTQ -> materialize the executable int8 tree
+        shape = get_shape("train_4k").replace(seq_len=24, global_batch=2)
+        calib = [M.synth_batch(cfg, shape, jax.random.PRNGKey(i))
+                 for i in range(2)]
+        taps = calibrate_model(cfg, params, calib)
+        p_int8 = ptq_model(cfg, params, taps, materialize="int8")
+        print(f"param bytes: fp={tree_bytes(params)/1e6:.2f}MB -> "
+              f"int8={tree_bytes(p_int8)/1e6:.2f}MB "
+              f"({tree_bytes(params)/tree_bytes(p_int8):.2f}x smaller)")
+        rows.append(("w8 stored-int8", qcfg, p_int8))
+    else:
+        print(f"family {cfg.family!r}: linear sites not yet threaded for "
+              f"stored-int8 execution; serving fp weights only")
+
     results = {}
-    for label, c in (("fp", cfg), ("int8-kv + attn4", qcfg)):
-        eng = ServeEngine(c, params, batch_slots=3, max_len=64)
+    for label, c, p in rows:
+        eng = ServeEngine(c, p, batch_slots=3, max_len=64)
         reqs = [Request(uid=i, prompt=p, max_new_tokens=args.new_tokens)
                 for i, p in enumerate(prompts)]
         for r in reqs:
@@ -47,12 +68,13 @@ def main() -> None:
         print(f"{label:16s}: {total} tokens in {dt:.2f}s "
               f"({total/dt:5.1f} tok/s), kv cache dtype={kv_dtype}")
 
-    match = np.mean([
-        np.mean([a == b for a, b in zip(x, y)])
-        for x, y in zip(results["fp"], results["int8-kv + attn4"])
-    ])
-    print(f"token agreement fp vs quantized: {match:.2%} "
-          f"(random-init model; trained models track much closer)")
+    for other in [label for label, _, _ in rows[1:]]:
+        match = np.mean([
+            np.mean([a == b for a, b in zip(x, y)])
+            for x, y in zip(results["fp"], results[other])
+        ])
+        print(f"token agreement fp vs {other}: {match:.2%} "
+              f"(random-init model; trained models track much closer)")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,14 @@ self-contained implementation of the same contract):
     prescribes — restoring a 512-chip checkpoint onto 256 chips (or a
     differently shaped mesh) is just a different placement of the same
     global arrays (re-mesh on restore).
+  * **Quantized trees**: a QuantizedParams tree (int8 weight leaves +
+    ``_scale``/``_as`` f32 siblings from ``ptq_model(materialize="int8")``)
+    round-trips with exact dtypes — int8 stays int8 on disk (¼ the bytes of
+    the fp tree) and on restore, so a serving process can load weights
+    directly into the executable format. ``restore(None)`` rebuilds the
+    nested dict structure from the manifest alone: deploying a quantized
+    checkpoint needs no abstract-param template (whose structure a PTQ
+    tree no longer matches).
   * **keep_last_k** garbage collection.
 """
 from __future__ import annotations
@@ -54,6 +62,31 @@ def _flatten(tree, prefix=""):
     else:
         out[prefix[:-1]] = tree
     return out
+
+
+def _nest(flat: Dict[str, Any]):
+    """Rebuild a nested tree from manifest keys alone (structure-free
+    restore). Dict levels whose keys are exactly 0..n-1 were lists/tuples
+    at save time and are rebuilt as lists."""
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        out = {k: fix(v) for k, v in node.items()}
+        if out and all(k.isdigit() for k in out):
+            order = sorted(out, key=int)
+            if order == [str(i) for i in range(len(order))]:
+                return [out[k] for k in order]
+        return out
+
+    return fix(root)
 
 
 def _unflatten_into(structure, flat, prefix=""):
@@ -144,9 +177,11 @@ class CheckpointManager:
         s = self.steps()
         return s[-1] if s else None
 
-    def restore(self, structure, step: Optional[int] = None,
+    def restore(self, structure=None, step: Optional[int] = None,
                 shardings=None):
-        """Restore into ``structure``'s pytree shape.
+        """Restore into ``structure``'s pytree shape, or — with
+        ``structure=None`` — rebuild the nested tree from the manifest
+        (quantized/PTQ trees whose structure no template describes).
 
         ``shardings``: optional matching tree of NamedSharding — arrays are
         device_put onto it (elastic re-mesh: the target mesh can differ from
@@ -165,7 +200,8 @@ class CheckpointManager:
             if info["dtype"] in _EXTENDED_DTYPES:
                 arr = arr.view(_EXTENDED_DTYPES[info["dtype"]])
             flat[key] = arr
-        tree = _unflatten_into(structure, flat)
+        tree = _nest(flat) if structure is None else _unflatten_into(
+            structure, flat)
         if shardings is not None:
             tree = jax.tree.map(
                 lambda arr, sh: jax.device_put(arr, sh), tree, shardings

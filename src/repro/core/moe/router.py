@@ -15,9 +15,16 @@ class RouterOut(NamedTuple):
 
 
 def route_topk(x: jnp.ndarray, w_gate: jnp.ndarray, b_gate: jnp.ndarray | None,
-               top_k: int) -> RouterOut:
-    """x: [T, D] tokens; w_gate: [D, E]. Eq. 4: softmax over the top-k logits."""
-    logits = (x.astype(jnp.float32) @ w_gate.astype(jnp.float32))
+               top_k: int, *, logits: jnp.ndarray | None = None) -> RouterOut:
+    """x: [T, D] tokens; w_gate: [D, E]. Eq. 4: softmax over the top-k logits.
+
+    ``logits``: optional precomputed (pre-bias) gate logits [T, E] — callers
+    with a quantized gate weight compute them through the
+    ``models.layers.quant_linear`` seam and pass them here (``w_gate`` may
+    then be an int8 leaf, used only for its shape)."""
+    if logits is None:
+        logits = (x.astype(jnp.float32) @ w_gate.astype(jnp.float32))
+    logits = logits.astype(jnp.float32)
     if b_gate is not None:
         logits = logits + b_gate
     T, E = logits.shape

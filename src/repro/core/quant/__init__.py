@@ -9,8 +9,11 @@ from repro.core.quant.linear_quant import (
     quantize_weight,
 )
 from repro.core.quant.qtypes import (
+    ASCALE_SUFFIX,
     AsymParams,
+    SCALE_SUFFIX,
     asym_params_from_minmax,
+    is_quantized_weight,
     QTensor,
     dequantize_asym,
     dequantize_sym,

@@ -16,8 +16,18 @@ Pipeline (offline, mirrors the paper's 32-image calibration):
          that the runtime quantizer in ``models.layers.apply_norm`` uses;
        * inserts ``wo_a_scale`` per-tensor scales for the remaining linear
          inputs (attention out-proj, MLP/expert fc2);
-       * weight int8 per-output-channel symmetric quantization (simulated
-         via quantize-dequantize; identical values to the int8 kernels).
+       * weight int8 per-output-channel symmetric quantization. Two
+         materializations (DESIGN.md section 4):
+           - ``materialize="fake"`` (default): quantize-dequantize in f32 —
+             the reference oracle, identical values to the int8 kernels;
+           - ``materialize="int8"``: a **QuantizedParams** tree — each
+             quantizable weight leaf is stored ``jnp.int8`` with a sibling
+             ``<key>_scale`` per-output-channel dequant leaf and (where a
+             static activation scale exists) a folded ``<key>_as`` per-site
+             activation-scale leaf. ``models.layers.quant_linear`` executes
+             these leaves through the int8 Pallas kernels
+             (kernels/int8_matmul.py, kernels/expert_linear.py) — the
+             weights are *executed* in the format they are stored in.
 
   ``fold_only=True`` performs ONLY the Eq. 10-16 fold — the result must be
   numerically equivalent to the FP model (the property the reparam is built
@@ -41,8 +51,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.quant.calibrate import TapCollector
-from repro.core.quant.linear_quant import fake_quant_weight
-from repro.core.quant.qtypes import qmax
+from repro.core.quant.linear_quant import fake_quant_weight, quantize_weight
+from repro.core.quant.qtypes import ASCALE_SUFFIX, SCALE_SUFFIX, qmax
+
+# Families whose every linear call site routes through the
+# ``models.layers.quant_linear`` seam (int8 materialization supported).
+INT8_FAMILIES = frozenset({"dense", "moe", "vlm", "vit", "vit_moe"})
 
 # Leaf keys treated as quantizable linear weights (per-out-channel int8).
 QUANT_WEIGHT_KEYS = frozenset(
@@ -153,6 +167,14 @@ def _insert_scale(layer_p: dict, path: Tuple[str, ...], key: str, val):
         node[key] = val
 
 
+def _insert_ascale(layer_p: dict, w_path: Tuple[str, ...], val):
+    """Fold a per-site activation scale next to the weight it feeds
+    (``<wkey>_as``) so ``quant_linear`` is self-contained at apply time."""
+    node = _get(layer_p, w_path[:-1]) if len(w_path) > 1 else layer_p
+    if node is not None and w_path[-1] in node:
+        node[w_path[-1] + ASCALE_SUFFIX] = val
+
+
 def _absmax_scale(taps: TapCollector, names: List[str], bits: int):
     """Per-tensor symmetric activation scales, stacked [L]."""
     vals = [taps.absmax(n) / qmax(bits) for n in names]
@@ -217,13 +239,34 @@ def _quantize_weights(tree, bits: int):
     return tree
 
 
+def _materialize_int8(tree, bits: int):
+    """Replace quantizable weight leaves with stored-int8 + dequant scale.
+
+    Same per-output-channel symmetric grid as ``fake_quant_weight`` — the
+    fake-quant tree is the numerical oracle for this one."""
+    if isinstance(tree, dict):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = _materialize_int8(v, bits)
+            elif k in QUANT_WEIGHT_KEYS and hasattr(v, "ndim") and v.ndim >= 2:
+                w_q, w_scale = quantize_weight(v, bits)
+                out[k] = w_q
+                out[k + SCALE_SUFFIX] = w_scale.astype(jnp.float32)
+            else:
+                out[k] = v
+        return out
+    return tree
+
+
 def _n_stack(sub: dict) -> int:
     leaf = jax.tree.leaves(sub)[0]
     return leaf.shape[0]
 
 
 def _fold_group_unstacked(sub: dict, scope: str, sites, taps: TapCollector,
-                          a_bits: int, rms: bool, fold_only: bool):
+                          a_bits: int, rms: bool, fold_only: bool,
+                          ascale: bool = False):
     """Fold one unstacked (no leading layer dim) block, e.g. zamba2's shared
     attention block."""
     for norm_path, suffix, consumers in sites:
@@ -235,6 +278,8 @@ def _fold_group_unstacked(sub: dict, scope: str, sites, taps: TapCollector,
         for w_path, b_key in consumers:
             _fold_consumer(sub, w_path, b_key, r1[0], (s * r2)[0],
                            add_bias=not rms)
+            if ascale:
+                _insert_ascale(sub, w_path, s_tilde[0])
         if not fold_only:
             _insert_scale(sub, norm_path, "a_scale", s_tilde[0])
     if not fold_only:
@@ -251,11 +296,31 @@ def _fold_group_unstacked(sub: dict, scope: str, sites, taps: TapCollector,
 # ---------------------------------------------------------------------------
 
 def ptq_model(cfg: ModelConfig, params, taps: TapCollector, *,
-              fold_only: bool = False):
-    """Return the PTQ-transformed param tree (original is untouched)."""
+              fold_only: bool = False, materialize: str = "fake"):
+    """Return the PTQ-transformed param tree (original is untouched).
+
+    ``materialize`` selects the weight representation (ignored by
+    ``fold_only``):
+
+      * ``"fake"``: quantize-dequantize in f32 — the reference oracle the
+        deployment path is validated against;
+      * ``"int8"``: a QuantizedParams tree — weight leaves stored
+        ``jnp.int8`` plus ``<key>_scale`` / ``<key>_as`` leaves, executed
+        through the int8 kernels by ``models.layers.quant_linear``.
+    """
+    if materialize not in ("fake", "int8"):
+        raise ValueError(f"unknown materialize mode {materialize!r}")
+    if materialize == "int8" and not fold_only \
+            and cfg.family not in INT8_FAMILIES:
+        raise NotImplementedError(
+            f"int8 materialization requires every linear site of the family "
+            f"to route through models.layers.quant_linear; {cfg.family!r} "
+            f"is not threaded yet (supported: {sorted(INT8_FAMILIES)})"
+        )
     rms = cfg.norm == "rmsnorm"
     a_bits = cfg.quant.a_bits
     w_bits = cfg.quant.w_bits
+    ascale = materialize == "int8" and not fold_only
     p = _copy(params)
 
     for key, prefix, sites in _layer_groups(cfg, p):
@@ -270,6 +335,8 @@ def ptq_model(cfg: ModelConfig, params, taps: TapCollector, *,
             for w_path, b_key in consumers:
                 _fold_consumer(sub, w_path, b_key, r1, s * r2,
                                add_bias=not rms)
+                if ascale:
+                    _insert_ascale(sub, w_path, s_tilde)
             if not fold_only:
                 _insert_scale(sub, norm_path, "a_scale", s_tilde)
         if not fold_only:
@@ -279,6 +346,8 @@ def ptq_model(cfg: ModelConfig, params, taps: TapCollector, *,
                     continue
                 if any(nm not in taps.stats for nm in names):
                     continue
+                # mid sites carry only wo_a_scale: quant_linear reads it as
+                # the wo activation scale, same leaf the fake oracle uses
                 _insert_scale(sub, mid_path, "wo_a_scale",
                               _absmax_scale(taps, names, a_bits))
 
@@ -287,7 +356,7 @@ def ptq_model(cfg: ModelConfig, params, taps: TapCollector, *,
     if cfg.family == "hybrid" and "shared" in p:
         _fold_group_unstacked(p["shared"], "shared",
                               [_ATTN_SITE, _MLP_SITE], taps, a_bits, rms,
-                              fold_only)
+                              fold_only, ascale=ascale)
 
     # Final norm -> head consumer (single, unstacked site).
     fn_site = "final_norm"
@@ -308,6 +377,8 @@ def ptq_model(cfg: ModelConfig, params, taps: TapCollector, *,
             p["lm_head_b"] = -corr  # added to logits by logits_from_hidden
         if not fold_only:
             p["final_norm"]["a_scale"] = s_tilde[0]
+        if ascale:
+            p[head_key + ASCALE_SUFFIX] = s_tilde[0]
 
     # Encoder-output norm feeds every decoder layer's cross K/V (enc-dec).
     if cfg.family == "encdec" and "enc_norm_out" in taps.stats:
@@ -318,11 +389,14 @@ def ptq_model(cfg: ModelConfig, params, taps: TapCollector, *,
         for wk, bk in ((("xattn", "wk"), "bk"), (("xattn", "wv"), "bv")):
             _fold_consumer(p["dec_layers"], wk, bk,
                            r1, s * r2, add_bias=not rms)
+            if ascale:
+                _insert_ascale(p["dec_layers"], wk, s_tilde[0])
         if not fold_only:
             p["enc_norm"]["a_scale"] = s_tilde[0]
 
     if not fold_only:
-        p = _quantize_weights(p, w_bits)
+        p = (_materialize_int8(p, w_bits) if materialize == "int8"
+             else _quantize_weights(p, w_bits))
     return p
 
 

@@ -13,6 +13,24 @@ import jax.numpy as jnp
 import numpy as np
 
 
+# QuantizedParams leaf-naming contract (DESIGN.md section 4): a materialized
+# int8 weight leaf ``<key>`` rides with a per-output-channel dequant scale
+# ``<key>_scale`` (f32 [..., out]) and, at sites with a calibrated static
+# activation scale, a folded per-site scale ``<key>_as`` (f32 scalar per
+# layer). ``models.layers.quant_linear`` dispatches on the weight dtype.
+SCALE_SUFFIX = "_scale"
+ASCALE_SUFFIX = "_as"
+
+
+def is_quantized_weight(leaf) -> bool:
+    """True for a materialized int8 weight leaf of a QuantizedParams tree."""
+    return (
+        hasattr(leaf, "dtype")
+        and leaf.dtype == jnp.int8
+        and getattr(leaf, "ndim", 0) >= 2
+    )
+
+
 def qmax(bits: int) -> int:
     return 2 ** (bits - 1) - 1
 

@@ -93,6 +93,26 @@ def param_specs(cfg: ModelConfig, mesh: Optional[Mesh] = None,
     )
 
 
+def fit_specs_to_tree(specs_tree, params_tree):
+    """Extend a PDef-derived spec tree to cover a *transformed* param tree.
+
+    A PTQ'd tree (and especially a QuantizedParams tree from
+    ``ptq_model(..., materialize="int8")``) carries leaves the abstract
+    param tree does not: ``<w>_scale`` per-channel dequant vectors,
+    ``<w>_as`` / ``a_scale`` / ``wo_a_scale`` activation scales, and folded
+    bias corrections. Leaves whose path exists in the base spec tree keep
+    their spec (the int8 weight has the same shape/axes as its fp
+    ancestor); everything else replicates — scale vectors are tiny.
+    """
+    def walk(spec_node, tree_node):
+        if isinstance(tree_node, dict):
+            base = spec_node if isinstance(spec_node, dict) else {}
+            return {k: walk(base.get(k), v) for k, v in tree_node.items()}
+        return spec_node if isinstance(spec_node, P) else P()
+
+    return walk(specs_tree, params_tree)
+
+
 def batch_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 

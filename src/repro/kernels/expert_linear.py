@@ -23,7 +23,11 @@ Grid is (n_tiles_n, n_work): n outer so all visits to one output tile are
 consecutive; a VMEM accumulator carries partial sums across the (<=2) groups
 sharing a tile and flushes on the last visit. Optional ``w_scale`` [G, N]
 applies per-expert per-channel dequant (int8 expert weights) to each
-partial before accumulation.
+partial before accumulation; optional ``a_scale`` (scalar, SMEM) applies the
+per-tensor activation dequant once at the flush — together they realize the
+single product-of-scales rescale of Eq. 9 on the int32 accumulator, so the
+expert weights are never dequantized outside the kernel (the executable
+QuantizedParams contract, DESIGN.md section 4).
 """
 from __future__ import annotations
 
@@ -66,17 +70,17 @@ def _gmm_kernel(
     row_end,  # [n_work] one-past-last row (start == end for padding)
     x_ref,  # [bm, Din]
     w_ref,  # [1, Din, bn]
-    *rest,  # (w_scale_ref?, o_ref, acc)
+    *rest,  # (w_scale_ref?, a_scale_ref?, o_ref, acc)
     block_m: int,
     n_work: int,
     has_scale: bool,
+    has_ascale: bool,
     int8_full: bool,
 ):
-    if has_scale:
-        ws_ref, o_ref, acc = rest
-    else:
-        ws_ref = None
-        o_ref, acc = rest
+    rest = list(rest)
+    ws_ref = rest.pop(0) if has_scale else None
+    as_ref = rest.pop(0) if has_ascale else None
+    o_ref, acc = rest
     w = pl.program_id(1)
     g = g_ids[w]
     m = m_ids[w]
@@ -110,7 +114,10 @@ def _gmm_kernel(
 
     @pl.when(nxt != m)
     def _flush():
-        o_ref[...] = acc[...].astype(o_ref.dtype)
+        out = acc[...]
+        if has_ascale:
+            out = out * as_ref[0, 0]
+        o_ref[...] = out.astype(o_ref.dtype)
 
 
 def grouped_matmul(
@@ -119,6 +126,7 @@ def grouped_matmul(
     group_sizes: jnp.ndarray,  # [G] int32, sum == T
     *,
     w_scale: Optional[jnp.ndarray] = None,  # [G, Dout] per-expert dequant
+    a_scale: Optional[jnp.ndarray] = None,  # f32 scalar activation dequant
     out_dtype=None,
     block_m: int = 128,
     block_n: int = 128,
@@ -126,6 +134,12 @@ def grouped_matmul(
 ) -> jnp.ndarray:
     T, Din = x.shape
     G, _, Dout = w.shape
+    int8_in = x.dtype == jnp.int8 and w.dtype == jnp.int8
+    if T == 0:  # all groups empty: nothing routed this step
+        return jnp.zeros(
+            (0, Dout),
+            out_dtype or (jnp.float32 if int8_in else x.dtype),
+        )
     block_m = min(block_m, max(T, 1))
     block_n = min(block_n, Dout)
     n_m = pl.cdiv(T, block_m)
@@ -144,6 +158,7 @@ def grouped_matmul(
     if out_dtype is None:
         out_dtype = jnp.float32 if int8_full else x.dtype
     has_scale = w_scale is not None
+    has_ascale = a_scale is not None
 
     in_specs = [
         pl.BlockSpec((block_m, Din), lambda n, wk, g_, m_, s_, e_: (m_[wk], 0)),
@@ -156,12 +171,19 @@ def grouped_matmul(
             pl.BlockSpec((1, block_n), lambda n, wk, g_, m_, s_, e_: (g_[wk], n))
         )
         args.append(wsp)
+    if has_ascale:
+        in_specs.append(
+            pl.BlockSpec((1, 1), lambda n, wk, g_, m_, s_, e_: (0, 0),
+                         memory_space=pltpu.SMEM)
+        )
+        args.append(jnp.asarray(a_scale, jnp.float32).reshape(1, 1))
 
     kernel = functools.partial(
         _gmm_kernel,
         block_m=block_m,
         n_work=n_work,
         has_scale=has_scale,
+        has_ascale=has_ascale,
         int8_full=int8_full,
     )
 

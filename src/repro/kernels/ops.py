@@ -62,15 +62,48 @@ def grouped_matmul(
     x: jnp.ndarray,
     w: jnp.ndarray,
     group_sizes: jnp.ndarray,
+    *,
+    w_scale: Optional[jnp.ndarray] = None,  # [G, Dout] per-expert dequant
+    a_scale: Optional[jnp.ndarray] = None,  # f32 scalar activation scale
+    a_bits: int = 8,
 ) -> jnp.ndarray:
-    """Unified sparse/dense linear: y[t] = x[t] @ w[group(t)]."""
+    """Unified sparse/dense linear: y[t] = x[t] @ w[group(t)].
+
+    int8 weights (QuantizedParams expert stacks) execute as stored: an fp
+    ``x`` is quantized here with the folded ``a_scale``, the contraction
+    accumulates int8 x int8 -> int32, and the product-of-scales dequant
+    lands once on the accumulator — the full-precision expert weights are
+    never materialized outside the kernel.
+    """
     mode = _mode()
+    int8_w = w.dtype == jnp.int8
+    if int8_w and x.dtype != jnp.int8:
+        if a_scale is None:
+            raise ValueError(
+                "int8 grouped weights need the folded activation scale "
+                "(a PTQ int8 tree carries it as the `wi_as` / `wo_a_scale` "
+                "leaf — was the model calibrated with taps?)"
+            )
+        from repro.core.quant.qtypes import quantize_sym
+
+        x = quantize_sym(x.astype(jnp.float32), a_scale, a_bits)
     if mode in ("pallas", "interpret"):
         from repro.kernels.expert_linear import grouped_matmul as gmm
 
-        return gmm(x, w, group_sizes, interpret=(mode == "interpret"))
+        return gmm(x, w, group_sizes, w_scale=w_scale, a_scale=a_scale,
+                   interpret=(mode == "interpret"))
     # ragged_dot is the fast XLA path on CPU/GPU (grouped_matmul_ref is the
     # oracle used by tests; ragged_dot matches it exactly).
+    if int8_w:
+        acc = jax.lax.ragged_dot(x, w, group_sizes.astype(jnp.int32),
+                                 preferred_element_type=jnp.int32)
+        y = acc.astype(jnp.float32)
+        seg = _row_groups(group_sizes, x.shape[0])
+        if w_scale is not None:
+            y = y * w_scale[seg]
+        if a_scale is not None:
+            y = y * a_scale
+        return y
     return jax.lax.ragged_dot(x, w, group_sizes.astype(jnp.int32))
 
 
@@ -91,7 +124,10 @@ def grouped_mlp(
     bo: Optional[jnp.ndarray] = None,  # [G, out] per-expert fc2 bias
     taps=None,  # PTQ calibration collector (records the fc2 input site)
     mid_a_scale: Optional[jnp.ndarray] = None,  # PTQ runtime fc2-input scale
-    mid_a_bits: int = 8,
+    a_bits: int = 8,  # activation quantizer width (fc1 + fc2 inputs)
+    wi_scale: Optional[jnp.ndarray] = None,  # [G, hid] int8 fc1 dequant
+    wo_scale: Optional[jnp.ndarray] = None,  # [G, out] int8 fc2 dequant
+    wi_a_scale: Optional[jnp.ndarray] = None,  # folded fc1 input scale
 ) -> jnp.ndarray:
     from repro.core.quant.calibrate import maybe_record
     from repro.models.layers import act_fn
@@ -99,7 +135,8 @@ def grouped_mlp(
     seg = None
     if bi is not None or bo is not None:
         seg = _row_groups(group_sizes, x.shape[0])
-    h = grouped_matmul(x, wi, group_sizes)
+    h = grouped_matmul(x, wi, group_sizes, w_scale=wi_scale,
+                       a_scale=wi_a_scale, a_bits=a_bits)
     if bi is not None:
         h = h + bi[seg]
     if glu:
@@ -108,13 +145,19 @@ def grouped_mlp(
     else:
         h = act_fn(act)(h)
     maybe_record(taps, "moe_mid", h)
-    if mid_a_scale is not None:
-        from repro.core.quant.linear_quant import fake_quant_activation
+    if wo.dtype == jnp.int8:
+        # real-int8 fc2: mid_a_scale is the *actual* quantizer here (same
+        # value the fake-quant oracle clips to — identical grids)
+        y = grouped_matmul(h, wo, group_sizes, w_scale=wo_scale,
+                           a_scale=mid_a_scale, a_bits=a_bits)
+    else:
+        if mid_a_scale is not None:
+            from repro.core.quant.linear_quant import fake_quant_activation
 
-        h = fake_quant_activation(
-            h.astype(jnp.float32), mid_a_scale, bits=mid_a_bits
-        ).astype(h.dtype)
-    y = grouped_matmul(h, wo, group_sizes)
+            h = fake_quant_activation(
+                h.astype(jnp.float32), mid_a_scale, bits=a_bits
+            ).astype(h.dtype)
+        y = grouped_matmul(h, wo, group_sizes)
     if bo is not None:
         y = y + bo[seg]
     return y

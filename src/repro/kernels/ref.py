@@ -115,6 +115,27 @@ def grouped_matmul_ref(
                       w_per_row.astype(jnp.float32)).astype(x.dtype)
 
 
+def grouped_matmul_q_ref(
+    x_q: jnp.ndarray,  # int8 [T, Din] rows sorted by group
+    w_q: jnp.ndarray,  # int8 [G, Din, Dout]
+    group_sizes: jnp.ndarray,  # [G] int32, sum == T
+    w_scale: jnp.ndarray,  # f32 [G, Dout] per-expert per-channel dequant
+    a_scale: Optional[jnp.ndarray] = None,  # f32 scalar activation dequant
+) -> jnp.ndarray:
+    """int8 grouped oracle: exact int32 accumulate, then the Eq. 9
+    product-of-scales rescale (per-expert per-channel x per-tensor)."""
+    T = x_q.shape[0]
+    ends = jnp.cumsum(group_sizes)
+    seg = jnp.searchsorted(ends, jnp.arange(T), side="right")  # [T] group ids
+    acc = jnp.einsum(
+        "td,tdf->tf", x_q.astype(jnp.int32), w_q[seg].astype(jnp.int32)
+    )  # oracle only: the int8 gather is never materialized on TPU
+    y = acc.astype(jnp.float32) * w_scale[seg]
+    if a_scale is not None:
+        y = y * a_scale
+    return y
+
+
 def grouped_mlp_ref(
     x: jnp.ndarray,  # [T, D] sorted by group
     wi: jnp.ndarray,  # [G, D, Dh]  (Dh = 2*ff for GLU)

@@ -140,7 +140,7 @@ def _decoder(params, cfg, x, memory, *, positions, caches=None,
 def compute_cross_kv(params, cfg: ModelConfig, memory: jnp.ndarray) -> dict:
     """Per-decoder-layer cross K/V from encoder memory (prefill, once)."""
     def one(lp):
-        k, v = project_memory_kv(memory, lp["xattn"], cfg.attn)
+        k, v = project_memory_kv(memory, lp["xattn"], cfg.attn, cfg)
         return {"k": k, "v": v}
 
     return jax.lax.map(one, params["dec_layers"])

@@ -64,6 +64,61 @@ def maybe_fake_quant(x: jnp.ndarray, p: dict, key: str, cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
+# The quantized/full-precision linear seam (DESIGN.md section 4)
+# ---------------------------------------------------------------------------
+
+def quant_linear(x: jnp.ndarray, p: dict, key: str,
+                 cfg: ModelConfig) -> jnp.ndarray:
+    """Apply the linear layer stored at ``p[key]`` — the single seam every
+    linear call site (QKV, out-proj, MLP fc1/fc2, gate, head, patch/frontend
+    projections) routes through.
+
+    Dispatch is on the weight leaf dtype:
+
+      * fp leaf — the plain matmul (FP and fake-quant models; fake-quant
+        weights are f32 values on the int8 grid, the numerical oracle);
+      * int8 leaf (``ptq_model(..., materialize="int8")``) — quantize the
+        incoming activation with the folded per-site ``<key>_as`` scale and
+        run the int8 kernel (``kernels/int8_matmul.py``), dequantizing once
+        on the int32 accumulator (Eq. 9). Sites with no calibrated
+        activation scale (raw-input projections, e.g. patch_proj) keep the
+        activation fp; the per-output-channel weight scale factors out of
+        the contraction and is applied once to the accumulator.
+
+    MoE expert *stacks* do not pass through here — they go through
+    ``kernels.ops.grouped_mlp`` with ``w_scale=`` (the grouped analogue of
+    the same contract).
+    """
+    w = p[key]
+    if w.dtype != jnp.int8:
+        return x @ w
+    from repro.core.quant.qtypes import (
+        ASCALE_SUFFIX,
+        SCALE_SUFFIX,
+        quantize_sym,
+    )
+    from repro.kernels import ops  # lazy: avoids import cycle
+
+    w_scale = p[key + SCALE_SUFFIX]
+    # out-proj sites reuse the oracle's per-tensor mid scale (one leaf, no
+    # duplicated `wo_as` copy that could drift from it)
+    a_scale = p.get(key + ASCALE_SUFFIX,
+                    p.get("wo_a_scale") if key == "wo" else None)
+    lead, d_in = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, d_in)
+    if a_scale is None:
+        # Weight-only site: x stays fp; s_w is per-output-channel, so it
+        # commutes out of the contraction — the int8->f32 convert fuses
+        # into the dot and the rescale touches only the [out] vector.
+        y = (x2.astype(jnp.float32) @ w.astype(jnp.float32)) * w_scale
+    else:
+        x_q = quantize_sym(x2.astype(jnp.float32), a_scale,
+                           cfg.quant.a_bits)
+        y = ops.int8_matmul(x_q, w, a_scale, w_scale)
+    return y.reshape(lead + (w.shape[-1],)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Activations
 # ---------------------------------------------------------------------------
 
@@ -82,7 +137,7 @@ def mlp_apply(x: jnp.ndarray, p: dict, cfg: ModelConfig, taps=None) -> jnp.ndarr
     from repro.core.quant.calibrate import maybe_record
 
     a = act_fn(cfg.act)
-    h = x @ p["wi"]
+    h = quant_linear(x, p, "wi", cfg)
     if "bi" in p:
         h = h + p["bi"]
     if cfg.glu:
@@ -91,8 +146,9 @@ def mlp_apply(x: jnp.ndarray, p: dict, cfg: ModelConfig, taps=None) -> jnp.ndarr
     else:
         h = a(h)
     maybe_record(taps, "mlp_mid", h)
-    h = maybe_fake_quant(h, p, "wo_a_scale", cfg)
-    y = h @ p["wo"]
+    if p["wo"].dtype != jnp.int8:
+        h = maybe_fake_quant(h, p, "wo_a_scale", cfg)
+    y = quant_linear(h, p, "wo", cfg)
     if "bo" in p:
         y = y + p["bo"]
     return y
@@ -132,11 +188,14 @@ def quantize_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     return q.astype(jnp.int8), scale.astype(jnp.float32)
 
 
-def project_memory_kv(memory: jnp.ndarray, p: dict, a: AttnConfig) -> tuple:
+def project_memory_kv(memory: jnp.ndarray, p: dict, a: AttnConfig,
+                      cfg: Optional[ModelConfig] = None) -> tuple:
     """Cross-attention K/V from encoder memory (computed once, then cached)."""
     B, S_enc = memory.shape[0], memory.shape[1]
-    k = (memory @ p["wk"]).reshape(B, S_enc, a.num_kv_heads, a.head_dim)
-    v = (memory @ p["wv"]).reshape(B, S_enc, a.num_kv_heads, a.head_dim)
+    k = quant_linear(memory, p, "wk", cfg).reshape(
+        B, S_enc, a.num_kv_heads, a.head_dim)
+    v = quant_linear(memory, p, "wv", cfg).reshape(
+        B, S_enc, a.num_kv_heads, a.head_dim)
     if "bk" in p:
         k = k + p["bk"].reshape(1, 1, a.num_kv_heads, a.head_dim)
         v = v + p["bv"].reshape(1, 1, a.num_kv_heads, a.head_dim)
@@ -167,14 +226,16 @@ def attention_block(
 
     B, S, D = x.shape
     src = memory if memory is not None else x
-    q = (x @ p["wq"]).reshape(B, S, a.num_heads, a.head_dim)
+    q = quant_linear(x, p, "wq", cfg).reshape(B, S, a.num_heads, a.head_dim)
     if "bq" in p:
         q = q + p["bq"].reshape(1, 1, a.num_heads, a.head_dim)
     if memory_kv is not None:
         k, v = memory_kv
     else:
-        k = (src @ p["wk"]).reshape(B, src.shape[1], a.num_kv_heads, a.head_dim)
-        v = (src @ p["wv"]).reshape(B, src.shape[1], a.num_kv_heads, a.head_dim)
+        k = quant_linear(src, p, "wk", cfg).reshape(
+            B, src.shape[1], a.num_kv_heads, a.head_dim)
+        v = quant_linear(src, p, "wv", cfg).reshape(
+            B, src.shape[1], a.num_kv_heads, a.head_dim)
         if "bk" in p:
             k = k + p["bk"].reshape(1, 1, a.num_kv_heads, a.head_dim)
             v = v + p["bv"].reshape(1, 1, a.num_kv_heads, a.head_dim)
@@ -275,8 +336,9 @@ def attention_block(
 
     out = out.reshape(B, S, a.num_heads * a.head_dim)
     maybe_record(taps, "attn_out", out)
-    out = maybe_fake_quant(out, p, "wo_a_scale", cfg)
-    y = out @ p["wo"]
+    if p["wo"].dtype != jnp.int8:
+        out = maybe_fake_quant(out, p, "wo_a_scale", cfg)
+    y = quant_linear(out, p, "wo", cfg)
     if "bo" in p:
         y = y + p["bo"]
     return y, new_cache

@@ -95,6 +95,25 @@ def param_count_tree(tree) -> int:
     return sum(int(jnp.prod(jnp.asarray(p.shape))) for p in leaves)
 
 
+def tree_shapes(tree):
+    """ShapeDtypeStructs of a *concrete* param tree (PDef trees go through
+    ``param_shapes``). Works on transformed trees — e.g. a QuantizedParams
+    tree whose int8/scale leaves no abstract template describes — and is
+    what serving/checkpointing use as a restore/lowering template."""
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree
+    )
+
+
+def tree_bytes(tree) -> int:
+    """Total parameter bytes of a concrete tree, honoring leaf dtypes —
+    an int8-materialized tree reports ~4x less than its fp32 ancestor."""
+    return sum(
+        int(jnp.prod(jnp.asarray(a.shape))) * jnp.dtype(a.dtype).itemsize
+        for a in jax.tree.leaves(tree)
+    )
+
+
 # Convenience constructors -------------------------------------------------
 
 def dense(d_in: int, d_out: int, ax_in: Optional[str], ax_out: Optional[str],

@@ -20,7 +20,12 @@ from repro.core.moe.dispatch import (
 )
 from repro.core.moe.router import route_topk
 from repro.core.quant.calibrate import maybe_record
-from repro.models.layers import apply_norm, attention_block, mlp_apply
+from repro.models.layers import (
+    apply_norm,
+    attention_block,
+    mlp_apply,
+    quant_linear,
+)
 from repro.models.param import PDef, dense, stack_tree, vector
 
 
@@ -122,7 +127,20 @@ def _moe_apply(x: jnp.ndarray, p: dict, cfg: ModelConfig, taps=None):
     B, S, D = x.shape
     T = B * S
     xt = x.reshape(T, D)
-    r = route_topk(xt, p["gate"], p.get("gate_b"), m.top_k)
+    # int8 gate: its matmul runs through the quant seam (the gate weight is
+    # quantized like any other post-norm consumer); fp gates keep the
+    # router's own f32 matmul
+    gate_logits = (quant_linear(xt, p, "gate", cfg)
+                   if p["gate"].dtype == jnp.int8 else None)
+    r = route_topk(xt, p["gate"], p.get("gate_b"), m.top_k,
+                   logits=gate_logits)
+    wi, wo = p["wi"], p["wo"]
+    if wi.dtype == jnp.int8 and m.impl == "gshard":
+        # The capacity-einsum path is the training/dry-run fallback; it has
+        # no int8 contraction, so dequantize on the fly. The serving path
+        # (impl="grouped") executes int8 inside the kernel instead.
+        wi = wi.astype(jnp.float32) * p["wi_scale"][..., None, :]
+        wo = wo.astype(jnp.float32) * p["wo_scale"][..., None, :]
     if m.impl == "gshard":
         # Hierarchical (grouped) GShard: tokens split into G groups with
         # per-group capacity so the dispatch one-hot is [G, Tg, E, Cg]
@@ -144,7 +162,7 @@ def _moe_apply(x: jnp.ndarray, p: dict, cfg: ModelConfig, taps=None):
             )
         )(xg, eg, wg)
         ein = jnp.einsum("gtec,gtd->gecd", disp.astype(x.dtype), xg)
-        h = jnp.einsum("gecd,edh->gech", ein, p["wi"])
+        h = jnp.einsum("gecd,edh->gech", ein, wi)
         if "bi" in p:
             h = h + p["bi"][None, :, None, :]
         if cfg.glu:
@@ -152,7 +170,11 @@ def _moe_apply(x: jnp.ndarray, p: dict, cfg: ModelConfig, taps=None):
             h = act_fn(cfg.act)(g) * u
         else:
             h = act_fn(cfg.act)(h)
-        eout = jnp.einsum("gech,ehd->gecd", h, p["wo"])
+        # record the fc2-input site here too: gshard-calibrated models must
+        # still produce the wo_a_scale leaf the grouped serving path
+        # (fake-quant AND materialized-int8) quantizes with
+        maybe_record(taps, "moe_mid", h)
+        eout = jnp.einsum("gech,ehd->gecd", h, wo)
         if "bo" in p:
             eout = eout + p["bo"][None, :, None, :]
         y = jnp.einsum("gtec,gecd->gtd", comb.astype(x.dtype), eout)
@@ -163,7 +185,9 @@ def _moe_apply(x: jnp.ndarray, p: dict, cfg: ModelConfig, taps=None):
             dsp.x_sorted, p["wi"], p["wo"], dsp.group_sizes,
             act=cfg.act, glu=cfg.glu, bi=p.get("bi"), bo=p.get("bo"),
             taps=taps, mid_a_scale=p.get("wo_a_scale"),
-            mid_a_bits=cfg.quant.a_bits,
+            a_bits=cfg.quant.a_bits,
+            wi_scale=p.get("wi_scale"), wo_scale=p.get("wo_scale"),
+            wi_a_scale=p.get("wi_as"),
         )
         y = grouped_combine(y_sorted, dsp, B * S)
     return y.reshape(B, S, D), r.aux_loss
@@ -202,7 +226,8 @@ def _block(x, p, cfg, *, positions, local_window, causal=True,
 def _embed_inputs(params, cfg, tokens, frontend_embeds):
     x = params["embed"][tokens]  # [B, S_text, D]
     if cfg.frontend and frontend_embeds is not None:
-        fe = frontend_embeds.astype(x.dtype) @ params["frontend_proj"]
+        fe = quant_linear(frontend_embeds.astype(x.dtype), params,
+                          "frontend_proj", cfg)
         x = jnp.concatenate([fe, x], axis=1)
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
@@ -289,7 +314,7 @@ def logits_from_hidden(params, cfg, x, taps=None):
     if cfg.tie_embeddings:
         logits = x @ params["embed"].T
     else:
-        logits = x @ params["lm_head"]
+        logits = quant_linear(x, params, "lm_head", cfg)
         if "lm_head_b" in params:  # PTQ final-norm fold correction
             logits = logits + params["lm_head_b"]
     if cfg.final_logit_softcap > 0:

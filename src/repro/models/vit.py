@@ -14,7 +14,12 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.quant.calibrate import maybe_record
-from repro.models.layers import apply_norm, attention_block, mlp_apply
+from repro.models.layers import (
+    apply_norm,
+    attention_block,
+    mlp_apply,
+    quant_linear,
+)
 from repro.models.param import PDef, dense, stack_tree, vector
 from repro.models.transformer import (
     _attn_pdefs,
@@ -85,7 +90,11 @@ def forward(params, cfg: ModelConfig, patches: jnp.ndarray,
             frontend_embeds=None, taps=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """patches: [B, image_tokens-1, PATCH_DIM] -> (class logits [B, C], aux)."""
     B = patches.shape[0]
-    x = patches.astype(params["patch_proj"].dtype) @ params["patch_proj"] + params["patch_bias"]
+    w_pp = params["patch_proj"]
+    patches = patches.astype(
+        jnp.float32 if w_pp.dtype == jnp.int8 else w_pp.dtype
+    )
+    x = quant_linear(patches, params, "patch_proj", cfg) + params["patch_bias"]
     cls = jnp.broadcast_to(params["cls_token"], (B, 1, cfg.d_model)).astype(x.dtype)
     x = jnp.concatenate([cls, x], axis=1) + params["pos_embed"]
     positions = jnp.arange(x.shape[1], dtype=jnp.int32)
@@ -131,5 +140,5 @@ def forward(params, cfg: ModelConfig, patches: jnp.ndarray,
 
     x = apply_norm(x, params["final_norm"], cfg)
     maybe_record(taps, "final_norm", x)
-    logits = x[:, 0, :] @ params["head"] + params["head_b"]
+    logits = quant_linear(x[:, 0, :], params, "head", cfg) + params["head_b"]
     return logits, aux_total

@@ -24,6 +24,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.distributed.sharding_rules import (
     SERVING_RULES,
     cache_specs,
+    fit_specs_to_tree,
     input_shardings,
     param_specs,
 )
@@ -53,9 +54,18 @@ def lowering_config(cfg: ModelConfig) -> ModelConfig:
 
 
 def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
-                     *, donate_cache: bool = True, for_lowering: bool = False):
+                     *, donate_cache: bool = True, for_lowering: bool = False,
+                     params=None):
     """Jitted decode step: (params, tokens [B,1], cache, index) ->
-    (logits, new_cache). The cache buffer is donated (updated in place)."""
+    (logits, new_cache). The cache buffer is donated (updated in place).
+
+    ``params``: pass the *actual* (possibly PTQ-transformed) param tree when
+    it differs structurally from ``models.abstract_params`` — e.g. a
+    QuantizedParams tree from ``ptq_model(..., materialize="int8")`` with
+    int8 weight leaves plus ``_scale``/``_as`` siblings. The in_shardings
+    are fitted to that tree (int8 weights inherit their fp ancestors' specs;
+    scale leaves replicate) so the decode step executes the stored int8
+    format directly through the int8 kernels."""
     cfg = lowering_config(cfg) if for_lowering else serving_config(cfg)
     mod = models.module_for(cfg)
 
@@ -63,6 +73,8 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
         return mod.decode_step(params, cfg, tokens, cache, index)
 
     p_specs = param_specs(cfg, mesh, rules=SERVING_RULES)
+    if params is not None:
+        p_specs = fit_specs_to_tree(p_specs, params)
     in_tree = models.input_specs(cfg, shape)
     b_specs = input_shardings(cfg, shape, mesh, in_tree)
     named = lambda tree: jax.tree.map(
@@ -94,6 +106,10 @@ class ServeEngine:
     """Slot-based batched generation (single-host driver).
 
     greedy sampling; per-slot bookkeeping on host, all model math jitted.
+    ``params`` may be an FP tree, a fake-quant PTQ tree, or a QuantizedParams
+    tree (``ptq_model(..., materialize="int8")``) — the int8 case decodes
+    through the int8 kernels via the ``quant_linear``/``grouped_mlp`` seams,
+    executing the weights in their stored format.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,

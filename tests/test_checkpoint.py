@@ -75,6 +75,48 @@ def test_restore_onto_sharding(tmp_path):
     assert r["params"]["w"].sharding == NamedSharding(mesh, P())
 
 
+def test_quantized_tree_roundtrip_and_structure_free_restore(tmp_path):
+    """A QuantizedParams tree (int8 weights + f32 scale siblings) keeps
+    exact dtypes on disk, and ``restore(None)`` rebuilds the nested tree
+    from the manifest alone — no abstract-param template describes a PTQ'd
+    structure."""
+    rng = np.random.default_rng(0)
+    tree = {
+        "layers": {
+            "attn": {
+                "wq": jnp.asarray(
+                    rng.integers(-128, 128, (2, 8, 8)), jnp.int8),
+                "wq_scale": jnp.asarray(rng.random((2, 8)), jnp.float32),
+                "wq_as": jnp.asarray(rng.random(2), jnp.float32),
+            },
+            "ln1": {"scale": jnp.ones((2, 8)), "a_scale": jnp.ones((2,))},
+        },
+        "head": jnp.asarray(rng.integers(-128, 128, (8, 4)), jnp.int8),
+        "head_scale": jnp.asarray(rng.random(4), jnp.float32),
+    }
+    m = CheckpointManager(str(tmp_path))
+    m.save(1, tree, blocking=True)
+    for restored in (m.restore(tree), m.restore(None)):
+        flat_t = {k: v for k, v in _flatten_pairs(tree)}
+        flat_r = {k: v for k, v in _flatten_pairs(restored)}
+        assert flat_t.keys() == flat_r.keys()
+        for k in flat_t:
+            assert flat_t[k].dtype == flat_r[k].dtype, k
+            np.testing.assert_array_equal(
+                np.asarray(flat_t[k]), np.asarray(flat_r[k]))
+    # int8 leaves are stored int8 (1 byte/param) on disk
+    arr = np.load(tmp_path / "step_00000001" / "layers__attn__wq.npy")
+    assert arr.dtype == np.int8
+
+
+def _flatten_pairs(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _flatten_pairs(v, f"{prefix}{k}/")
+    else:
+        yield prefix[:-1], tree
+
+
 def test_async_save_overlaps_and_waits(tmp_path):
     m = CheckpointManager(str(tmp_path))
     t = _tree()

@@ -1,0 +1,238 @@
+"""The executable int8 parameter path (DESIGN.md section 4).
+
+Covers the QuantizedParams contract end to end: the int8 grouped kernel vs
+the f32 oracle (including empty groups, in interpret mode), the
+materialization contract of ``ptq_model(..., materialize="int8")``, logit
+fidelity of the real-int8 forward against the fake-quant oracle, the
+no-fp-expert-copy property of the jitted forward, and serving decode on a
+quantized tree.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models as M
+from repro.configs import get_shape, smoke_config
+from repro.core.quant.qtypes import quantize_sym
+from repro.core.quant.ptq import calibrate_model, ptq_model, quantized_config
+from repro.kernels import ref
+from repro.kernels.expert_linear import grouped_matmul
+from repro.serving.engine import Request, ServeEngine, build_serve_step
+
+
+# ---------------------------------------------------------------------------
+# Kernel level: int8_full grouped matmul + w_scale/a_scale dequant
+# ---------------------------------------------------------------------------
+
+INT8_GROUP_CASES = [
+    (4, 64, 96, [40, 0, 17, 71]),
+    (1, 64, 64, [130]),  # dense mode
+    (8, 32, 32, [0, 0, 5, 0, 123, 1, 0, 16]),  # mostly-empty groups
+    (3, 32, 48, [0, 0, 0]),  # fully empty: zero tokens routed
+    (5, 64, 64, [0, 300, 0, 0, 1]),
+]
+
+
+@pytest.mark.parametrize("G,Din,Dout,sizes", INT8_GROUP_CASES)
+@pytest.mark.parametrize("with_ascale", [False, True])
+def test_grouped_matmul_int8_full_matches_f32_ref(rng, G, Din, Dout, sizes,
+                                                  with_ascale):
+    """int8 x int8 grouped kernel (interpret mode, real kernel body on CPU)
+    vs the f32 dequantized reference across ragged group sizes."""
+    T = sum(sizes)
+    gs = jnp.asarray(sizes, jnp.int32)
+    xf = rng.standard_normal((T, Din)).astype(np.float32)
+    a_scale = jnp.asarray(max(np.abs(xf).max(), 1e-6) / 127.0, jnp.float32) \
+        if T else jnp.asarray(0.05, jnp.float32)
+    x_q = quantize_sym(jnp.asarray(xf), a_scale, 8)
+    wf = rng.standard_normal((G, Din, Dout)).astype(np.float32)
+    w_scale = np.maximum(np.abs(wf).max(axis=1), 1e-8) / 127.0  # [G, Dout]
+    w_q = np.clip(np.round(wf / w_scale[:, None, :]), -127, 127).astype(np.int8)
+
+    y = grouped_matmul(
+        x_q, jnp.asarray(w_q), gs,
+        w_scale=jnp.asarray(w_scale),
+        a_scale=a_scale if with_ascale else None,
+        block_m=32, block_n=32, interpret=True,
+    )
+    # f32 reference over the dequantized operands
+    y_ref = ref.grouped_matmul_ref(
+        x_q.astype(jnp.float32) * (a_scale if with_ascale else 1.0),
+        jnp.asarray(w_q.astype(np.float32) * w_scale[:, None, :]), gs,
+    )
+    assert y.shape == (T, Dout) and y.dtype == jnp.float32
+    # kernel accumulates exactly in int32; the reference rounds per-fma in
+    # f32, so the tolerance covers the *reference's* accumulation error
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=1e-3)
+    # and against the dedicated int8 oracle (exact int32 accumulation)
+    y_q_ref = ref.grouped_matmul_q_ref(
+        x_q, jnp.asarray(w_q), gs, jnp.asarray(w_scale),
+        a_scale if with_ascale else None,
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_q_ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# PTQ materialization + end-to-end fidelity on the paper's MoE-ViT
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def moe_vit_ptq():
+    cfg = smoke_config("m3vit-small").replace(remat=False)
+    shape = get_shape("train_4k").replace(seq_len=24, global_batch=2)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    batches = [M.synth_batch(cfg, shape, jax.random.PRNGKey(i))
+               for i in range(2)]
+    taps = calibrate_model(cfg, params, batches)
+    return cfg, params, batches, taps
+
+
+def test_int8_materialization_contract(moe_vit_ptq):
+    """Quantized weight leaves are stored jnp.int8 with per-output-channel
+    scale siblings and folded per-site activation scales."""
+    cfg, params, batches, taps = moe_vit_ptq
+    p = ptq_model(cfg, params, taps, materialize="int8")
+    moe = p["pairs_moe"]["moe"]
+    n_pairs = cfg.num_layers // 2
+    E, D = cfg.moe.num_experts, cfg.d_model
+    hid = cfg.moe.d_ff * (2 if cfg.glu else 1)
+    assert moe["wi"].dtype == jnp.int8
+    assert moe["wi"].shape == (n_pairs, E, D, hid)
+    assert moe["wi_scale"].shape == (n_pairs, E, hid)
+    assert moe["wi_as"].shape == (n_pairs,)  # folded ln2 s_tilde
+    assert moe["wo"].dtype == jnp.int8
+    assert moe["wo_scale"].shape == (n_pairs, E, D)
+    assert moe["wo_a_scale"].shape == (n_pairs,)
+    attn = p["pairs_dense"]["attn"]
+    for k in ("wq", "wk", "wv", "wo"):
+        assert attn[k].dtype == jnp.int8
+        assert attn[k + "_scale"].dtype == jnp.float32
+    for k in ("wq", "wk", "wv"):  # post-norm consumers: folded s_tilde
+        assert attn[k + "_as"].shape == (n_pairs,)
+    # the out-proj reuses the oracle's wo_a_scale leaf (no wo_as duplicate)
+    assert "wo_as" not in attn and attn["wo_a_scale"].shape == (n_pairs,)
+    assert p["head"].dtype == jnp.int8
+    assert p["patch_proj"].dtype == jnp.int8  # weight-only site: no _as
+    assert "patch_proj_as" not in p
+    # the fake-quant oracle keeps fp leaves everywhere
+    p_fake = ptq_model(cfg, params, taps)
+    assert all(leaf.dtype != jnp.int8 for leaf in jax.tree.leaves(p_fake))
+
+
+def test_int8_forward_matches_fake_quant_oracle(moe_vit_ptq):
+    """Real-int8 execution and the quantize-dequantize simulation are the
+    same computation up to accumulation-order rounding."""
+    cfg, params, batches, taps = moe_vit_ptq
+    qcfg = quantized_config(cfg)
+    p_fake = ptq_model(cfg, params, taps)
+    p_int8 = ptq_model(cfg, params, taps, materialize="int8")
+    lg_fake, _ = M.forward(p_fake, qcfg, batches[0])
+    lg_int8, _ = M.forward(p_int8, qcfg, batches[0])
+    assert bool(jnp.isfinite(lg_int8).all())
+    scale = float(jnp.std(lg_fake)) + 1e-9
+    assert float(jnp.max(jnp.abs(lg_fake - lg_int8))) / scale < 1e-4
+
+
+def test_fold_only_remains_fp_equivalent(moe_vit_ptq):
+    """materialize= must not disturb the fold_only contract: no int8
+    leaves, numerically equivalent to FP."""
+    cfg, params, batches, taps = moe_vit_ptq
+    p_fold = ptq_model(cfg, params, taps, fold_only=True,
+                       materialize="int8")
+    assert all(leaf.dtype != jnp.int8 for leaf in jax.tree.leaves(p_fold))
+    lg0, _ = M.forward(params, cfg, batches[0])
+    lg1, _ = M.forward(p_fold, cfg, batches[0])
+    scale = float(jnp.std(lg0)) + 1e-9
+    assert float(jnp.max(jnp.abs(lg0 - lg1))) / scale < 1e-3
+
+
+def test_jitted_forward_materializes_no_fp_expert_copy(moe_vit_ptq):
+    """The jitted moe_vit forward consumes the int8 expert stacks directly
+    (grouped int8 contraction); no f32/bf16 dequantized copy of the expert
+    weights appears anywhere in the program."""
+    cfg, params, batches, taps = moe_vit_ptq
+    qcfg = quantized_config(cfg)
+    p_int8 = ptq_model(cfg, params, taps, materialize="int8")
+    jaxpr = str(jax.make_jaxpr(
+        lambda p, b: M.forward(p, qcfg, b)[0]
+    )(p_int8, batches[0]))
+    n_pairs = cfg.num_layers // 2
+    E, D = qcfg.moe.num_experts, qcfg.d_model
+    hid = qcfg.moe.d_ff * (2 if qcfg.glu else 1)
+    fp_expert_shapes = [
+        f"{dt}[{dims}]"
+        for dt in ("f32", "bf16")
+        for dims in (
+            f"{E},{D},{hid}", f"{n_pairs},{E},{D},{hid}",
+            f"{E},{qcfg.moe.d_ff},{D}", f"{n_pairs},{E},{qcfg.moe.d_ff},{D}",
+        )
+    ]
+    leaked = [s for s in fp_expert_shapes if s in jaxpr]
+    assert not leaked, f"fp dequantized expert weight copies found: {leaked}"
+    # the int8 stacks themselves are consumed by the program
+    assert f"i8[{n_pairs},{E},{D},{hid}]" in jaxpr
+    # and the grouped contraction executes on them (ragged_dot is the
+    # CPU/ref lowering of kernels.ops.grouped_matmul; TPU runs the Pallas
+    # kernel, validated in interpret mode above)
+    assert "ragged_dot" in jaxpr
+
+
+# ---------------------------------------------------------------------------
+# Serving: ServeEngine decode + build_serve_step over a QuantizedParams tree
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def moe_lm_ptq():
+    cfg = smoke_config("olmoe-1b-7b").replace(remat=False)
+    shape = get_shape("train_4k").replace(seq_len=24, global_batch=2)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    batches = [M.synth_batch(cfg, shape, jax.random.PRNGKey(i))
+               for i in range(2)]
+    taps = calibrate_model(cfg, params, batches)
+    qcfg = quantized_config(cfg)
+    return qcfg, ptq_model(cfg, params, taps), \
+        ptq_model(cfg, params, taps, materialize="int8")
+
+
+def test_serve_engine_decodes_int8_params(moe_lm_ptq):
+    """Continuous-batching decode over the stored-int8 tree matches the
+    fake-quant engine token for token (greedy)."""
+    qcfg, p_fake, p_int8 = moe_lm_ptq
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, qcfg.vocab_size, n).astype(np.int32)
+               for n in (5, 3)]
+    outs = []
+    for p in (p_int8, p_fake):
+        eng = ServeEngine(qcfg, p, batch_slots=2, max_len=32)
+        reqs = [Request(uid=i, prompt=pr, max_new_tokens=4)
+                for i, pr in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        outs.append([tuple(r.generated) for r in reqs])
+    assert outs[0] == outs[1]
+
+
+def test_build_serve_step_accepts_quantized_params(moe_lm_ptq):
+    """The jitted decode step lowers and runs with int8 weight leaves and
+    their scale siblings (specs fitted to the actual tree)."""
+    from repro.launch.mesh import make_host_mesh
+
+    qcfg, _, p_int8 = moe_lm_ptq
+    B, S = 2, 16
+    shape = get_shape("decode_32k").replace(seq_len=S, global_batch=B)
+    mesh = make_host_mesh()
+    step = build_serve_step(qcfg, shape, mesh, donate_cache=False,
+                            params=p_int8)
+    mod = M.module_for(qcfg)
+    cache = mod.init_cache(qcfg, B, S, dtype=jnp.bfloat16)
+    tokens = jnp.zeros((B, 1), jnp.int32)
+    logits, new_cache = step(p_int8, tokens, cache,
+                             jnp.zeros((), jnp.int32))
+    assert logits.shape == (B, 1, qcfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())

@@ -3,7 +3,7 @@ router, sharding-spec fitting, the ring cache, and the chunked scan."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.kernels.expert_linear import _route_metadata
 
