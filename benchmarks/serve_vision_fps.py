@@ -1,0 +1,191 @@
+"""Measured end-to-end vision-serving FPS (paper Tables 3/4 counterpart).
+
+Unlike ``table34_throughput.py`` (analytic roofline projection + bare jitted
+forward), this drives the full request path — scheduler, padded bucket
+batches, double-buffered dispatch, top-k responses — through ``VisionEngine``
+and reports *measured* frames/second, putting a real number next to the
+paper's ~155 FPS row.
+
+Sweeps: fp32 vs materialized-int8 ``QuantizedParams`` (the stored-int8
+weights execute through the int8 kernels; no fp expert copy), across batch
+buckets (closed loop: everything queued up front, full batches form) and —
+in full mode — offered load (open loop: paced arrivals at fractions of the
+measured closed-loop capacity, latency under load).
+
+Writes ``BENCH_serving.json`` (schema in DESIGN.md section 6).
+
+  PYTHONPATH=src python benchmarks/serve_vision_fps.py --smoke
+  PYTHONPATH=src python benchmarks/serve_vision_fps.py --arch m3vit-tiny
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+import repro.models as M
+from repro.configs import PAPER_ARCHS, get_shape, smoke_config
+from repro.core.quant.ptq import calibrate_model, ptq_model, quantized_config
+from repro.serving.vision import VisionEngine, synth_requests
+
+
+def build_variants(cfg):
+    """[(label, runtime cfg, params)] — fp32 and materialized int8."""
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    shape = get_shape("train_4k").replace(seq_len=24, global_batch=2)
+    calib = [M.synth_batch(cfg, shape, jax.random.PRNGKey(i))
+             for i in range(2)]
+    taps = calibrate_model(cfg, params, calib)
+    p_int8 = ptq_model(cfg, params, taps, materialize="int8")
+    return [("fp32", cfg, params), ("int8", quantized_config(cfg), p_int8)]
+
+
+def run_closed_loop(cfg, params, *, bucket: int, n_images: int,
+                    seed: int = 0) -> dict:
+    """Everything queued up front: full batches form, maximum load."""
+    eng = VisionEngine(cfg, params, batch_buckets=(bucket,), max_wait_s=0.0,
+                       max_pending=0, top_k=5)
+    eng.warmup()
+    reqs = synth_requests(cfg, n_images, seed=seed)
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    eng.flush()
+    wall = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    snap = eng.metrics.snapshot()
+    return {
+        "load": "closed",
+        "bucket": bucket,
+        "images": n_images,
+        "wall_s": wall,
+        "fps": n_images / wall,
+        "latency_ms": snap["latency_ms"],
+        "batch_latency_ms": snap["batch_latency_ms"],
+        "counters": snap["counters"],
+        "expert_occupancy": snap["expert_occupancy"],
+    }
+
+
+def run_offered_load(cfg, params, *, bucket: int, n_images: int,
+                     rate_fps: float, max_wait_s: float,
+                     seed: int = 0) -> dict:
+    """Open loop: paced arrivals at ``rate_fps``; batches coalesce up to the
+    deadline. Measures latency under load rather than peak throughput."""
+    eng = VisionEngine(cfg, params, batch_buckets=(1, bucket),
+                       max_wait_s=max_wait_s, max_pending=0, top_k=5)
+    eng.warmup()
+    reqs = synth_requests(cfg, n_images, seed=seed)
+    period = 1.0 / rate_fps
+    t0 = time.perf_counter()
+    for i, r in enumerate(reqs):
+        target = t0 + i * period
+        while time.perf_counter() < target:
+            eng.step()  # keep pumping while we wait for the next arrival
+        eng.submit(r)
+        eng.step()
+    eng.flush()
+    wall = time.perf_counter() - t0
+    snap = eng.metrics.snapshot()
+    return {
+        "load": "open",
+        "offered_fps": rate_fps,
+        "bucket": bucket,
+        "images": n_images,
+        "wall_s": wall,
+        "fps": n_images / wall,
+        "latency_ms": snap["latency_ms"],
+        "batch_latency_ms": snap["batch_latency_ms"],
+        "counters": snap["counters"],
+        "expert_occupancy": snap["expert_occupancy"],
+    }
+
+
+def run(arch: str = "m3vit-tiny", smoke: bool = False,
+        n_images: int = 0, buckets=None, out: str = "BENCH_serving.json",
+        csv: bool = False) -> dict:
+    if smoke:
+        cfg = smoke_config(arch).replace(remat=False)
+        n_images = n_images or 24
+        buckets = tuple(buckets or (1, 4))
+    else:
+        cfg = PAPER_ARCHS[arch].replace(remat=False)
+        n_images = n_images or 64
+        buckets = tuple(buckets or (1, 4, 8))
+
+    rows = []
+    for label, vcfg, vparams in build_variants(cfg):
+        for b in buckets:
+            row = run_closed_loop(vcfg, vparams, bucket=b,
+                                  n_images=n_images)
+            row.update(variant=label)
+            rows.append(row)
+            if csv:
+                print(f"serve_vision_{label}_b{b},"
+                      f"{row['wall_s']/n_images*1e6:.0f},"
+                      f"fps={row['fps']:.1f}")
+            else:
+                print(f"{label:5s} bucket={b:2d} closed: "
+                      f"{row['fps']:8.1f} FPS  "
+                      f"p50={row['latency_ms']['p50']:.1f}ms "
+                      f"p99={row['latency_ms']['p99']:.1f}ms")
+        if not smoke:
+            # offered-load sweep at the largest bucket: 50% / 90% of the
+            # measured closed-loop capacity
+            peak = max(r["fps"] for r in rows
+                       if r["variant"] == label and r["load"] == "closed")
+            batch_ms = rows[-1]["batch_latency_ms"]["p50"]
+            wait = max(1e-3, batch_ms / 1e3)
+            for frac in (0.5, 0.9):
+                row = run_offered_load(
+                    vcfg, vparams, bucket=buckets[-1], n_images=n_images,
+                    rate_fps=max(1.0, frac * peak), max_wait_s=wait,
+                )
+                row.update(variant=label)
+                rows.append(row)
+                print(f"{label:5s} bucket={buckets[-1]:2d} open "
+                      f"@{row['offered_fps']:6.1f}/s: "
+                      f"{row['fps']:8.1f} FPS  "
+                      f"p50={row['latency_ms']['p50']:.1f}ms "
+                      f"p99={row['latency_ms']['p99']:.1f}ms")
+
+    report = {
+        "meta": {
+            "bench": "serve_vision_fps",
+            "mode": "smoke" if smoke else "full",
+            "arch": cfg.name,
+            "family": cfg.family,
+            "backend": jax.default_backend(),
+            "image_tokens": cfg.image_tokens,
+            "num_classes": cfg.num_classes,
+            "num_experts": cfg.moe.num_experts if cfg.moe else 0,
+            "paper_row_fps": 155.0,  # CoQMoE-C on U280, paper Table 4
+        },
+        "rows": rows,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {out} ({len(rows)} rows)")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="m3vit-tiny")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced smoke config + tiny image count (CI)")
+    ap.add_argument("--images", type=int, default=0)
+    ap.add_argument("--buckets", type=int, nargs="*", default=None)
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    run(arch=args.arch, smoke=args.smoke, n_images=args.images,
+        buckets=args.buckets, out=args.out, csv=args.csv)
+
+
+if __name__ == "__main__":
+    main()

@@ -181,7 +181,9 @@ def streaming_attention(
     v: jnp.ndarray,
     *,
     causal: bool = True,
-    q_offset=0,
+    q_offset=0,  # scalar or [B]: per-batch absolute position of q[0]
+                 # (continuous batching: every serving slot decodes at its
+                 # own fill level; pairs with per-slot kv_valid_len)
     quant_bits: int = 0,
     logit_softcap: float = 0.0,
     local_window: int = 0,

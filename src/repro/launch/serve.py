@@ -52,6 +52,14 @@ def main() -> None:
     total = args.requests * args.new_tokens
     print(f"generated {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s, quantized={args.quantized})")
+    snap = engine.metrics.snapshot()
+    print(f"metrics: tokens/s={snap['fps']:.1f} "
+          f"latency p50={snap['latency_ms']['p50']:.0f}ms "
+          f"p99={snap['latency_ms']['p99']:.0f}ms "
+          f"queue_depth max={snap['queue_depth']['max']}")
+    if snap["expert_tokens"]:
+        occ = ", ".join(f"{x:.3f}" for x in snap["expert_occupancy"])
+        print(f"expert occupancy: [{occ}]")
 
 
 if __name__ == "__main__":

@@ -147,8 +147,18 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any], taps=None):
     )
 
 
+def classify(params, cfg: ModelConfig, patches, *, top_k: int = 5) -> dict:
+    """Batched vision classification (vit families): patches [B, T, P] ->
+    {"classes", "probs", "expert_tokens"} — the serving engine's unit of
+    work (see models/vit.py:classify)."""
+    if cfg.family not in ("vit", "vit_moe"):
+        raise ValueError(f"classify: vision families only, got {cfg.family!r}")
+    return module_for(cfg).classify(params, cfg, patches, top_k=top_k)
+
+
 __all__ = [
     "abstract_params",
+    "classify",
     "forward",
     "init_model_params",
     "input_specs",

@@ -117,8 +117,18 @@ def abstract_params(cfg: ModelConfig) -> dict:
 # Blocks
 # ---------------------------------------------------------------------------
 
+def _expert_count_zeros(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-expert routed-token counter carry ([E] int32; [0] for non-MoE)."""
+    n_e = cfg.moe.num_experts if cfg.moe is not None else 0
+    return jnp.zeros((n_e,), jnp.int32)
+
+
 def _moe_apply(x: jnp.ndarray, p: dict, cfg: ModelConfig, taps=None):
-    """MoE FFN on [B,S,D]; returns (y, aux_loss)."""
+    """MoE FFN on [B,S,D]; returns (y, aux_loss, expert_counts [E] int32).
+
+    ``expert_counts`` is the routed (token, slot) histogram of this layer —
+    the serving engines accumulate it into the per-expert occupancy metric
+    (DESIGN.md section 6)."""
     from repro.kernels import ops
 
     from repro.models.layers import act_fn
@@ -179,8 +189,11 @@ def _moe_apply(x: jnp.ndarray, p: dict, cfg: ModelConfig, taps=None):
             eout = eout + p["bo"][None, :, None, :]
         y = jnp.einsum("gtec,gecd->gtd", comb.astype(x.dtype), eout)
         y = y.reshape(T, D)
+        # routed (not dropped) slots per expert
+        counts = jnp.sum(disp, axis=(0, 1, 3)).astype(jnp.int32)
     else:  # grouped: the paper's sort-based unified kernel
         dsp = grouped_dispatch(xt, r.experts, r.weights, m.num_experts)
+        counts = dsp.group_sizes
         y_sorted = ops.grouped_mlp(
             dsp.x_sorted, p["wi"], p["wo"], dsp.group_sizes,
             act=cfg.act, glu=cfg.glu, bi=p.get("bi"), bo=p.get("bo"),
@@ -190,12 +203,13 @@ def _moe_apply(x: jnp.ndarray, p: dict, cfg: ModelConfig, taps=None):
             wi_a_scale=p.get("wi_as"),
         )
         y = grouped_combine(y_sorted, dsp, B * S)
-    return y.reshape(B, S, D), r.aux_loss
+    return y.reshape(B, S, D), r.aux_loss, counts
 
 
 def _block(x, p, cfg, *, positions, local_window, causal=True,
            cache=None, cache_index=None, taps=None):
-    """One transformer block; returns (x, aux_loss, new_cache)."""
+    """One transformer block; returns (x, aux_loss, expert_counts,
+    new_cache)."""
     h = apply_norm(x, p["ln1"], cfg)
     maybe_record(taps, "post_ln1", h)
     attn_out, new_cache = attention_block(
@@ -209,14 +223,15 @@ def _block(x, p, cfg, *, positions, local_window, causal=True,
     h = apply_norm(x, p["ln2"], cfg)
     maybe_record(taps, "post_ln2", h)
     aux = jnp.zeros((), jnp.float32)
+    ec = _expert_count_zeros(cfg)
     if "moe" in p:
-        ff, aux = _moe_apply(h, p["moe"], cfg, taps=taps)
+        ff, aux, ec = _moe_apply(h, p["moe"], cfg, taps=taps)
     else:
         ff = mlp_apply(h, p["mlp"], cfg, taps=taps)
     if cfg.post_block_norm:
         ff = apply_norm(ff, p["post_ln2"], cfg)
     x = x + ff
-    return x, aux, new_cache
+    return x, aux, ec, new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -236,7 +251,11 @@ def _embed_inputs(params, cfg, tokens, frontend_embeds):
 
 def _run_layers(params, cfg, x, *, positions, caches=None, cache_index=None,
                 taps=None):
-    """Scan over stacked layers. Returns (x, aux_total, new_caches)."""
+    """Scan over stacked layers.
+
+    Returns (x, aux_total, expert_counts, new_caches); expert_counts is the
+    routed-token histogram summed over all MoE layers ([E] int32, [0] for
+    dense archs)."""
     alternating = cfg.attn is not None and cfg.attn.alternate_local_global
     remat = cfg.remat and caches is None
 
@@ -245,23 +264,25 @@ def _run_layers(params, cfg, x, *, positions, caches=None, cache_index=None,
             x = carry["x"]
             layer_p = xs["p"]
             cache = xs.get("cache")
-            x, aux, new_cache = _block(
+            x, aux, ec, new_cache = _block(
                 x, layer_p, cfg,
                 positions=positions, local_window=local_window, causal=causal,
                 cache=cache, cache_index=cache_index, taps=None,
             )
-            carry = {"x": x, "aux": carry["aux"] + aux}
+            carry = {"x": x, "aux": carry["aux"] + aux,
+                     "ec": carry["ec"] + ec}
             return carry, new_cache
 
         return jax.checkpoint(body) if remat else body
 
     aux0 = jnp.zeros((), jnp.float32)
+    ec0 = _expert_count_zeros(cfg)
     if taps is not None:
         # calibration path: run layers eagerly (unscanned) to record taps
         return _run_layers_eager(params, cfg, x, positions=positions, taps=taps)
     if alternating:
         # pairs: (local, global) x L/2 — window static per scan
-        carry = {"x": x, "aux": aux0}
+        carry = {"x": x, "aux": aux0, "ec": ec0}
 
         def pair_body(carry, xs):
             carry, c1 = make_body(cfg.attn.local_window)(carry, {"p": xs["local"], **({"cache": xs["cache_local"]} if caches else {})})
@@ -273,37 +294,40 @@ def _run_layers(params, cfg, x, *, positions, caches=None, cache_index=None,
             xs["cache_local"] = caches["local"]
             xs["cache_global"] = caches["global"]
         carry, new_caches = jax.lax.scan(pair_body, carry, xs)
-        return carry["x"], carry["aux"], (new_caches if caches is not None else None)
-    carry = {"x": x, "aux": aux0}
+        return carry["x"], carry["aux"], carry["ec"], (new_caches if caches is not None else None)
+    carry = {"x": x, "aux": aux0, "ec": ec0}
     xs = {"p": params["layers"]}
     if caches is not None:
         xs["cache"] = caches
     body = make_body(cfg.attn.local_window if (cfg.attn and cfg.attn.local_window and not alternating) else 0)
     carry, new_caches = jax.lax.scan(body, carry, xs)
-    return carry["x"], carry["aux"], (new_caches if caches is not None else None)
+    return carry["x"], carry["aux"], carry["ec"], (new_caches if caches is not None else None)
 
 
 def _run_layers_eager(params, cfg, x, *, positions, taps):
     """Unscanned layer loop for PTQ calibration (records activation taps)."""
     alternating = cfg.attn is not None and cfg.attn.alternate_local_global
     aux_total = jnp.zeros((), jnp.float32)
+    ec_total = _expert_count_zeros(cfg)
     if alternating:
         n = cfg.num_layers // 2
         for i in range(n):
             for kind, win in (("layers_local", cfg.attn.local_window), ("layers_global", 0)):
                 lp = jax.tree.map(lambda a: a[i], params[kind])
                 scope = f"L{kind.removeprefix('layers_')}{i:03d}"
-                x, aux, _ = _block(x, lp, cfg, positions=positions,
-                                   local_window=win, taps=taps.scoped(scope))
+                x, aux, ec, _ = _block(x, lp, cfg, positions=positions,
+                                       local_window=win, taps=taps.scoped(scope))
                 aux_total += aux
+                ec_total += ec
     else:
         for i in range(cfg.num_layers):
             lp = jax.tree.map(lambda a: a[i], params["layers"])
-            x, aux, _ = _block(x, lp, cfg, positions=positions,
-                               local_window=cfg.attn.local_window if cfg.attn else 0,
-                               taps=taps.scoped(f"L{i:03d}"))
+            x, aux, ec, _ = _block(x, lp, cfg, positions=positions,
+                                   local_window=cfg.attn.local_window if cfg.attn else 0,
+                                   taps=taps.scoped(f"L{i:03d}"))
             aux_total += aux
-    return x, aux_total, None
+            ec_total += ec
+    return x, aux_total, ec_total, None
 
 
 def logits_from_hidden(params, cfg, x, taps=None):
@@ -330,7 +354,7 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray,
     x = _embed_inputs(params, cfg, tokens, frontend_embeds)
     S = x.shape[1]
     positions = jnp.arange(S, dtype=jnp.int32)
-    x, aux, _ = _run_layers(params, cfg, x, positions=positions, taps=taps)
+    x, aux, _, _ = _run_layers(params, cfg, x, positions=positions, taps=taps)
     return logits_from_hidden(params, cfg, x, taps=taps), aux
 
 
@@ -375,7 +399,7 @@ def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray,
     max_len = max_len or S
     positions = jnp.arange(S, dtype=jnp.int32)
     cache = init_cache(cfg, B, max_len, dtype=x.dtype)
-    x, aux, new_caches = _run_layers(
+    x, aux, _, new_caches = _run_layers(
         params, cfg, x, positions=positions, caches=cache,
         cache_index=jnp.zeros((), jnp.int32),
     )
@@ -384,14 +408,20 @@ def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray,
 
 
 def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray, caches,
-                index: jnp.ndarray):
+                index: jnp.ndarray, *, with_stats: bool = False):
     """One decode step. tokens [B,1]; index = cache fill position —
-    scalar (lockstep) or [B] (continuous batching, per-slot)."""
+    scalar (lockstep) or [B] (continuous batching, per-slot).
+
+    ``with_stats=True`` additionally returns ``{"expert_tokens": [E] int32}``
+    — the routed-token histogram of this step summed over MoE layers, which
+    the serving engine folds into its occupancy metric."""
     x = _embed_inputs(params, cfg, tokens, None)
     idx = jnp.asarray(index, jnp.int32)
     positions = (idx[:, None] if idx.ndim else idx) + jnp.arange(1, dtype=jnp.int32)
-    x, aux, new_caches = _run_layers(
+    x, aux, ec, new_caches = _run_layers(
         params, cfg, x, positions=positions, caches=caches, cache_index=index
     )
     logits = logits_from_hidden(params, cfg, x)
+    if with_stats:
+        return logits, new_caches, {"expert_tokens": ec}
     return logits, new_caches

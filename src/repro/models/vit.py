@@ -23,6 +23,7 @@ from repro.models.layers import (
 from repro.models.param import PDef, dense, stack_tree, vector
 from repro.models.transformer import (
     _attn_pdefs,
+    _expert_count_zeros,
     _mlp_pdefs,
     _moe_pdefs,
     _moe_apply,
@@ -79,16 +80,21 @@ def _vit_block(x, lp, cfg, *, positions, taps=None):
     h = apply_norm(x, lp["ln2"], cfg)
     maybe_record(taps, "post_ln2", h)
     aux = jnp.zeros((), jnp.float32)
+    ec = _expert_count_zeros(cfg)
     if "moe" in lp:
-        ff, aux = _moe_apply(h, lp["moe"], cfg, taps=taps)
+        ff, aux, ec = _moe_apply(h, lp["moe"], cfg, taps=taps)
     else:
         ff = mlp_apply(h, lp["mlp"], cfg, taps=taps)
-    return x + ff, aux
+    return x + ff, aux, ec
 
 
-def forward(params, cfg: ModelConfig, patches: jnp.ndarray,
-            frontend_embeds=None, taps=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """patches: [B, image_tokens-1, PATCH_DIM] -> (class logits [B, C], aux)."""
+def _forward(params, cfg: ModelConfig, patches: jnp.ndarray, taps=None):
+    """Shared forward body.
+
+    patches [B, image_tokens-1, PATCH_DIM] -> (logits [B, C], aux,
+    expert_counts [E] int32) — expert_counts is the routed-token histogram
+    summed over all MoE layers ([0] for plain ViT), consumed by the serving
+    occupancy metric (DESIGN.md section 6)."""
     B = patches.shape[0]
     w_pp = params["patch_proj"]
     patches = patches.astype(
@@ -99,6 +105,7 @@ def forward(params, cfg: ModelConfig, patches: jnp.ndarray,
     x = jnp.concatenate([cls, x], axis=1) + params["pos_embed"]
     positions = jnp.arange(x.shape[1], dtype=jnp.int32)
     aux_total = jnp.zeros((), jnp.float32)
+    ec_total = _expert_count_zeros(cfg)
 
     if taps is not None:  # eager calibration path
         if cfg.family == "vit_moe":
@@ -106,39 +113,64 @@ def forward(params, cfg: ModelConfig, patches: jnp.ndarray,
                 for kind in ("pairs_dense", "pairs_moe"):
                     lp = jax.tree.map(lambda a: a[i], params[kind])
                     scope = f"L{kind.removeprefix('pairs_')}{i:03d}"
-                    x, aux = _vit_block(x, lp, cfg, positions=positions,
-                                        taps=taps.scoped(scope))
+                    x, aux, ec = _vit_block(x, lp, cfg, positions=positions,
+                                            taps=taps.scoped(scope))
                     aux_total += aux
+                    ec_total += ec
         else:
             for i in range(cfg.num_layers):
                 lp = jax.tree.map(lambda a: a[i], params["layers"])
-                x, aux = _vit_block(x, lp, cfg, positions=positions,
-                                    taps=taps.scoped(f"L{i:03d}"))
+                x, aux, ec = _vit_block(x, lp, cfg, positions=positions,
+                                        taps=taps.scoped(f"L{i:03d}"))
                 aux_total += aux
+                ec_total += ec
     elif cfg.family == "vit_moe":
         def body(carry, xs):
-            x, aux = carry
-            x, a1 = _vit_block(x, xs["dense"], cfg, positions=positions)
-            x, a2 = _vit_block(x, xs["moe"], cfg, positions=positions)
-            return (x, aux + a1 + a2), None
+            x, aux, ec = carry
+            x, a1, e1 = _vit_block(x, xs["dense"], cfg, positions=positions)
+            x, a2, e2 = _vit_block(x, xs["moe"], cfg, positions=positions)
+            return (x, aux + a1 + a2, ec + e1 + e2), None
 
         if cfg.remat:
             body = jax.checkpoint(body)
-        (x, aux_total), _ = jax.lax.scan(
-            body, (x, aux_total),
+        (x, aux_total, ec_total), _ = jax.lax.scan(
+            body, (x, aux_total, ec_total),
             {"dense": params["pairs_dense"], "moe": params["pairs_moe"]},
         )
     else:
         def body(carry, lp):
-            x, aux = carry
-            x, a = _vit_block(x, lp, cfg, positions=positions)
-            return (x, aux + a), None
+            x, aux, ec = carry
+            x, a, e = _vit_block(x, lp, cfg, positions=positions)
+            return (x, aux + a, ec + e), None
 
         if cfg.remat:
             body = jax.checkpoint(body)
-        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["layers"])
+        (x, aux_total, ec_total), _ = jax.lax.scan(
+            body, (x, aux_total, ec_total), params["layers"])
 
     x = apply_norm(x, params["final_norm"], cfg)
     maybe_record(taps, "final_norm", x)
     logits = quant_linear(x[:, 0, :], params, "head", cfg) + params["head_b"]
-    return logits, aux_total
+    return logits, aux_total, ec_total
+
+
+def forward(params, cfg: ModelConfig, patches: jnp.ndarray,
+            frontend_embeds=None, taps=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """patches: [B, image_tokens-1, PATCH_DIM] -> (class logits [B, C], aux)."""
+    logits, aux, _ = _forward(params, cfg, patches, taps=taps)
+    return logits, aux
+
+
+def classify(params, cfg: ModelConfig, patches: jnp.ndarray,
+             *, top_k: int = 5) -> dict:
+    """Batched serving entry point (what ``VisionEngine`` jits per bucket).
+
+    patches [B, image_tokens-1, PATCH_DIM] -> {"classes" [B, k] int32,
+    "probs" [B, k] f32 (descending), "expert_tokens" [E] int32}. Accepts fp,
+    fake-quant, or materialized-int8 ``QuantizedParams`` trees through the
+    same ``quant_linear`` seam as ``forward``."""
+    logits, _, ec = _forward(params, cfg, patches)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, min(top_k, cfg.num_classes))
+    return {"classes": top_i.astype(jnp.int32), "probs": top_p,
+            "expert_tokens": ec}

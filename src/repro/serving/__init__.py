@@ -1,3 +1,18 @@
-from repro.serving.engine import ServeEngine, build_serve_step
+from repro.serving.engine import Request, ServeEngine, build_serve_step
+from repro.serving.metrics import EngineMetrics, LatencyTracker
+from repro.serving.scheduler import Backpressure, MicroBatch, MicroBatcher
+from repro.serving.vision import VisionEngine, VisionRequest, synth_requests
 
-__all__ = ["ServeEngine", "build_serve_step"]
+__all__ = [
+    "Backpressure",
+    "EngineMetrics",
+    "LatencyTracker",
+    "MicroBatch",
+    "MicroBatcher",
+    "Request",
+    "ServeEngine",
+    "VisionEngine",
+    "VisionRequest",
+    "build_serve_step",
+    "synth_requests",
+]

@@ -7,11 +7,16 @@ shape cells: one new token per sequence against a seq_len-deep cache.
 
 ``ServeEngine`` adds slot-based continuous batching on top: a fixed batch of
 decode slots; finished sequences release their slot and queued prompts are
-prefilled into it (cache writes at the slot index).
+admitted from the shared ``MicroBatcher`` scheduler (DESIGN.md section 6 —
+the same scheduler ``VisionEngine`` batches on) and prefilled into it (cache
+writes at the slot index). The decode tick runs through ``build_serve_step``
+so the K/V cache buffer is *donated* — updated in place, never copied per
+token.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -28,6 +33,9 @@ from repro.distributed.sharding_rules import (
     input_shardings,
     param_specs,
 )
+from repro.launch.mesh import make_host_mesh
+from repro.serving.metrics import EngineMetrics
+from repro.serving.scheduler import MicroBatcher
 
 
 def serving_config(cfg: ModelConfig) -> ModelConfig:
@@ -55,7 +63,7 @@ def lowering_config(cfg: ModelConfig) -> ModelConfig:
 
 def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                      *, donate_cache: bool = True, for_lowering: bool = False,
-                     params=None):
+                     params=None, with_stats: bool = False):
     """Jitted decode step: (params, tokens [B,1], cache, index) ->
     (logits, new_cache). The cache buffer is donated (updated in place).
 
@@ -65,11 +73,18 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     int8 weight leaves plus ``_scale``/``_as`` siblings. The in_shardings
     are fitted to that tree (int8 weights inherit their fp ancestors' specs;
     scale leaves replicate) so the decode step executes the stored int8
-    format directly through the int8 kernels."""
+    format directly through the int8 kernels.
+
+    ``with_stats=True`` (transformer MoE families) appends the per-step
+    routed-token histogram to the outputs: (logits, new_cache,
+    {"expert_tokens": [E] int32})."""
     cfg = lowering_config(cfg) if for_lowering else serving_config(cfg)
     mod = models.module_for(cfg)
 
     def serve_step(params, tokens, cache, index):
+        if with_stats:
+            return mod.decode_step(params, cfg, tokens, cache, index,
+                                   with_stats=True)
         return mod.decode_step(params, cfg, tokens, cache, index)
 
     p_specs = param_specs(cfg, mesh, rules=SERVING_RULES)
@@ -100,6 +115,7 @@ class Request:
     prompt: np.ndarray  # [S] int32
     max_new_tokens: int
     generated: Optional[List[int]] = None
+    submitted_at: float = 0.0  # stamped by submit(); drives latency metrics
 
 
 class ServeEngine:
@@ -110,10 +126,17 @@ class ServeEngine:
     tree (``ptq_model(..., materialize="int8")``) — the int8 case decodes
     through the int8 kernels via the ``quant_linear``/``grouped_mlp`` seams,
     executing the weights in their stored format.
+
+    Admission runs through a ``MicroBatcher`` in greedy mode (``max_wait_s=0``
+    — a queued prompt is admitted the moment a decode slot frees; the batch
+    limit per poll is the number of free slots). ``max_pending > 0`` bounds
+    the queue: ``submit`` then raises ``scheduler.Backpressure`` when full.
+    ``metrics`` exposes tokens/s, request latency percentiles, queue depth,
+    and (MoE archs) per-expert routed-token occupancy.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
-                 max_len: int = 512) -> None:
+                 max_len: int = 512, max_pending: int = 0) -> None:
         assert cfg.family not in ("vit", "vit_moe"), "decoder families only"
         self.cfg = serving_config(cfg)
         cfg = self.cfg
@@ -124,40 +147,65 @@ class ServeEngine:
         self.cache = self.mod.init_cache(cfg, batch_slots, max_len)
         self.pos = np.zeros(batch_slots, np.int32)  # cache fill per slot
         self.active: Dict[int, Request] = {}  # slot -> request
-        self.queue: List[Request] = []
-        self._decode = jax.jit(
-            lambda p, t, c, i: self.mod.decode_step(p, self.cfg, t, c, i)
+        self.scheduler = MicroBatcher(batch_sizes=(batch_slots,),
+                                      max_wait_s=0.0, max_pending=max_pending)
+        self._with_stats = (cfg.moe is not None
+                            and cfg.family in ("dense", "moe", "vlm"))
+        self.metrics = EngineMetrics(
+            num_experts=cfg.moe.num_experts if self._with_stats else 0)
+        # the decode tick: donated cache (in-place K/V update, no per-token
+        # copy), shardings fitted to the actual — possibly int8 — param tree
+        shape = ShapeConfig("engine_decode", "decode",
+                            seq_len=max_len, global_batch=batch_slots)
+        self._decode = build_serve_step(
+            cfg, shape, make_host_mesh(), params=params,
+            with_stats=self._with_stats,
         )
+
+    @property
+    def queue(self) -> List[Request]:
+        """Pending (not yet admitted) requests in FIFO order."""
+        return self.scheduler.pending_items()
 
     def submit(self, req: Request) -> None:
         req.generated = []
-        self.queue.append(req)
+        req.submitted_at = time.monotonic()
+        try:
+            self.scheduler.submit(req)  # raises Backpressure when full
+        except Exception:
+            self.metrics.inc("rejected")
+            raise
+        self.metrics.inc("submitted")
+        self.metrics.observe_queue_depth(self.scheduler.depth)
 
     def _admit(self) -> None:
         free = [s for s in range(self.B) if s not in self.active]
-        while free and self.queue:
-            slot = free.pop(0)
-            req = self.queue.pop(0)
-            # prefill the slot: feed prompt tokens one microstep at a time
-            # into the shared cache at this slot's rows (token-parallel
-            # prefill would batch this; slot isolation keeps it simple).
-            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            bsz = toks.shape[0]
-            logits, slot_cache = self.mod.prefill(
-                self.params, self.cfg,
-                toks, max_len=self.max_len,
-            )
-            # merge the slot's prefilled cache rows into the engine cache
-            def merge(full, part):
-                return jax.lax.dynamic_update_slice(
-                    full, part.astype(full.dtype),
-                    (0, slot) + (0,) * (full.ndim - 2),
+        while free:
+            batch = self.scheduler.poll(limit=len(free))
+            if batch is None:
+                return
+            for req in batch.items:
+                slot = free.pop(0)
+                # prefill the slot: feed prompt tokens one microstep at a
+                # time into the shared cache at this slot's rows
+                # (token-parallel prefill would batch this; slot isolation
+                # keeps it simple).
+                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                logits, slot_cache = self.mod.prefill(
+                    self.params, self.cfg,
+                    toks, max_len=self.max_len,
                 )
-            self.cache = jax.tree.map(merge, self.cache, slot_cache)
-            self.pos[slot] = len(req.prompt)
-            first = int(jnp.argmax(logits[0, -1]))
-            req.generated.append(first)
-            self.active[slot] = req
+                # merge the slot's prefilled cache rows into the engine cache
+                def merge(full, part):
+                    return jax.lax.dynamic_update_slice(
+                        full, part.astype(full.dtype),
+                        (0, slot) + (0,) * (full.ndim - 2),
+                    )
+                self.cache = jax.tree.map(merge, self.cache, slot_cache)
+                self.pos[slot] = len(req.prompt)
+                first = int(jnp.argmax(logits[0, -1]))
+                req.generated.append(first)
+                self.active[slot] = req
 
     def step(self) -> None:
         """One engine tick: admit queued prompts, decode one token for every
@@ -170,11 +218,17 @@ class ServeEngine:
             tokens[slot, 0] = req.generated[-1]
         # per-slot cache positions: slots decode at their own fill level
         index = jnp.asarray(self.pos, jnp.int32)
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(tokens), self.cache, index
-        )
+        out = self._decode(self.params, jnp.asarray(tokens), self.cache, index)
+        if self._with_stats:
+            logits, self.cache, stats = out
+            self.metrics.add_expert_tokens(np.asarray(stats["expert_tokens"]))
+        else:
+            logits, self.cache = out
         nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        self.metrics.work_done(len(self.active), "tokens")
+        self.metrics.observe_queue_depth(self.scheduler.depth)
         done = []
+        now = time.monotonic()
         for slot, req in self.active.items():
             req.generated.append(int(nxt[slot]))
             self.pos[slot] += 1
@@ -182,10 +236,12 @@ class ServeEngine:
                     self.pos[slot] >= self.max_len - 1:
                 done.append(slot)
         for slot in done:
-            del self.active[slot]
+            req = self.active.pop(slot)
+            self.metrics.inc("completed")
+            self.metrics.request_latency.record(now - req.submitted_at)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> None:
         for _ in range(max_ticks):
-            if not self.active and not self.queue:
+            if not self.active and not self.scheduler.depth:
                 return
             self.step()

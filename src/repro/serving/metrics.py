@@ -1,0 +1,140 @@
+"""Serving metrics shared by both engines (DESIGN.md section 6).
+
+``EngineMetrics`` is host-side instrumentation only — counters, latency
+reservoirs, queue-depth samples, and the per-expert routed-token occupancy
+accumulator. Engines feed it from already-materialized host values (never
+from inside a traced function), and ``snapshot()`` renders the documented
+metrics schema that ``BENCH_serving.json`` and the examples print.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+
+class LatencyTracker:
+    """Bounded reservoir of latency samples with percentile readout."""
+
+    def __init__(self, maxlen: int = 8192) -> None:
+        self._samples: deque = deque(maxlen=maxlen)
+
+    def record(self, seconds: float) -> None:
+        self._samples.append(float(seconds))
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    def percentile(self, p: float) -> float:
+        """p-th percentile in seconds (nan when empty)."""
+        if not self._samples:
+            return float("nan")
+        return float(np.percentile(np.asarray(self._samples), p))
+
+    def snapshot(self) -> Dict[str, float]:
+        """Milliseconds, the unit the paper's latency tables use."""
+        if not self._samples:
+            return {"n": 0, "p50": float("nan"), "p95": float("nan"),
+                    "p99": float("nan"), "mean": float("nan"),
+                    "max": float("nan")}
+        a = np.asarray(self._samples) * 1e3
+        return {
+            "n": int(a.size),
+            "p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(a.mean()),
+            "max": float(a.max()),
+        }
+
+
+class EngineMetrics:
+    """Counters + latency + occupancy for one engine instance.
+
+    Counter names in use (an engine touches the subset that applies):
+      submitted / completed / rejected — request lifecycle
+      batches                         — device batches dispatched
+      frames                          — images completed (vision)
+      padded_frames                   — pad rows added to fill a bucket
+      tokens                          — decode tokens produced (LM)
+    """
+
+    def __init__(self, num_experts: int = 0,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self._clock = clock
+        self.counters: Dict[str, int] = {}
+        self.request_latency = LatencyTracker()
+        self.batch_latency = LatencyTracker()
+        self.expert_tokens = np.zeros(max(0, num_experts), np.int64)
+        self._depth_sum = 0
+        self._depth_max = 0
+        self._depth_last = 0
+        self._depth_n = 0
+        self._first_t: Optional[float] = None
+        self._last_t: Optional[float] = None
+
+    # -- feeding ------------------------------------------------------------
+
+    def inc(self, name: str, n: int = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + n
+        if name == "submitted" and self._first_t is None:
+            self._first_t = self._clock()  # FPS window opens at first arrival
+
+    def observe_queue_depth(self, depth: int) -> None:
+        self._depth_sum += depth
+        self._depth_max = max(self._depth_max, depth)
+        self._depth_last = depth
+        self._depth_n += 1
+
+    def add_expert_tokens(self, counts) -> None:
+        """Accumulate a routed-token histogram (host array, [num_experts])."""
+        a = np.asarray(counts, np.int64)
+        if a.size and self.expert_tokens.size == a.size:
+            self.expert_tokens += a
+
+    def work_done(self, n: int, unit: str = "frames") -> None:
+        """Mark n units (frames/tokens) complete; drives the FPS window."""
+        self.inc(unit, n)
+        now = self._clock()
+        if self._first_t is None:
+            self._first_t = now
+        self._last_t = now
+
+    # -- readout ------------------------------------------------------------
+
+    @property
+    def fps(self) -> float:
+        """Completed frames (or tokens for LM engines) per wall second,
+        measured from the first submission to the last completion event."""
+        n = self.counters.get("frames", 0) or self.counters.get("tokens", 0)
+        if self._first_t is None or self._last_t is None \
+                or self._last_t <= self._first_t:
+            return float("nan")
+        return n / (self._last_t - self._first_t)
+
+    def occupancy(self) -> np.ndarray:
+        """Per-expert fraction of all routed (token, slot) pairs."""
+        total = self.expert_tokens.sum()
+        if total == 0:
+            return np.zeros_like(self.expert_tokens, np.float64)
+        return self.expert_tokens / float(total)
+
+    def snapshot(self) -> dict:
+        """The metrics schema (DESIGN.md section 6)."""
+        return {
+            "counters": dict(self.counters),
+            "fps": self.fps,
+            "latency_ms": self.request_latency.snapshot(),
+            "batch_latency_ms": self.batch_latency.snapshot(),
+            "queue_depth": {
+                "mean": (self._depth_sum / self._depth_n)
+                if self._depth_n else 0.0,
+                "max": self._depth_max,
+                "last": self._depth_last,
+            },
+            "expert_tokens": self.expert_tokens.tolist(),
+            "expert_occupancy": [round(float(x), 6)
+                                 for x in self.occupancy()],
+        }

@@ -1,0 +1,165 @@
+"""Model-agnostic dynamic micro-batcher (DESIGN.md section 6).
+
+One scheduler serves both engines: ``ServeEngine`` polls it with the number
+of free decode slots as the batch limit (greedy admission, ``max_wait_s=0``),
+``VisionEngine`` lets requests coalesce up to a batch-size bucket or a
+max-wait deadline, whichever comes first, and pads the formed batch up to
+the bucket ladder so the jitted forward compiles once per bucket shape.
+
+Semantics:
+
+  * **shape-bucketed admission** — ``bucket_of(item)`` maps each request to a
+    hashable bucket key; only same-bucket requests batch together (requests
+    of different padded shapes must never share a device batch).
+  * **FIFO** — strict submission order within a bucket; across buckets the
+    bucket whose head request is oldest releases first.
+  * **deadline flush** — a partial batch is released once its oldest request
+    has waited ``max_wait_s`` (0 means release immediately: greedy batching).
+  * **backpressure** — ``submit`` raises ``Backpressure`` once ``max_pending``
+    requests are queued (0 = unbounded); callers surface this to clients
+    instead of growing the queue without bound.
+  * **drain** — ``drain()`` releases partial batches immediately regardless
+    of deadline, for end-of-stream flush.
+
+The scheduler is pure host-side bookkeeping: it never touches device state,
+and a ``clock`` can be injected for deterministic tests.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence
+
+
+class Backpressure(RuntimeError):
+    """``submit`` refused: the scheduler's pending bound has been reached."""
+
+
+class MicroBatch(NamedTuple):
+    key: Any  # bucket key the batch was formed from
+    items: tuple  # requests in FIFO order (len <= pad_to)
+    pad_to: int  # ladder size the engine should pad the batch up to
+    waited_s: float  # queue wait of the oldest item at formation time
+
+
+class MicroBatcher:
+    """Request queue with bucketed batch formation (see module docstring)."""
+
+    def __init__(
+        self,
+        *,
+        bucket_of: Optional[Callable[[Any], Any]] = None,
+        batch_sizes: Sequence[int] = (1,),
+        max_wait_s: float = 0.0,
+        max_pending: int = 0,
+        clock: Callable[[], float] = time.monotonic,
+    ) -> None:
+        sizes = tuple(sorted(set(int(s) for s in batch_sizes)))
+        if not sizes or sizes[0] < 1:
+            raise ValueError(f"batch_sizes must be positive: {batch_sizes!r}")
+        self.batch_sizes = sizes
+        self.max_batch = sizes[-1]
+        self.max_wait_s = float(max_wait_s)
+        self.max_pending = int(max_pending)
+        self._bucket_of = bucket_of or (lambda item: None)
+        self._clock = clock
+        # bucket key -> deque of (seq, enqueue_t, item); seq is a global
+        # submission counter so cross-bucket age order is total and
+        # deterministic even under a frozen test clock.
+        self._buckets: Dict[Any, deque] = {}
+        self._seq = 0
+        self._depth = 0
+        self._draining = False
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, item: Any, now: Optional[float] = None) -> None:
+        if self.max_pending and self._depth >= self.max_pending:
+            raise Backpressure(
+                f"scheduler full: {self._depth} pending "
+                f"(max_pending={self.max_pending})"
+            )
+        now = self._clock() if now is None else now
+        key = self._bucket_of(item)
+        self._buckets.setdefault(key, deque()).append((self._seq, now, item))
+        self._seq += 1
+        self._depth += 1
+
+    # -- inspection ---------------------------------------------------------
+
+    @property
+    def depth(self) -> int:
+        """Total queued (not yet formed into a batch) requests."""
+        return self._depth
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    def pending_items(self) -> List[Any]:
+        """Queued requests in global FIFO (submission) order."""
+        entries = [e for q in self._buckets.values() for e in q]
+        entries.sort(key=lambda e: e[0])
+        return [e[2] for e in entries]
+
+    def oldest_wait(self, now: Optional[float] = None) -> float:
+        """Queue wait of the oldest pending request (0 when empty)."""
+        heads = [q[0] for q in self._buckets.values() if q]
+        if not heads:
+            return 0.0
+        now = self._clock() if now is None else now
+        return max(0.0, now - min(t for _, t, _ in heads))
+
+    # -- batch formation ----------------------------------------------------
+
+    def drain(self, on: bool = True) -> None:
+        """Enter (or leave) drain mode: partial batches release immediately."""
+        self._draining = on
+
+    def poll(self, now: Optional[float] = None,
+             limit: Optional[int] = None) -> Optional[MicroBatch]:
+        """Form and return the next ready batch, or None.
+
+        ``limit`` caps the batch size below ``max_batch`` for callers whose
+        downstream capacity varies per tick (ServeEngine's free decode
+        slots). A bucket is *ready* when it holds a full batch, its head has
+        exceeded the deadline, or the scheduler is draining; among ready
+        buckets the one with the oldest head wins.
+        """
+        if self._depth == 0:
+            return None
+        cap = self.max_batch if limit is None else min(int(limit), self.max_batch)
+        if cap <= 0:
+            return None
+        now = self._clock() if now is None else now
+        best = None  # (head_seq, key)
+        for key, q in self._buckets.items():
+            if not q:
+                continue
+            ready = (
+                len(q) >= cap
+                or self._draining
+                or (now - q[0][1]) >= self.max_wait_s
+            )
+            if ready and (best is None or q[0][0] < best[0]):
+                best = (q[0][0], key)
+        if best is None:
+            return None
+        q = self._buckets[best[1]]
+        n = min(len(q), cap)
+        waited = max(0.0, now - q[0][1])
+        items = tuple(q.popleft()[2] for _ in range(n))
+        self._depth -= n
+        if not q:
+            # drop emptied buckets: an unbounded bucket_of key space must
+            # not grow the dict (or poll's scan) without bound
+            del self._buckets[best[1]]
+        return MicroBatch(key=best[1], items=items, pad_to=self._pad_to(n),
+                          waited_s=waited)
+
+    def _pad_to(self, n: int) -> int:
+        """Smallest ladder size that fits n (n never exceeds max_batch)."""
+        for s in self.batch_sizes:
+            if s >= n:
+                return s
+        return self.max_batch

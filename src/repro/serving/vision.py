@@ -1,0 +1,211 @@
+"""Vision serving engine: dynamic-batching MoE-ViT inference
+(DESIGN.md section 6 — the serving half of the paper's headline FPS result).
+
+Request path:
+
+  submit(VisionRequest) -> MicroBatcher (bucketed admission, max-wait
+  deadline, backpressure) -> padded bucket batch -> jitted
+  ``models.classify`` forward (fp / fake-quant / materialized-int8
+  QuantizedParams trees all flow through the same ``quant_linear`` seam)
+  -> top-k class responses + per-expert routed-token occupancy.
+
+Dispatch is **double-buffered**: up to ``max_inflight`` device batches are
+outstanding at once — batch N+1 is padded, transferred, and enqueued while
+batch N's device work is still in flight (JAX async dispatch), so the host
+never serializes the device. Results are only synchronized (``np.asarray``)
+when a batch is *retired* — when the in-flight window is full or at drain.
+
+Batch shapes are quantized to the ``batch_buckets`` ladder (pad rows of
+zeros), so the engine compiles exactly ``len(batch_buckets)`` programs and
+never re-traces at serving time; call ``warmup()`` to move all compiles out
+of the measured path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs.base import ModelConfig
+from repro.models import vit
+from repro.serving.engine import serving_config
+from repro.serving.metrics import EngineMetrics
+from repro.serving.scheduler import MicroBatcher
+
+
+@dataclasses.dataclass
+class VisionRequest:
+    """One image to classify. ``patches`` is the flattened patch sequence
+    [image_tokens - 1, PATCH_DIM]; results are filled in at retirement."""
+
+    uid: int
+    patches: np.ndarray
+    classes: Optional[np.ndarray] = None  # [k] int32, most-probable first
+    probs: Optional[np.ndarray] = None  # [k] f32, descending
+    latency_s: Optional[float] = None
+    submitted_at: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.classes is not None
+
+
+class _InFlight(NamedTuple):
+    reqs: tuple  # the real requests in this device batch
+    pad_to: int  # padded batch size actually dispatched
+    out: dict  # device arrays from classify (not yet synchronized)
+    dispatched_at: float
+
+
+class VisionEngine:
+    """Dynamic-batching MoE-ViT classifier engine (single-host driver)."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        batch_buckets: Sequence[int] = (1, 4, 8),
+        max_wait_s: float = 2e-3,
+        max_pending: int = 1024,
+        top_k: int = 5,
+        max_inflight: int = 2,
+        clock: Callable[[], float] = time.monotonic,
+    ) -> None:
+        if cfg.family not in ("vit", "vit_moe"):
+            raise ValueError(f"vision families only, got {cfg.family!r}")
+        # dropless grouped MoE for serving, same rule as the LM engine
+        self.cfg = serving_config(cfg)
+        self.params = params
+        self.top_k = min(top_k, cfg.num_classes)
+        self.n_patches = cfg.image_tokens - 1
+        self._clock = clock
+        self.scheduler = MicroBatcher(
+            batch_sizes=batch_buckets, max_wait_s=max_wait_s,
+            max_pending=max_pending, clock=clock,
+        )
+        self.metrics = EngineMetrics(
+            num_experts=cfg.moe.num_experts if cfg.moe is not None else 0,
+            clock=clock,
+        )
+        self.max_inflight = max(1, int(max_inflight))
+        self._inflight: deque = deque()
+        cfg_c, k = self.cfg, self.top_k
+        self._classify = jax.jit(
+            lambda prm, x: models.classify(prm, cfg_c, x, top_k=k)
+        )
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def warmup(self) -> None:
+        """Compile every bucket size up front (keeps XLA compiles out of the
+        measured serving path; the benchmark calls this before timing)."""
+        for b in self.scheduler.batch_sizes:
+            x = jnp.zeros((b, self.n_patches, vit.PATCH_DIM), jnp.float32)
+            jax.block_until_ready(self._classify(self.params, x))
+
+    def submit(self, req: VisionRequest) -> None:
+        """Enqueue one image; raises ``scheduler.Backpressure`` when the
+        pending queue is at ``max_pending``."""
+        req.submitted_at = self._clock()
+        try:
+            self.scheduler.submit(req)
+        except Exception:
+            self.metrics.inc("rejected")
+            raise
+        self.metrics.inc("submitted")
+        self.metrics.observe_queue_depth(self.scheduler.depth)
+
+    def step(self) -> None:
+        """One pump: retire finished batches (device results already
+        materialized — no blocking), force-retire the oldest if the
+        in-flight window is still full, then dispatch every ready batch the
+        window has room for. Call from the submit loop to overlap host and
+        device."""
+        while self._inflight and self._head_ready():
+            self._retire_one()
+        if len(self._inflight) >= self.max_inflight:
+            self._retire_one()
+        self._dispatch_ready()
+
+    def flush(self) -> None:
+        """Drain: release partial batches immediately, dispatch everything
+        queued, and retire every in-flight batch."""
+        self.scheduler.drain(True)
+        try:
+            while self.scheduler.depth or self._inflight:
+                self._dispatch_ready()
+                if self._inflight:
+                    self._retire_one()
+        finally:
+            self.scheduler.drain(False)
+
+    run_until_drained = flush
+
+    # -- internals ----------------------------------------------------------
+
+    def _head_ready(self) -> bool:
+        """Whether the oldest in-flight batch's device work has finished —
+        retiring it then stamps request latency at actual completion, not
+        at the next forced sync (open-loop percentiles stay honest)."""
+        head = self._inflight[0].out["classes"]
+        is_ready = getattr(head, "is_ready", None)
+        return bool(is_ready()) if is_ready is not None else False
+
+    def _dispatch_ready(self) -> None:
+        while len(self._inflight) < self.max_inflight:
+            batch = self.scheduler.poll()
+            if batch is None:
+                return
+            reqs = batch.items
+            x = np.zeros((batch.pad_to, self.n_patches, vit.PATCH_DIM),
+                         np.float32)
+            for i, r in enumerate(reqs):
+                x[i] = r.patches
+            t0 = self._clock()
+            # async dispatch: returns device futures; nothing blocks here
+            out = self._classify(self.params, jnp.asarray(x))
+            self._inflight.append(_InFlight(reqs, batch.pad_to, out, t0))
+            self.metrics.inc("batches")
+            self.metrics.inc("padded_frames", batch.pad_to - len(reqs))
+            self.metrics.observe_queue_depth(self.scheduler.depth)
+
+    def _retire_one(self) -> None:
+        ent = self._inflight.popleft()
+        classes = np.asarray(ent.out["classes"])  # synchronizes the batch
+        probs = np.asarray(ent.out["probs"])
+        now = self._clock()
+        self.metrics.batch_latency.record(now - ent.dispatched_at)
+        et = ent.out.get("expert_tokens")
+        if et is not None and et.size:
+            # NB: includes the pad rows' routed tokens — interpret together
+            # with counters["padded_frames"] (DESIGN.md section 6)
+            self.metrics.add_expert_tokens(np.asarray(et))
+        for i, req in enumerate(ent.reqs):
+            req.classes = classes[i]
+            req.probs = probs[i]
+            req.latency_s = now - req.submitted_at
+            self.metrics.request_latency.record(req.latency_s)
+            self.metrics.inc("completed")
+        self.metrics.work_done(len(ent.reqs), "frames")
+
+
+def synth_requests(cfg: ModelConfig, n: int, seed: int = 0,
+                   scale: float = 1.0) -> List[VisionRequest]:
+    """n synthetic image-patch requests for benchmarks/examples/tests."""
+    rng = np.random.default_rng(seed)
+    T = cfg.image_tokens - 1
+    return [
+        VisionRequest(
+            uid=i,
+            patches=(scale * rng.standard_normal((T, vit.PATCH_DIM)))
+            .astype(np.float32),
+        )
+        for i in range(n)
+    ]

@@ -97,6 +97,37 @@ def test_attention_per_slot_offsets(rng):
         np.testing.assert_allclose(out_k[i:i+1], solo, atol=2e-5)
 
 
+def test_attention_mixed_slot_offsets_and_fill_levels(rng):
+    """Continuous-batching admission: multi-token q chunks where every slot
+    sits at a *different* fill level — per-batch q_offset [B] mixed with
+    per-batch kv_valid_len [B], over an int8 K/V cache with dequant scales
+    (the state ServeEngine decodes from after ragged prefills)."""
+    from repro.models.layers import quantize_kv
+
+    B, Sq, Sk, H, KVH, hd = 3, 4, 64, 4, 2, 32
+    q = _t(rng, B, Sq, H, hd)
+    k, v = _t(rng, B, Sk, KVH, hd), _t(rng, B, Sk, KVH, hd)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    offs = jnp.asarray([0, 17, 60], jnp.int32)  # slot fill levels
+    valid = offs + Sq  # cache valid through each slot's chunk
+    kw = dict(causal=True, q_offset=offs, quant_bits=4,
+              k_scale=ks, v_scale=vs, kv_valid_len=valid)
+    out_k = streaming_attention(q, kq, vq, block_q=8, block_k=16,
+                                interpret=True, **kw)
+    out_r = ref.flash_attention_ref(q, kq, vq, **kw)
+    np.testing.assert_allclose(out_k, out_r, atol=2e-5)
+    # per-slot equivalence: each slot must match its solo run at its own
+    # (offset, fill) pair — the batched kernel adds no cross-slot coupling
+    for i in range(B):
+        solo = ref.flash_attention_ref(
+            q[i:i+1], kq[i:i+1], vq[i:i+1], causal=True,
+            q_offset=int(offs[i]), quant_bits=4,
+            k_scale=ks[i:i+1], v_scale=vs[i:i+1],
+            kv_valid_len=valid[i:i+1])
+        np.testing.assert_allclose(out_k[i:i+1], solo, atol=2e-5)
+
+
 # ---------------------------------------------------------------------------
 # Unified sparse/dense grouped matmul
 # ---------------------------------------------------------------------------

@@ -1,0 +1,122 @@
+"""MicroBatcher semantics: bucketed admission, FIFO order, deadline flush,
+backpressure, drain, and the pad ladder (DESIGN.md section 6)."""
+import pytest
+
+from repro.serving.scheduler import Backpressure, MicroBatcher
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0) -> None:
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def test_bucketed_admission_never_mixes_buckets():
+    """Items with different bucket keys must never share a batch."""
+    clk = FakeClock()
+    mb = MicroBatcher(bucket_of=lambda s: len(s), batch_sizes=(4,),
+                      max_wait_s=0.0, clock=clk)
+    for item in ("a", "bb", "c", "dd", "e"):
+        mb.submit(item)
+    seen = []
+    while (batch := mb.poll()) is not None:
+        assert len({len(i) for i in batch.items}) == 1, "mixed-shape batch"
+        seen.append(batch.items)
+    assert mb.depth == 0
+    # oldest-head bucket releases first
+    assert seen[0] == ("a", "c", "e")
+    assert seen[1] == ("bb", "dd")
+
+
+def test_fifo_within_bucket():
+    clk = FakeClock()
+    mb = MicroBatcher(batch_sizes=(2,), max_wait_s=0.0, clock=clk)
+    for i in range(5):
+        mb.submit(i)
+    order = []
+    while (batch := mb.poll()) is not None:
+        order.extend(batch.items)
+    assert order == [0, 1, 2, 3, 4]
+    assert mb.pending_items() == []
+
+
+def test_full_bucket_releases_before_deadline():
+    clk = FakeClock()
+    mb = MicroBatcher(batch_sizes=(1, 4), max_wait_s=10.0, clock=clk)
+    for i in range(4):
+        mb.submit(i)
+    batch = mb.poll()  # full batch: no waiting for the deadline
+    assert batch is not None and len(batch.items) == 4
+    assert batch.pad_to == 4
+
+
+def test_deadline_flushes_partial_batch():
+    clk = FakeClock()
+    mb = MicroBatcher(batch_sizes=(8,), max_wait_s=1.0, clock=clk)
+    mb.submit("x")
+    assert mb.poll() is None, "partial batch must wait for the deadline"
+    clk.advance(0.5)
+    assert mb.poll() is None
+    clk.advance(0.6)  # oldest item has now waited 1.1s > max_wait
+    batch = mb.poll()
+    assert batch is not None and batch.items == ("x",)
+    assert batch.waited_s == pytest.approx(1.1)
+
+
+def test_backpressure_bound():
+    mb = MicroBatcher(batch_sizes=(4,), max_pending=2, clock=FakeClock())
+    mb.submit(0)
+    mb.submit(1)
+    with pytest.raises(Backpressure):
+        mb.submit(2)
+    # forming a batch frees queue space again
+    assert mb.poll() is not None
+    mb.submit(2)
+
+
+def test_drain_releases_partials_immediately():
+    clk = FakeClock()
+    mb = MicroBatcher(batch_sizes=(8,), max_wait_s=100.0, clock=clk)
+    for i in range(3):
+        mb.submit(i)
+    assert mb.poll() is None
+    mb.drain()
+    batch = mb.poll()
+    assert batch is not None and batch.items == (0, 1, 2)
+    assert mb.depth == 0
+    mb.drain(False)
+    mb.submit(9)
+    assert mb.poll() is None, "deadline semantics restored after drain"
+
+
+def test_pad_ladder_and_limit():
+    clk = FakeClock()
+    mb = MicroBatcher(batch_sizes=(1, 4, 8), max_wait_s=0.0, clock=clk)
+    for i in range(6):
+        mb.submit(i)
+    # limit caps the batch below max_batch (ServeEngine free-slot admission)
+    batch = mb.poll(limit=3)
+    assert len(batch.items) == 3 and batch.pad_to == 4
+    batch = mb.poll()
+    assert len(batch.items) == 3 and batch.pad_to == 4
+    mb.submit(9)
+    batch = mb.poll()
+    assert len(batch.items) == 1 and batch.pad_to == 1
+    assert mb.poll() is None
+
+
+def test_oldest_wait_and_depth_tracking():
+    clk = FakeClock()
+    mb = MicroBatcher(batch_sizes=(4,), max_wait_s=100.0, clock=clk)
+    assert mb.oldest_wait() == 0.0
+    mb.submit("a")
+    clk.advance(2.0)
+    mb.submit("b")
+    assert mb.depth == 2
+    assert mb.oldest_wait() == pytest.approx(2.0)
+    assert mb.pending_items() == ["a", "b"]

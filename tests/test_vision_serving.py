@@ -1,0 +1,153 @@
+"""VisionEngine end to end: the MoE-ViT request path over fp, fake-quant,
+and materialized-int8 QuantizedParams trees (DESIGN.md section 6).
+
+The fidelity contract mirrors tests/test_int8_path.py: the fake-quant tree
+(quantize-dequantize executed in f32) is the numerical oracle for the
+stored-int8 execution — served top-1 classes must agree.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models as M
+from repro.configs import get_shape, smoke_config
+from repro.core.quant.ptq import calibrate_model, ptq_model, quantized_config
+from repro.serving.scheduler import Backpressure
+from repro.serving.vision import VisionEngine, VisionRequest, synth_requests
+
+
+@pytest.fixture(scope="module")
+def moe_vit_trees():
+    cfg = smoke_config("m3vit-small").replace(remat=False)
+    shape = get_shape("train_4k").replace(seq_len=24, global_batch=2)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    batches = [M.synth_batch(cfg, shape, jax.random.PRNGKey(i))
+               for i in range(2)]
+    taps = calibrate_model(cfg, params, batches)
+    return (cfg, params, ptq_model(cfg, params, taps),
+            ptq_model(cfg, params, taps, materialize="int8"))
+
+
+def _serve(cfg, params, reqs, **kw):
+    eng = VisionEngine(cfg, params, **kw)
+    for r in reqs:
+        eng.submit(r)
+        eng.step()
+    eng.flush()
+    assert all(r.done for r in reqs)
+    return eng
+
+
+def test_vision_engine_serves_and_meters(moe_vit_trees):
+    """Responses are well-formed; counters, FPS window, and per-expert
+    occupancy are all populated."""
+    cfg, params, _, _ = moe_vit_trees
+    reqs = synth_requests(cfg, 7, seed=3)
+    eng = _serve(cfg, params, reqs, batch_buckets=(1, 4), max_wait_s=0.0,
+                 top_k=3)
+    for r in reqs:
+        assert r.classes.shape == (3,) and r.probs.shape == (3,)
+        assert all(0 <= c < cfg.num_classes for c in r.classes)
+        assert np.all(np.diff(r.probs) <= 0), "probs must be descending"
+        assert r.latency_s is not None and r.latency_s >= 0
+    snap = eng.metrics.snapshot()
+    assert snap["counters"]["submitted"] == 7
+    assert snap["counters"]["completed"] == 7
+    assert snap["counters"]["frames"] == 7
+    assert snap["latency_ms"]["n"] == 7
+    assert np.isfinite(snap["fps"]) and snap["fps"] > 0
+    # every MoE layer routes top_k slots per token: occupancy accumulated
+    assert sum(snap["expert_tokens"]) > 0
+    assert sum(snap["expert_occupancy"]) == pytest.approx(1.0)
+
+
+def test_engine_results_match_direct_forward(moe_vit_trees):
+    """Batched/padded engine serving must return exactly the classes of the
+    bare jitted forward on each single image (padding never leaks)."""
+    cfg, params, _, _ = moe_vit_trees
+    reqs = synth_requests(cfg, 5, seed=11)
+    _serve(cfg, params, reqs, batch_buckets=(4,), max_wait_s=0.0, top_k=4)
+    for r in reqs:
+        out = M.classify(params, cfg, jnp.asarray(r.patches)[None], top_k=4)
+        np.testing.assert_array_equal(r.classes, np.asarray(out["classes"])[0])
+        np.testing.assert_allclose(r.probs, np.asarray(out["probs"])[0],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_int8_serving_matches_fake_quant_oracle_top1(moe_vit_trees):
+    """End-to-end: serving the materialized-int8 tree reproduces the f32
+    fake-quant oracle's top-1 class per image (same quantization grid)."""
+    cfg, _, p_fake, p_int8 = moe_vit_trees
+    qcfg = quantized_config(cfg)
+    reqs_a = synth_requests(cfg, 9, seed=5)
+    reqs_b = synth_requests(cfg, 9, seed=5)
+    _serve(qcfg, p_fake, reqs_a, batch_buckets=(1, 4), max_wait_s=0.0)
+    _serve(qcfg, p_int8, reqs_b, batch_buckets=(1, 4), max_wait_s=0.0)
+    top1_fake = [int(r.classes[0]) for r in reqs_a]
+    top1_int8 = [int(r.classes[0]) for r in reqs_b]
+    assert top1_fake == top1_int8
+    for a, b in zip(reqs_a, reqs_b):
+        np.testing.assert_allclose(a.probs, b.probs, rtol=1e-3, atol=1e-4)
+
+
+def test_int8_serving_materializes_no_fp_expert_copy(moe_vit_trees):
+    """The engine's jitted unit of work consumes the int8 expert stacks
+    directly — no f32/bf16 dequantized expert-weight copy in the program."""
+    cfg, _, _, p_int8 = moe_vit_trees
+    qcfg = quantized_config(cfg)
+    x = jnp.zeros((2, cfg.image_tokens - 1, 768), jnp.float32)
+    jaxpr = str(jax.make_jaxpr(
+        lambda p, b: M.classify(p, qcfg, b, top_k=5)
+    )(p_int8, x))
+    n_pairs = qcfg.num_layers // 2
+    E, D = qcfg.moe.num_experts, qcfg.d_model
+    hid = qcfg.moe.d_ff * (2 if qcfg.glu else 1)
+    fp_expert_shapes = [
+        f"{dt}[{dims}]"
+        for dt in ("f32", "bf16")
+        for dims in (
+            f"{E},{D},{hid}", f"{n_pairs},{E},{D},{hid}",
+            f"{E},{qcfg.moe.d_ff},{D}", f"{n_pairs},{E},{qcfg.moe.d_ff},{D}",
+        )
+    ]
+    leaked = [s for s in fp_expert_shapes if s in jaxpr]
+    assert not leaked, f"fp dequantized expert weight copies found: {leaked}"
+    assert f"i8[{n_pairs},{E},{D},{hid}]" in jaxpr
+
+
+def test_backpressure_surfaces_to_clients(moe_vit_trees):
+    cfg, params, _, _ = moe_vit_trees
+    eng = VisionEngine(cfg, params, batch_buckets=(4,), max_wait_s=100.0,
+                       max_pending=2)
+    reqs = synth_requests(cfg, 3)
+    eng.submit(reqs[0])
+    eng.submit(reqs[1])
+    with pytest.raises(Backpressure):
+        eng.submit(reqs[2])
+    assert eng.metrics.counters["rejected"] == 1
+    eng.flush()  # queued work still completes
+    assert reqs[0].done and reqs[1].done
+
+
+def test_double_buffered_dispatch_keeps_batches_in_flight(moe_vit_trees):
+    """With enough queued work, a second batch is dispatched before the
+    first is retired (the enqueue-N+1-while-N-in-flight property)."""
+    cfg, params, _, _ = moe_vit_trees
+    eng = VisionEngine(cfg, params, batch_buckets=(2,), max_wait_s=0.0,
+                       max_inflight=2)
+    for r in synth_requests(cfg, 4, seed=1):
+        eng.submit(r)
+    eng._dispatch_ready()
+    assert len(eng._inflight) == 2, "both batches should be in flight"
+    eng.flush()
+    assert eng.metrics.counters["frames"] == 4
+
+
+def test_plain_vit_family_serves_without_expert_metrics():
+    cfg = smoke_config("vit-tiny").replace(remat=False)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    reqs = synth_requests(cfg, 3, seed=2)
+    eng = _serve(cfg, params, reqs, batch_buckets=(1, 2), max_wait_s=0.0)
+    assert eng.metrics.snapshot()["expert_tokens"] == []
+    assert all(r.done for r in reqs)
