@@ -1,0 +1,215 @@
+"""Measured cluster FPS vs device count (the scaling counterpart of
+``serve_vision_fps.py``; DESIGN.md section 7).
+
+Drives the full multi-replica request path — cluster admission front-end,
+least-loaded routing, per-replica dynamic batching, merged metrics — at
+1/2/4/8 devices, fp32 vs materialized-int8, and writes
+``BENCH_cluster.json``.
+
+Device counts are faked on CPU with
+``--xla_force_host_platform_device_count=N``. That flag must be set before
+jax initializes, so the parent process re-executes this script as one
+**worker subprocess per device count** (each with its own ``XLA_FLAGS``)
+and merges the row JSON each worker prints on its last stdout line.
+
+At the largest device count an additional expert-parallel row runs the
+int8 tree with expert stacks sharded over all devices (DP replicas
+elsewhere; EP within one replica here) — the two orchestration modes the
+cluster composes.
+
+  PYTHONPATH=src python benchmarks/serve_cluster_scaling.py --smoke
+  PYTHONPATH=src python benchmarks/serve_cluster_scaling.py --devices 1 2 4 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+import time
+
+DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+
+# ---------------------------------------------------------------------------
+# Worker: one device count, all variants (runs in its own process)
+# ---------------------------------------------------------------------------
+
+def _build_variants(cfg):
+    import jax
+
+    import repro.models as M
+    from repro.configs import get_shape
+    from repro.core.quant.ptq import (
+        calibrate_model,
+        ptq_model,
+        quantized_config,
+    )
+
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    shape = get_shape("train_4k").replace(seq_len=24, global_batch=2)
+    calib = [M.synth_batch(cfg, shape, jax.random.PRNGKey(i))
+             for i in range(2)]
+    taps = calibrate_model(cfg, params, calib)
+    p_int8 = ptq_model(cfg, params, taps, materialize="int8")
+    return [("fp32", cfg, params), ("int8", quantized_config(cfg), p_int8)]
+
+
+def _run_cluster(cfg, params, *, replicas, bucket, n_images, seed=0,
+                 label="", mode="dp"):
+    import time as _t
+
+    from repro.serving.cluster import ServingCluster
+    from repro.serving.vision import synth_requests
+
+    cluster = ServingCluster(
+        cfg, params, replicas=replicas, batch_buckets=(bucket,),
+        max_wait_s=0.0, max_pending=0, max_pending_per_replica=0,
+    )
+    cluster.warmup()
+    reqs = synth_requests(cfg, n_images, seed=seed)
+    t0 = _t.perf_counter()
+    for r in reqs:
+        cluster.submit(r)
+        cluster.step()
+    cluster.flush()
+    wall = _t.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    agg = cluster.metrics.snapshot()["aggregate"]
+    return {
+        "variant": label,
+        "mode": mode,
+        "replicas": cluster.num_replicas,
+        "bucket": bucket,
+        "images": n_images,
+        "wall_s": wall,
+        "fps": n_images / wall,
+        "latency_ms": agg["latency_ms"],
+        "counters": agg["counters"],
+        "expert_occupancy": agg["expert_occupancy"],
+    }
+
+
+def worker(args) -> None:
+    import dataclasses
+
+    import jax
+
+    from repro.configs import PAPER_ARCHS, smoke_config
+
+    if args.smoke:
+        cfg = smoke_config(args.arch).replace(remat=False)
+        n_images = args.images or 16
+        bucket = 2
+    else:
+        cfg = PAPER_ARCHS[args.arch].replace(remat=False)
+        n_images = args.images or 64
+        bucket = 4
+
+    n_dev = jax.device_count()
+    rows = []
+    for label, vcfg, vparams in _build_variants(cfg):
+        row = _run_cluster(vcfg, vparams, replicas=n_dev, bucket=bucket,
+                           n_images=n_images, label=label, mode="dp")
+        row["devices"] = n_dev
+        rows.append(row)
+        if args.ep and label == "int8" and n_dev > 1 \
+                and vcfg.moe is not None \
+                and vcfg.moe.num_experts % n_dev == 0:
+            ep_cfg = vcfg.replace(moe=dataclasses.replace(
+                vcfg.moe, moe_exec="expert_parallel"))
+            row = _run_cluster(ep_cfg, vparams, replicas=1, bucket=bucket,
+                               n_images=n_images, label=label,
+                               mode="expert_parallel")
+            row["devices"] = n_dev
+            rows.append(row)
+    # last line of stdout is the parent's contract
+    print(json.dumps({"devices": n_dev, "rows": rows}))
+
+
+# ---------------------------------------------------------------------------
+# Parent: one subprocess per device count, merged report
+# ---------------------------------------------------------------------------
+
+def _worker_env(n_devices: int) -> dict:
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    flags = re.sub(rf"{DEVICE_FLAG}=\S+", "", flags).strip()
+    env["XLA_FLAGS"] = f"{flags} {DEVICE_FLAG}={n_devices}".strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env.setdefault("REPRO_PALLAS", "ref")
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return env
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="m3vit-tiny")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced smoke config + tiny image count (CI)")
+    ap.add_argument("--images", type=int, default=0)
+    ap.add_argument("--devices", type=int, nargs="*", default=[1, 2, 4, 8])
+    ap.add_argument("--out", default="BENCH_cluster.json")
+    ap.add_argument("--ep", dest="ep", action="store_true", default=True,
+                    help="add an expert-parallel int8 row per multi-device "
+                         "count (default on)")
+    ap.add_argument("--no-ep", dest="ep", action="store_false")
+    ap.add_argument("--worker", action="store_true",
+                    help="internal: run one device count in-process")
+    args = ap.parse_args()
+
+    if args.worker:
+        worker(args)
+        return
+
+    rows = []
+    t_start = time.perf_counter()
+    for n in args.devices:
+        cmd = [sys.executable, os.path.abspath(__file__), "--worker",
+               "--arch", args.arch]
+        if args.smoke:
+            cmd.append("--smoke")
+        if args.images:
+            cmd += ["--images", str(args.images)]
+        if not args.ep:
+            cmd.append("--no-ep")
+        proc = subprocess.run(cmd, env=_worker_env(n), capture_output=True,
+                              text=True)
+        if proc.returncode != 0:
+            sys.stderr.write(proc.stdout + proc.stderr)
+            raise RuntimeError(f"worker for {n} devices failed")
+        payload = json.loads(proc.stdout.strip().splitlines()[-1])
+        for row in payload["rows"]:
+            rows.append(row)
+            print(f"devices={row['devices']} {row['variant']:5s} "
+                  f"{row['mode']:15s} replicas={row['replicas']}: "
+                  f"{row['fps']:8.1f} FPS  "
+                  f"p50={row['latency_ms']['p50']:.1f}ms "
+                  f"p99={row['latency_ms']['p99']:.1f}ms")
+
+    report = {
+        "meta": {
+            "bench": "serve_cluster_scaling",
+            "mode": "smoke" if args.smoke else "full",
+            "arch": args.arch,
+            "device_counts": args.devices,
+            "wall_s": time.perf_counter() - t_start,
+            "note": ("CPU host devices faked with "
+                     f"{DEVICE_FLAG}; FPS scaling is scheduling-real but "
+                     "compute shares one CPU — device-count trends, not "
+                     "absolute throughput"),
+        },
+        "rows": rows,
+    }
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

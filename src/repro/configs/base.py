@@ -42,6 +42,13 @@ class MoEConfig:
     # grouped = sort-based unified kernel (the paper's orchestration);
     # gshard  = capacity dispatch/combine einsums (GSPMD-native EP at scale)
     impl: str = "grouped"
+    # single          = every device holds the full expert stack (default);
+    # expert_parallel = grouped path under shard_map: expert stacks sharded
+    #                   over the 'model' mesh axis, tokens exchanged with
+    #                   all_to_all (distributed/expert_parallel.py). Serving
+    #                   only (requires impl="grouped"); the mesh is supplied
+    #                   via distributed.expert_parallel.use_ep_mesh.
+    moe_exec: str = "single"
 
 
 @dataclass(frozen=True)

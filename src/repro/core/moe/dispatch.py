@@ -57,6 +57,60 @@ def grouped_combine(y_sorted: jnp.ndarray, d: GroupedDispatch,
 
 
 # ---------------------------------------------------------------------------
+# Expert-parallel exchange plan (distributed/expert_parallel.py)
+# ---------------------------------------------------------------------------
+
+def expert_of_sorted_rows(group_sizes: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """Group (expert) id of each row of an expert-sorted buffer ([R] int32).
+
+    Inverse of the ``group_sizes`` histogram: row i belongs to the group
+    whose cumulative-size interval contains i. Rows beyond
+    ``sum(group_sizes)`` map past the last group (callers treat them as
+    padding)."""
+    ends = jnp.cumsum(group_sizes)
+    return jnp.searchsorted(ends, jnp.arange(n_rows), side="right").astype(
+        jnp.int32
+    )
+
+
+class EPExchangePlan(NamedTuple):
+    """Where each expert-sorted row goes in the all_to_all send buffer.
+
+    Shard ``s`` of ``n_shards`` owns the contiguous expert range
+    ``[s*E_local, (s+1)*E_local)`` — because rows are sorted by expert id,
+    each destination shard's rows form one contiguous run."""
+
+    row_shard: jnp.ndarray  # [R] destination shard of each sorted row
+    row_pos: jnp.ndarray  # [R] position within that shard's send slice
+    row_local_expert: jnp.ndarray  # [R] expert id local to the dest shard
+    shard_counts: jnp.ndarray  # [n_shards] rows bound for each shard
+
+
+def ep_exchange_plan(group_sizes: jnp.ndarray, n_shards: int,
+                     n_rows: int) -> EPExchangePlan:
+    """Static-shape send plan for the expert-parallel token exchange."""
+    num_experts = group_sizes.shape[0]
+    e_local = num_experts // n_shards
+    shard_counts = group_sizes.reshape(n_shards, e_local).sum(-1)
+    start = jnp.concatenate([
+        jnp.zeros((1,), jnp.int32),
+        jnp.cumsum(shard_counts)[:-1].astype(jnp.int32),
+    ])
+    row_expert = expert_of_sorted_rows(group_sizes, n_rows)
+    # rows past sum(group_sizes) (none in practice: dispatch is dropless)
+    # would index past the table; clamp keeps the gather in bounds
+    row_expert = jnp.minimum(row_expert, num_experts - 1)
+    row_shard = row_expert // e_local
+    row_pos = jnp.arange(n_rows, dtype=jnp.int32) - start[row_shard]
+    return EPExchangePlan(
+        row_shard=row_shard,
+        row_pos=row_pos,
+        row_local_expert=row_expert % e_local,
+        shard_counts=shard_counts.astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
 # GShard-style capacity dispatch (training at scale under GSPMD)
 # ---------------------------------------------------------------------------
 

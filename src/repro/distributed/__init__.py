@@ -1,4 +1,13 @@
+from repro.distributed.expert_parallel import (
+    expert_parallel_moe,
+    get_ep_mesh,
+    set_ep_mesh,
+    use_ep_mesh,
+    validate_ep,
+)
 from repro.distributed.sharding_rules import (
+    EXPERT_PARALLEL_RULES,
+    SERVING_RULES,
     batch_axes,
     cache_specs,
     input_shardings,

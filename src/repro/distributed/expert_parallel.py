@@ -1,0 +1,226 @@
+"""Expert-parallel grouped MoE execution (DESIGN.md section 7).
+
+The grouped (sort-based unified-kernel) MoE path run under ``shard_map``
+over the ``'model'`` mesh axis:
+
+  * the expert stacks — fp *or* materialized-int8 ``wi``/``wo`` plus their
+    ``_scale`` dequant vectors and per-expert biases — are **sharded over
+    the expert dim** (each of the ``n`` shards holds ``E/n`` experts; the
+    full stack is never replicated);
+  * routing runs replicated (the gate is tiny), then tokens are sharded
+    over ``'model'``, locally expert-sorted, and **exchanged with
+    ``all_to_all``** so each shard receives exactly the rows bound for its
+    local experts;
+  * the per-shard compute is the *same* ``kernels.ops.grouped_mlp`` the
+    single-device path uses (Pallas grouped kernel on TPU, ``ragged_dot``
+    on CPU, int8-in-int8 for QuantizedParams trees) over local experts
+    only, with one zero "dump" expert appended to absorb exchange padding;
+  * results return to their source shard with a second ``all_to_all`` and
+    combine locally with the routing weights (Eq. 5).
+
+Capacity is worst-case (``C = T_local * top_k`` rows per (src, dst) pair),
+so the exchange is **dropless** — expert-parallel output equals the
+single-device grouped output up to fp summation order, which is what the
+equivalence tests assert.
+
+The mesh is ambient state: engines wrap their jitted forward in
+``use_ep_mesh(mesh)`` so the ``shard_map`` closure captures it at trace
+time. ``moe_exec="expert_parallel"`` on ``MoEConfig`` routes
+``models.transformer._moe_apply`` through here.
+"""
+from __future__ import annotations
+
+import contextlib
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.moe.dispatch import (
+    ep_exchange_plan,
+    grouped_combine,
+    grouped_dispatch,
+)
+from repro.core.moe.router import route_topk
+
+EP_AXIS = "model"
+
+# Expert-stack leaves sharded over the expert dim (axis 0); everything else
+# in the moe subtree (gate, per-tensor activation scales) stays replicated.
+_SHARDED_LEAVES = ("wi", "wo", "wi_scale", "wo_scale", "bi", "bo")
+_SCALAR_LEAVES = ("wi_as", "wo_a_scale")
+
+_EP_MESH: Optional[Mesh] = None
+
+
+def set_ep_mesh(mesh: Optional[Mesh]) -> None:
+    """Install (or clear, with None) the ambient expert-parallel mesh."""
+    global _EP_MESH
+    _EP_MESH = mesh
+
+
+def get_ep_mesh() -> Optional[Mesh]:
+    return _EP_MESH
+
+
+@contextlib.contextmanager
+def use_ep_mesh(mesh: Mesh):
+    """Scope the ambient EP mesh — wrap the *trace* of any forward whose
+    config carries ``moe_exec="expert_parallel"`` (engines wrap every call;
+    only the first, tracing, call actually reads the mesh)."""
+    global _EP_MESH
+    prev = _EP_MESH
+    _EP_MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _EP_MESH = prev
+
+
+def validate_ep(cfg: ModelConfig, mesh: Mesh) -> int:
+    """Check (cfg, mesh) supports expert parallelism; returns shard count."""
+    if cfg.moe is None:
+        raise ValueError("expert_parallel: config has no MoE block")
+    if cfg.moe.impl != "grouped":
+        raise ValueError(
+            "expert_parallel requires the grouped MoE path "
+            f"(impl={cfg.moe.impl!r}); gshard is GSPMD-native already"
+        )
+    if EP_AXIS not in mesh.axis_names:
+        raise ValueError(f"expert_parallel mesh needs a {EP_AXIS!r} axis: "
+                         f"{mesh.axis_names}")
+    n = mesh.shape[EP_AXIS]
+    if cfg.moe.num_experts % n != 0:
+        raise ValueError(
+            f"num_experts={cfg.moe.num_experts} not divisible by "
+            f"{EP_AXIS!r} axis size {n}"
+        )
+    return n
+
+
+def _append_dump_expert(leaf: jnp.ndarray) -> jnp.ndarray:
+    """Append one all-zero expert slot (absorbs exchange-padding rows —
+    their outputs are zero and are dropped before the return exchange)."""
+    pad = [(0, 1)] + [(0, 0)] * (leaf.ndim - 1)
+    return jnp.pad(leaf, pad)
+
+
+def _ep_shard_body(x_loc, experts_loc, weights_loc, w_shard, scalars, *,
+                   cfg: ModelConfig, n_shards: int):
+    """Per-shard program: local dispatch -> all_to_all -> grouped_mlp over
+    local experts -> all_to_all back -> local combine.
+
+    x_loc [T_loc, D]; experts/weights [T_loc, k]; ``w_shard`` leaves carry
+    the local expert slice (axis 0 == E_local)."""
+    from repro.kernels import ops
+
+    m = cfg.moe
+    E = m.num_experts
+    e_local = E // n_shards
+    T_loc, D = x_loc.shape
+    R = T_loc * m.top_k  # rows this shard contributes to the exchange
+    C = R  # worst-case per-destination capacity: dropless by construction
+
+    d = grouped_dispatch(x_loc, experts_loc, weights_loc, E)
+    plan = ep_exchange_plan(d.group_sizes, n_shards, R)
+
+    # pack: row i of the sorted buffer -> send[dest_shard, pos]; unfilled
+    # slots keep expert id == e_local (the dump group on the receiver)
+    send_x = jnp.zeros((n_shards, C, D), d.x_sorted.dtype)
+    send_x = send_x.at[plan.row_shard, plan.row_pos].set(d.x_sorted)
+    send_e = jnp.full((n_shards, C), e_local, jnp.int32)
+    send_e = send_e.at[plan.row_shard, plan.row_pos].set(
+        plan.row_local_expert)
+
+    # exchange: recv[s] = the slice source shard s bound for OUR experts
+    recv_x = jax.lax.all_to_all(send_x, EP_AXIS, 0, 0)
+    recv_e = jax.lax.all_to_all(send_e, EP_AXIS, 0, 0)
+
+    # re-sort received rows by local expert (stable: sources stay FIFO);
+    # padding (id == e_local) sorts last, into the dump group
+    flat_x = recv_x.reshape(n_shards * C, D)
+    flat_e = recv_e.reshape(n_shards * C)
+    order = jnp.argsort(flat_e, stable=True)
+    xs = flat_x[order]
+    gs = jnp.bincount(flat_e, length=e_local + 1).astype(jnp.int32)
+
+    wi = _append_dump_expert(w_shard["wi"])
+    wo = _append_dump_expert(w_shard["wo"])
+    opt = {
+        k: _append_dump_expert(w_shard[k])
+        for k in ("wi_scale", "wo_scale", "bi", "bo") if k in w_shard
+    }
+    y_sorted = ops.grouped_mlp(
+        xs, wi, wo, gs,
+        act=cfg.act, glu=cfg.glu,
+        bi=opt.get("bi"), bo=opt.get("bo"),
+        mid_a_scale=scalars.get("wo_a_scale"),
+        a_bits=cfg.quant.a_bits,
+        wi_scale=opt.get("wi_scale"), wo_scale=opt.get("wo_scale"),
+        wi_a_scale=scalars.get("wi_as"),
+    )
+
+    # unsort to exchange positions and return rows to their source shard
+    y_flat = jnp.zeros_like(y_sorted).at[order].set(y_sorted)
+    y_back = jax.lax.all_to_all(y_flat.reshape(n_shards, C, D), EP_AXIS, 0, 0)
+    y_rows = y_back[plan.row_shard, plan.row_pos]  # [R, D] sorted-row order
+    return grouped_combine(y_rows, d, T_loc)
+
+
+def expert_parallel_moe(x: jnp.ndarray, p: dict, cfg: ModelConfig):
+    """Expert-parallel MoE FFN on [B, S, D]; drop-in for the grouped branch
+    of ``_moe_apply`` — returns (y, aux_loss, expert_counts [E] int32).
+
+    Requires an ambient mesh (``use_ep_mesh``) whose ``'model'`` axis size
+    divides ``num_experts``."""
+    from repro.models.layers import quant_linear
+
+    mesh = _EP_MESH
+    if mesh is None:
+        raise RuntimeError(
+            "moe_exec='expert_parallel' but no EP mesh is set — wrap the "
+            "forward in distributed.expert_parallel.use_ep_mesh(mesh)"
+        )
+    n = validate_ep(cfg, mesh)
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+
+    # routing is replicated: identical to the single-device path, so the
+    # expert-parallel output is bit-compatible routing-wise
+    gate_logits = (quant_linear(xt, p, "gate", cfg)
+                   if p["gate"].dtype == jnp.int8 else None)
+    r = route_topk(xt, p["gate"], p.get("gate_b"), m.top_k,
+                   logits=gate_logits)
+    counts = jnp.bincount(
+        r.experts.reshape(-1), length=m.num_experts
+    ).astype(jnp.int32)
+
+    # pad the token dim to the shard count; pad rows route to expert 0 with
+    # combine weight 0 (they cost exchange slots, never output)
+    T_pad = -(-T // n) * n
+    pad = T_pad - T
+    xp = jnp.pad(xt, ((0, pad), (0, 0)))
+    ep = jnp.pad(r.experts, ((0, pad), (0, 0)))
+    wp = jnp.pad(r.weights, ((0, pad), (0, 0)))
+
+    w_shard = {k: p[k] for k in _SHARDED_LEAVES if k in p}
+    scalars = {k: p[k] for k in _SCALAR_LEAVES if k in p}
+
+    y = shard_map(
+        partial(_ep_shard_body, cfg=cfg, n_shards=n),
+        mesh=mesh,
+        in_specs=(
+            P(EP_AXIS), P(EP_AXIS), P(EP_AXIS),
+            {k: P(EP_AXIS) for k in w_shard},
+            {k: P() for k in scalars},
+        ),
+        out_specs=P(EP_AXIS),
+        check_rep=False,
+    )(xp, ep, wp, w_shard, scalars)
+    return y[:T].reshape(B, S, D), r.aux_loss, counts

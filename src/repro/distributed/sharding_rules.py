@@ -46,6 +46,14 @@ SERVING_RULES: Tuple[Tuple[str, Optional[str]], ...] = tuple(
     (k, None if k == "embed" else v) for k, v in DEFAULT_RULES
 )
 
+# Expert-parallel serving rules: ONLY the expert dim is sharded (over
+# 'model'); attention / dense MLP / norms replicate per replica. The grouped
+# kernel then runs per-shard on local experts inside shard_map — see
+# distributed/expert_parallel.py and DESIGN.md section 7.
+EXPERT_PARALLEL_RULES: Tuple[Tuple[str, Optional[str]], ...] = tuple(
+    (k, v if k == "expert" else None) for k, v in DEFAULT_RULES
+)
+
 
 def spec_for_axes(axes: Tuple[Optional[str], ...], rules=DEFAULT_RULES,
                   shape: Optional[Tuple[int, ...]] = None,

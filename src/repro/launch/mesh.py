@@ -24,3 +24,12 @@ def make_host_mesh(model_axis: int = 1):
     n = len(jax.devices())
     model_axis = min(model_axis, n)
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def make_ep_mesh(n: int = 0):
+    """1-axis ('model',) mesh for expert-parallel serving — over all
+    devices, or the first ``n`` (distributed/expert_parallel.py; tests run
+    it on fake CPU devices via --xla_force_host_platform_device_count)."""
+    devs = jax.devices()
+    n = n or len(devs)
+    return jax.make_mesh((n,), ("model",), devices=devs[:n])

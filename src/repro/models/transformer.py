@@ -134,6 +134,14 @@ def _moe_apply(x: jnp.ndarray, p: dict, cfg: ModelConfig, taps=None):
     from repro.models.layers import act_fn
 
     m = cfg.moe
+    if m.moe_exec == "expert_parallel" and taps is None:
+        # serving-time expert parallelism: same grouped kernel per shard,
+        # expert stacks sharded over 'model', tokens exchanged all_to_all
+        # (distributed/expert_parallel.py; calibration keeps the eager
+        # single-device path so taps record on one process)
+        from repro.distributed.expert_parallel import expert_parallel_moe
+
+        return expert_parallel_moe(x, p, cfg)
     B, S, D = x.shape
     T = B * S
     xt = x.reshape(T, D)

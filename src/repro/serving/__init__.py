@@ -1,18 +1,22 @@
+from repro.serving.cluster import ServingCluster, replica_meshes
 from repro.serving.engine import Request, ServeEngine, build_serve_step
-from repro.serving.metrics import EngineMetrics, LatencyTracker
+from repro.serving.metrics import ClusterMetrics, EngineMetrics, LatencyTracker
 from repro.serving.scheduler import Backpressure, MicroBatch, MicroBatcher
 from repro.serving.vision import VisionEngine, VisionRequest, synth_requests
 
 __all__ = [
     "Backpressure",
+    "ClusterMetrics",
     "EngineMetrics",
     "LatencyTracker",
     "MicroBatch",
     "MicroBatcher",
     "Request",
     "ServeEngine",
+    "ServingCluster",
     "VisionEngine",
     "VisionRequest",
     "build_serve_step",
+    "replica_meshes",
     "synth_requests",
 ]

@@ -1,0 +1,183 @@
+"""Multi-replica vision serving cluster (DESIGN.md section 7).
+
+``ServingCluster`` runs N ``VisionEngine`` replicas over disjoint
+device-mesh slices behind one admission front-end:
+
+  client -> cluster ``MicroBatcher`` (FIFO + global backpressure + drain)
+         -> least-loaded routing (replica with the smallest queued +
+            in-flight load that still has admission room)
+         -> replica ``VisionEngine`` (own scheduler, own jitted forward on
+            its mesh slice, own ``EngineMetrics``)
+
+Replica layout: the device list is split into ``replicas`` contiguous
+groups of equal size; each group becomes a ``('model',)`` mesh. With one
+device per group this is pure data parallelism (params replicated per
+replica); with ``cfg.moe.moe_exec == "expert_parallel"`` each replica runs
+the sharded-expert all_to_all path of ``distributed/expert_parallel.py``
+inside its slice — DP across replicas x EP within a replica.
+
+Backpressure is two-level: each replica bounds its own queue
+(``max_pending_per_replica``; the router only offers work to replicas with
+room) and the front-end bounds total admission (``max_pending`` — beyond
+it ``submit`` raises ``scheduler.Backpressure`` to the client).
+
+``metrics`` is a ``ClusterMetrics`` roll-up: aggregate FPS over the union
+window, latency percentiles merged from replica distributions (pooled, not
+averaged), per-expert occupancy summed across replicas.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving.metrics import ClusterMetrics
+from repro.serving.scheduler import MicroBatcher
+from repro.serving.vision import VisionEngine, VisionRequest
+
+
+def replica_meshes(n_replicas: int, devices=None) -> List[jax.sharding.Mesh]:
+    """Split the device list into ``n_replicas`` contiguous equal groups,
+    each a 1-axis ``('model',)`` mesh. More replicas than devices is
+    allowed (replicas then share devices — host-side concurrency only,
+    useful for tests on one CPU device)."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = max(1, int(n_replicas))
+    if len(devices) >= n:
+        per = len(devices) // n
+        groups = [devices[i * per:(i + 1) * per] for i in range(n)]
+    else:
+        groups = [[devices[i % len(devices)]] for i in range(n)]
+    return [
+        jax.sharding.Mesh(np.asarray(g, object).reshape(len(g)), ("model",))
+        for g in groups
+    ]
+
+
+class ServingCluster:
+    """N-replica MoE-ViT serving cluster behind one admission queue."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        replicas: int = 0,
+        devices=None,
+        batch_buckets: Sequence[int] = (1, 4, 8),
+        max_wait_s: float = 2e-3,
+        max_pending: int = 4096,
+        max_pending_per_replica: int = 64,
+        top_k: int = 5,
+        max_inflight: int = 2,
+        clock: Callable[[], float] = time.monotonic,
+    ) -> None:
+        devices = list(devices if devices is not None else jax.devices())
+        ep = cfg.moe is not None and cfg.moe.moe_exec == "expert_parallel"
+        if replicas <= 0:
+            # default: one replica per device (pure DP); EP defaults to a
+            # single replica spanning every device
+            replicas = 1 if ep else len(devices)
+        self.meshes = replica_meshes(replicas, devices)
+        if not ep:
+            # without expert parallelism a multi-device slice would run the
+            # identical replicated program on every device of the slice —
+            # pin each replica to its first device instead
+            self.meshes = [
+                m if m.size == 1 else jax.sharding.Mesh(
+                    np.asarray(list(m.devices.flat)[:1], object), ("model",))
+                for m in self.meshes
+            ]
+        self._clock = clock
+        self.engines: List[VisionEngine] = [
+            VisionEngine(
+                cfg, params,
+                batch_buckets=batch_buckets, max_wait_s=max_wait_s,
+                max_pending=max_pending_per_replica, top_k=top_k,
+                max_inflight=max_inflight, mesh=mesh, clock=clock,
+            )
+            for mesh in self.meshes
+        ]
+        # admission front-end: FIFO + global backpressure + drain; routing
+        # pulls single requests (batch formation happens per replica, where
+        # the bucket ladder lives)
+        self._front = MicroBatcher(
+            batch_sizes=(1,), max_wait_s=0.0, max_pending=max_pending,
+            clock=clock,
+        )
+        self.metrics = ClusterMetrics([e.metrics for e in self.engines],
+                                      clock=clock)
+
+    # -- properties ---------------------------------------------------------
+
+    @property
+    def num_replicas(self) -> int:
+        return len(self.engines)
+
+    @property
+    def depth(self) -> int:
+        """Requests held at the front-end (not yet routed to a replica)."""
+        return self._front.depth
+
+    @property
+    def idle(self) -> bool:
+        return self._front.depth == 0 and all(e.idle for e in self.engines)
+
+    # -- request path -------------------------------------------------------
+
+    def submit(self, req: VisionRequest) -> None:
+        """Admit one request; raises ``scheduler.Backpressure`` when the
+        cluster-wide admission bound is reached. Latency is stamped HERE —
+        client-observed percentiles include front-end queue wait, not just
+        time on the replica that eventually served the request."""
+        req.submitted_at = self._clock()
+        try:
+            self._front.submit(req)
+        except Exception:
+            self.metrics.inc("cluster_rejected")
+            raise
+        self.metrics.inc("cluster_submitted")
+
+    def _route(self) -> None:
+        """Move front-end requests to replicas, least-loaded first. Only
+        pulls what the replicas can admit — per-replica backpressure keeps
+        the remainder queued at the front in FIFO order."""
+        while self._front.depth:
+            open_engines = [e for e in self.engines if e.free_room > 0]
+            if not open_engines:
+                return
+            batch = self._front.poll(limit=1)
+            if batch is None:
+                return
+            target = min(open_engines, key=lambda e: e.load)
+            target.submit(batch.items[0])
+
+    def step(self) -> None:
+        """One cluster pump: route queued requests, then tick every replica
+        (retire finished device batches, dispatch ready ones)."""
+        self._route()
+        for e in self.engines:
+            e.step()
+
+    def warmup(self) -> None:
+        """Compile every bucket on every replica outside the measured path."""
+        for e in self.engines:
+            e.warmup()
+
+    def flush(self) -> None:
+        """Drain: push everything queued through the replicas and retire
+        every in-flight batch on each of them."""
+        self._front.drain(True)
+        try:
+            while not self.idle:
+                self._route()
+                for e in self.engines:
+                    if e.scheduler.depth or e._inflight:
+                        e.flush()
+        finally:
+            self._front.drain(False)
+
+    run_until_drained = flush

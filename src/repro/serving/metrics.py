@@ -1,52 +1,120 @@
-"""Serving metrics shared by both engines (DESIGN.md section 6).
+"""Serving metrics shared by engines and the cluster (DESIGN.md §6-7).
 
 ``EngineMetrics`` is host-side instrumentation only — counters, latency
-reservoirs, queue-depth samples, and the per-expert routed-token occupancy
+trackers, queue-depth samples, and the per-expert routed-token occupancy
 accumulator. Engines feed it from already-materialized host values (never
 from inside a traced function), and ``snapshot()`` renders the documented
 metrics schema that ``BENCH_serving.json`` and the examples print.
+
+``LatencyTracker`` is **merge-safe**: besides the exact-sample reservoir it
+keeps a fixed log-spaced histogram that every ``record`` lands in, so
+trackers from N replicas combine by summing histograms (and pooling the
+sample arrays while they are complete). ``ClusterMetrics`` rolls replica
+metrics up that way — cluster percentiles come from the *pooled
+distribution*, never from averaging per-replica percentiles (averaging
+percentiles is statistically meaningless: the p99 of a union is not the
+mean of the p99s).
 """
 from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+# Log-spaced latency bins: 10 us .. 100 s, 8 bins per decade. Records
+# outside the range clamp into the first/last bin.
+_BIN_EDGES = np.logspace(-5, 2, 7 * 8 + 1)
+
 
 class LatencyTracker:
-    """Bounded reservoir of latency samples with percentile readout."""
+    """Latency distribution: exact-sample reservoir + mergeable histogram.
+
+    While at most ``maxlen`` samples have been recorded the reservoir holds
+    the complete population and percentiles are exact. Beyond that the
+    fixed log-bin histogram (which never evicts) answers percentile
+    queries, so long-running and *merged* trackers stay correct.
+    """
 
     def __init__(self, maxlen: int = 8192) -> None:
+        self._maxlen = maxlen
         self._samples: deque = deque(maxlen=maxlen)
+        self._hist = np.zeros(_BIN_EDGES.size + 1, np.int64)
+        self._total = 0
+        self._sum = 0.0
+        self._max = float("-inf")
 
     def record(self, seconds: float) -> None:
-        self._samples.append(float(seconds))
+        s = float(seconds)
+        self._samples.append(s)
+        self._hist[np.searchsorted(_BIN_EDGES, s, side="right")] += 1
+        self._total += 1
+        self._sum += s
+        self._max = max(self._max, s)
 
     def __len__(self) -> int:
-        return len(self._samples)
+        return self._total
+
+    @property
+    def exact(self) -> bool:
+        """Whether the reservoir still holds every recorded sample."""
+        return self._total <= self._maxlen
+
+    def merge(self, other: "LatencyTracker") -> None:
+        """Fold another tracker's distribution into this one (cluster
+        roll-up). Histograms add; samples pool while both sides are
+        complete, after which the histogram carries the percentiles."""
+        self._hist += other._hist
+        self._total += other._total
+        self._sum += other._sum
+        self._max = max(self._max, other._max)
+        for s in other._samples:
+            self._samples.append(s)
+
+    @classmethod
+    def merged(cls, trackers: Sequence["LatencyTracker"],
+               maxlen: int = 65536) -> "LatencyTracker":
+        out = cls(maxlen=maxlen)
+        for t in trackers:
+            out.merge(t)
+        return out
+
+    def _hist_percentile(self, p: float) -> float:
+        """Percentile from the log-bin histogram (geometric bin midpoint)."""
+        if self._total == 0:
+            return float("nan")
+        target = (p / 100.0) * self._total
+        cum = np.cumsum(self._hist)
+        b = int(np.searchsorted(cum, max(target, 1), side="left"))
+        if b == 0:
+            return float(_BIN_EDGES[0])
+        if b >= _BIN_EDGES.size:
+            return float(min(_BIN_EDGES[-1], self._max))
+        return float(np.sqrt(_BIN_EDGES[b - 1] * _BIN_EDGES[b]))
 
     def percentile(self, p: float) -> float:
-        """p-th percentile in seconds (nan when empty)."""
-        if not self._samples:
+        """p-th percentile in seconds (nan when empty). Exact while the
+        sample reservoir is complete; histogram-interpolated after."""
+        if self._total == 0:
             return float("nan")
-        return float(np.percentile(np.asarray(self._samples), p))
+        if self.exact and len(self._samples) == self._total:
+            return float(np.percentile(np.asarray(self._samples), p))
+        return self._hist_percentile(p)
 
     def snapshot(self) -> Dict[str, float]:
         """Milliseconds, the unit the paper's latency tables use."""
-        if not self._samples:
+        if self._total == 0:
             return {"n": 0, "p50": float("nan"), "p95": float("nan"),
                     "p99": float("nan"), "mean": float("nan"),
                     "max": float("nan")}
-        a = np.asarray(self._samples) * 1e3
         return {
-            "n": int(a.size),
-            "p50": float(np.percentile(a, 50)),
-            "p95": float(np.percentile(a, 95)),
-            "p99": float(np.percentile(a, 99)),
-            "mean": float(a.mean()),
-            "max": float(a.max()),
+            "n": int(self._total),
+            "p50": self.percentile(50) * 1e3,
+            "p95": self.percentile(95) * 1e3,
+            "p99": self.percentile(99) * 1e3,
+            "mean": (self._sum / self._total) * 1e3,
+            "max": self._max * 1e3,
         }
 
 
@@ -105,6 +173,12 @@ class EngineMetrics:
     # -- readout ------------------------------------------------------------
 
     @property
+    def window(self):
+        """(first_submission_t, last_completion_t) — the FPS window bounds
+        (either may be None). ``ClusterMetrics`` unions replica windows."""
+        return self._first_t, self._last_t
+
+    @property
     def fps(self) -> float:
         """Completed frames (or tokens for LM engines) per wall second,
         measured from the first submission to the last completion event."""
@@ -135,6 +209,87 @@ class EngineMetrics:
                 "last": self._depth_last,
             },
             "expert_tokens": self.expert_tokens.tolist(),
-            "expert_occupancy": [round(float(x), 6)
-                                 for x in self.occupancy()],
+            "expert_occupancy": _occupancy_of(self.expert_tokens),
+        }
+
+
+def _occupancy_of(tokens: np.ndarray) -> List[float]:
+    """Normalized + rounded occupancy — the one formula both the replica
+    and the aggregate snapshot fields render with."""
+    total = tokens.sum()
+    if total == 0:
+        return [0.0] * int(tokens.size)
+    return [round(float(x), 6) for x in tokens / float(total)]
+
+
+class ClusterMetrics:
+    """Merge-safe roll-up over N replica ``EngineMetrics`` (DESIGN.md §7).
+
+    Aggregation rules:
+      * counters — summed;
+      * FPS — total frames over the *union* of replica windows (earliest
+        first-submission to latest completion), not a sum of replica FPS
+        (replica windows overlap under shared load);
+      * latency percentiles — ``LatencyTracker.merged`` over the pooled
+        distribution (histogram-sum + sample pooling), never an average of
+        per-replica percentiles;
+      * per-expert occupancy — routed-token histograms summed across
+        replicas, then normalized.
+    """
+
+    def __init__(self, replicas: Sequence[EngineMetrics],
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self._replicas = list(replicas)
+        self._clock = clock
+        self._first_t: Optional[float] = None
+        # cluster-front-end counters (admission rejections etc.)
+        self.counters: Dict[str, int] = {}
+
+    def inc(self, name: str, n: int = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + n
+        if name == "cluster_submitted" and self._first_t is None:
+            self._first_t = self._clock()  # window opens at admission
+
+    @property
+    def fps(self) -> float:
+        frames = sum(
+            m.counters.get("frames", 0) or m.counters.get("tokens", 0)
+            for m in self._replicas
+        )
+        firsts = [m.window[0] for m in self._replicas
+                  if m.window[0] is not None]
+        if self._first_t is not None:
+            firsts.append(self._first_t)  # front-end admission opens earlier
+        lasts = [m.window[1] for m in self._replicas
+                 if m.window[1] is not None]
+        if not firsts or not lasts or max(lasts) <= min(firsts):
+            return float("nan")
+        return frames / (max(lasts) - min(firsts))
+
+    def merged_request_latency(self) -> LatencyTracker:
+        return LatencyTracker.merged(
+            [m.request_latency for m in self._replicas])
+
+    def snapshot(self) -> dict:
+        counters: Dict[str, int] = dict(self.counters)
+        for m in self._replicas:
+            for k, v in m.counters.items():
+                counters[k] = counters.get(k, 0) + v
+        sizes = {m.expert_tokens.size for m in self._replicas}
+        if len(sizes) == 1 and self._replicas:
+            tokens = np.sum(
+                [m.expert_tokens for m in self._replicas], axis=0)
+        else:
+            tokens = np.zeros(0, np.int64)
+        return {
+            "replicas": [m.snapshot() for m in self._replicas],
+            "aggregate": {
+                "counters": counters,
+                "fps": self.fps,
+                "latency_ms": self.merged_request_latency().snapshot(),
+                "batch_latency_ms": LatencyTracker.merged(
+                    [m.batch_latency for m in self._replicas]).snapshot(),
+                "expert_tokens": tokens.tolist(),
+                "expert_occupancy": _occupancy_of(tokens),
+            },
         }

@@ -27,9 +27,12 @@ import time
 from collections import deque
 from typing import Callable, List, NamedTuple, Optional, Sequence
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import models
 from repro.configs.base import ModelConfig
@@ -76,6 +79,7 @@ class VisionEngine:
         max_pending: int = 1024,
         top_k: int = 5,
         max_inflight: int = 2,
+        mesh: Optional[Mesh] = None,
         clock: Callable[[], float] = time.monotonic,
     ) -> None:
         if cfg.family not in ("vit", "vit_moe"):
@@ -96,10 +100,59 @@ class VisionEngine:
         )
         self.max_inflight = max(1, int(max_inflight))
         self._inflight: deque = deque()
+        self.mesh = mesh
+        self._ep = (cfg.moe is not None
+                    and cfg.moe.moe_exec == "expert_parallel")
         cfg_c, k = self.cfg, self.top_k
-        self._classify = jax.jit(
-            lambda prm, x: models.classify(prm, cfg_c, x, top_k=k)
-        )
+        fwd = lambda prm, x: models.classify(prm, cfg_c, x, top_k=k)
+        if mesh is None:
+            if self._ep:
+                raise ValueError(
+                    "moe_exec='expert_parallel' needs mesh= (a 'model'-axis "
+                    "mesh whose size divides num_experts)")
+            self._classify = jax.jit(fwd)
+        else:
+            # pin this replica to its mesh slice: params device_put with
+            # per-leaf specs (expert stacks sharded over 'model' under EP,
+            # everything replicated otherwise), forward jitted against them
+            from repro.distributed.expert_parallel import (
+                use_ep_mesh,
+                validate_ep,
+            )
+            from repro.distributed.sharding_rules import (
+                EXPERT_PARALLEL_RULES,
+                fit_specs_to_tree,
+                param_specs,
+            )
+
+            if self._ep:
+                validate_ep(self.cfg, mesh)
+                specs = fit_specs_to_tree(
+                    param_specs(self.cfg, mesh, rules=EXPERT_PARALLEL_RULES),
+                    params,
+                )
+            else:
+                specs = jax.tree.map(lambda _: P(), params)
+            named = lambda tree: jax.tree.map(
+                lambda s: NamedSharding(mesh, s), tree,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            self.params = jax.device_put(params, named(specs))
+            jitted = jax.jit(fwd, in_shardings=(
+                named(specs), NamedSharding(mesh, P())))
+            ep_scope = (
+                (lambda: use_ep_mesh(mesh)) if self._ep
+                else contextlib.nullcontext
+            )
+
+            def call(prm, x):
+                # the EP mesh is ambient trace-time state; entering the
+                # scope on every call keeps retraces (new bucket shapes)
+                # correct and costs nothing once compiled
+                with ep_scope():
+                    return jitted(prm, x)
+
+            self._classify = call
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -110,10 +163,32 @@ class VisionEngine:
             x = jnp.zeros((b, self.n_patches, vit.PATCH_DIM), jnp.float32)
             jax.block_until_ready(self._classify(self.params, x))
 
+    @property
+    def load(self) -> int:
+        """Queued + in-flight requests — the cluster's least-loaded routing
+        signal (DESIGN.md section 7)."""
+        return self.scheduler.depth + sum(
+            len(f.reqs) for f in self._inflight)
+
+    @property
+    def idle(self) -> bool:
+        return self.scheduler.depth == 0 and not self._inflight
+
+    @property
+    def free_room(self) -> float:
+        """Admission slots left before ``submit`` raises ``Backpressure``
+        (inf when unbounded)."""
+        if self.scheduler.max_pending == 0:
+            return float("inf")
+        return max(0, self.scheduler.max_pending - self.scheduler.depth)
+
     def submit(self, req: VisionRequest) -> None:
         """Enqueue one image; raises ``scheduler.Backpressure`` when the
-        pending queue is at ``max_pending``."""
-        req.submitted_at = self._clock()
+        pending queue is at ``max_pending``. A ``submitted_at`` already
+        stamped upstream (the cluster front-end) is preserved so request
+        latency includes admission-queue wait, not just replica time."""
+        if not req.submitted_at:
+            req.submitted_at = self._clock()
         try:
             self.scheduler.submit(req)
         except Exception:

@@ -12,6 +12,20 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def requires_devices(n: int):
+    """Skip (never fail) a multi-device test when the process has fewer
+    devices. The CI multi-device step fakes them with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; a plain tier-1
+    run on one CPU device skips these gracefully."""
+    return pytest.mark.skipif(
+        jax.device_count() < n,
+        reason=(
+            f"needs >= {n} devices; run with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}"
+        ),
+    )
+
+
 @pytest.fixture(autouse=True, scope="module")
 def _clear_jax_caches():
     """Cap jit-executable accumulation across the suite (the box has one

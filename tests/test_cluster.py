@@ -1,0 +1,207 @@
+"""ServingCluster: multi-replica request path, least-loaded routing,
+two-level backpressure, drain, and the merge-safe metrics roll-up
+(DESIGN.md section 7).
+
+Most tests run replicas that share the single CPU device (host-side DP —
+the routing/metrics logic is device-count-independent); the expert-parallel
+replica test skips below 8 devices.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import requires_devices
+
+import repro.models as M
+from repro.configs import get_shape, smoke_config
+from repro.core.quant.ptq import calibrate_model, ptq_model, quantized_config
+from repro.serving.cluster import ServingCluster, replica_meshes
+from repro.serving.metrics import ClusterMetrics, EngineMetrics, LatencyTracker
+from repro.serving.scheduler import Backpressure
+from repro.serving.vision import synth_requests
+
+
+@pytest.fixture(scope="module")
+def moe_vit_trees():
+    cfg = smoke_config("m3vit-small").replace(remat=False)
+    shape = get_shape("train_4k").replace(seq_len=24, global_batch=2)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    batches = [M.synth_batch(cfg, shape, jax.random.PRNGKey(i))
+               for i in range(2)]
+    taps = calibrate_model(cfg, params, batches)
+    return cfg, params, ptq_model(cfg, params, taps, materialize="int8")
+
+
+def _serve(cluster, reqs):
+    for r in reqs:
+        cluster.submit(r)
+        cluster.step()
+    cluster.flush()
+    assert all(r.done for r in reqs)
+
+
+def test_replica_meshes_split_and_oversubscribe():
+    n_dev = jax.device_count()
+    meshes = replica_meshes(1)
+    assert len(meshes) == 1 and meshes[0].axis_names == ("model",)
+    assert meshes[0].shape["model"] == n_dev
+    # equal contiguous split when devices are plentiful
+    meshes = replica_meshes(n_dev)
+    assert len(meshes) == n_dev
+    assert all(m.shape["model"] == 1 for m in meshes)
+    # more replicas than devices: they share devices rather than failing
+    meshes = replica_meshes(n_dev + 2)
+    assert len(meshes) == n_dev + 2
+    assert all(m.shape["model"] == 1 for m in meshes)
+
+
+def test_cluster_serves_across_replicas(moe_vit_trees):
+    cfg, params, _ = moe_vit_trees
+    cluster = ServingCluster(cfg, params, replicas=2, batch_buckets=(1, 2),
+                             max_wait_s=0.0, top_k=3)
+    reqs = synth_requests(cfg, 10, seed=1)
+    _serve(cluster, reqs)
+    snap = cluster.metrics.snapshot()
+    agg = snap["aggregate"]
+    assert len(snap["replicas"]) == 2
+    assert agg["counters"]["frames"] == 10
+    assert agg["counters"]["completed"] == 10
+    assert agg["counters"]["cluster_submitted"] == 10
+    assert agg["latency_ms"]["n"] == 10
+    assert np.isfinite(agg["fps"]) and agg["fps"] > 0
+    # least-loaded routing engaged both replicas under a 10-request stream
+    per_replica = [r["counters"].get("frames", 0) for r in snap["replicas"]]
+    assert all(n > 0 for n in per_replica)
+    assert sum(per_replica) == 10
+
+
+def test_cluster_results_match_direct_forward(moe_vit_trees):
+    """Routing through replicas never changes the answer (padding and
+    placement leak nothing)."""
+    cfg, params, _ = moe_vit_trees
+    cluster = ServingCluster(cfg, params, replicas=2, batch_buckets=(2,),
+                             max_wait_s=0.0, top_k=4)
+    reqs = synth_requests(cfg, 6, seed=11)
+    _serve(cluster, reqs)
+    for r in reqs:
+        out = M.classify(params, cfg, jnp.asarray(r.patches)[None], top_k=4)
+        np.testing.assert_array_equal(r.classes,
+                                      np.asarray(out["classes"])[0])
+
+
+def test_cluster_int8_tree_serves(moe_vit_trees):
+    cfg, _, p_int8 = moe_vit_trees
+    qcfg = quantized_config(cfg)
+    cluster = ServingCluster(qcfg, p_int8, replicas=2, batch_buckets=(1, 2),
+                             max_wait_s=0.0)
+    reqs = synth_requests(cfg, 5, seed=2)
+    _serve(cluster, reqs)
+    agg = cluster.metrics.snapshot()["aggregate"]
+    assert agg["counters"]["frames"] == 5
+    # occupancy summed across replicas still normalizes to 1
+    assert sum(agg["expert_occupancy"]) == pytest.approx(1.0)
+    assert sum(agg["expert_tokens"]) > 0
+
+
+def test_cluster_two_level_backpressure(moe_vit_trees):
+    cfg, params, _ = moe_vit_trees
+    cluster = ServingCluster(cfg, params, replicas=2, batch_buckets=(4,),
+                             max_wait_s=100.0, max_pending=3,
+                             max_pending_per_replica=1)
+    reqs = synth_requests(cfg, 6, seed=3)
+    # per-replica bound (1 each) fills first; the front-end holds the rest
+    cluster.submit(reqs[0])
+    cluster.submit(reqs[1])
+    cluster._route()
+    assert cluster.depth == 0  # both routed, one per replica
+    cluster.submit(reqs[2])
+    cluster._route()
+    assert cluster.depth == 1  # replicas full -> held at the front
+    cluster.submit(reqs[3])
+    cluster.submit(reqs[4])
+    with pytest.raises(Backpressure):  # front-end bound (3) reached
+        cluster.submit(reqs[5])
+    assert cluster.metrics.counters["cluster_rejected"] == 1
+    cluster.flush()  # everything admitted still completes
+    assert all(r.done for r in reqs[:5])
+
+
+@requires_devices(8)
+def test_cluster_ep_replica_end_to_end(moe_vit_trees):
+    """DP x EP composition: one replica spanning all devices with sharded
+    expert stacks serves correctly through the cluster front-end."""
+    cfg, _, p_int8 = moe_vit_trees
+    qcfg = quantized_config(cfg).replace(
+        moe=dataclasses.replace(quantized_config(cfg).moe,
+                                moe_exec="expert_parallel"))
+    cluster = ServingCluster(qcfg, p_int8, replicas=1, batch_buckets=(1, 2),
+                             max_wait_s=0.0)
+    assert cluster.meshes[0].shape["model"] == jax.device_count()
+    reqs_a = synth_requests(cfg, 4, seed=9)
+    _serve(cluster, reqs_a)
+    # EP serving returns the same classes as the single-device int8 forward
+    base = quantized_config(cfg)
+    for r in reqs_a:
+        out = M.classify(p_int8, base, jnp.asarray(r.patches)[None], top_k=5)
+        np.testing.assert_array_equal(r.classes,
+                                      np.asarray(out["classes"])[0])
+
+
+# ---------------------------------------------------------------------------
+# Merge-safe metrics
+# ---------------------------------------------------------------------------
+
+def test_latency_tracker_merge_pools_not_averages():
+    """Merged percentiles come from the pooled distribution. Averaging
+    per-replica p99s would be wrong — construct a case where the two
+    disagree and assert we produce the pooled answer."""
+    a, b = LatencyTracker(), LatencyTracker()
+    for _ in range(98):
+        a.record(0.010)
+    a.record(1.000)
+    a.record(1.000)  # a: 2% 1s tail -> per-replica p99 = 1s
+    for _ in range(900):
+        b.record(0.010)  # b: all 10ms
+    merged = LatencyTracker.merged([a, b])
+    assert len(merged) == 1000
+    pooled_p99 = merged.percentile(99)
+    avg_of_p99 = (a.percentile(99) + b.percentile(99)) / 2
+    # pooled: the 1s outliers are 0.2% of the union -> p99 stays ~10ms;
+    # averaging per-replica p99s would report ~0.5s
+    assert pooled_p99 < 0.05
+    assert avg_of_p99 > 0.4
+    np.testing.assert_allclose(merged.percentile(50), 0.010, rtol=1e-6)
+
+
+def test_latency_tracker_histogram_survives_reservoir_eviction():
+    """Beyond the reservoir bound the histogram still answers percentiles
+    over the FULL population (a deque-only tracker forgets old samples)."""
+    t = LatencyTracker(maxlen=64)
+    for _ in range(1000):
+        t.record(0.001)  # old mass: 1ms
+    for _ in range(10):
+        t.record(1.0)  # recent mass: 1s
+    assert not t.exact
+    # reservoir holds only the most recent 64 (mostly 1s); the histogram
+    # remembers that 99% of the population was ~1ms
+    p50 = t.percentile(50)
+    assert p50 < 0.01, f"p50 forgot the evicted population: {p50}"
+    assert t.snapshot()["n"] == 1010
+
+
+def test_cluster_metrics_window_union_fps():
+    clock_t = [0.0]
+    clock = lambda: clock_t[0]
+    m1, m2 = EngineMetrics(clock=clock), EngineMetrics(clock=clock)
+    clock_t[0] = 0.0
+    m1.inc("submitted")
+    m2.inc("submitted")
+    clock_t[0] = 1.0
+    m1.work_done(30, "frames")
+    clock_t[0] = 2.0
+    m2.work_done(30, "frames")
+    cm = ClusterMetrics([m1, m2])
+    # 60 frames over the union window [0, 2] -> 30 FPS (NOT 30+15=45)
+    assert cm.fps == pytest.approx(30.0)

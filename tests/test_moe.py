@@ -9,6 +9,8 @@ from hyp_compat import given, settings, st
 
 from repro.core.moe.dispatch import (
     capacity,
+    ep_exchange_plan,
+    expert_of_sorted_rows,
     grouped_combine,
     grouped_dispatch,
     gshard_dispatch_combine,
@@ -118,7 +120,72 @@ def test_grouped_and_gshard_impl_agree_end_to_end(rng):
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-3)
 
 
+def test_gshard_grouped_parity_documents_capacity_divergence(rng):
+    """Parity on IDENTICAL routing, and the one place the paths diverge.
+
+    ``grouped`` (sort-based unified kernel) is dropless: every routed
+    (token, slot) pair is computed. ``gshard`` admits at most ``cap``
+    tokens per expert in routing-priority (= token) order and **drops the
+    overflow** — dropped slots contribute exactly zero to the combine.
+    That divergence is inherent to capacity dispatch (why serving forces
+    ``impl="grouped"``, see ``serving.engine.serving_config``); this test
+    pins down its exact shape: admitted rows match grouped bit-for-bit in
+    structure, overflow rows are zero.
+    """
+    from repro.kernels.ref import grouped_matmul_ref
+
+    T, D, F, E, k = 16, 8, 6, 2, 1
+    x = jnp.asarray(rng.standard_normal((T, D)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((E, D, F)), jnp.float32)
+    # skewed routing: every token to expert 0 — overflow is guaranteed
+    experts = jnp.zeros((T, k), jnp.int32)
+    weights = jnp.asarray(rng.random((T, k)), jnp.float32)
+
+    d = grouped_dispatch(x, experts, weights, E)
+    y_grouped = grouped_combine(
+        grouped_matmul_ref(d.x_sorted, w, d.group_sizes), d, T)
+
+    cap = 5  # < T: tokens 5..15 overflow expert 0 and are dropped
+    disp, comb = gshard_dispatch_combine(x, experts, weights, E, cap)
+    ein = jnp.einsum("tec,td->ecd", disp, x)
+    eout = jnp.einsum("ecd,edf->ecf", ein, w)
+    y_gshard = jnp.einsum("tec,ecf->tf", comb, eout)
+
+    # admitted prefix (priority order == token order for k=1): parity
+    np.testing.assert_allclose(np.asarray(y_gshard[:cap]),
+                               np.asarray(y_grouped[:cap]), atol=1e-4)
+    # overflow: grouped still computes them, gshard drops them to zero
+    np.testing.assert_allclose(np.asarray(y_gshard[cap:]),
+                               np.zeros((T - cap, F)), atol=1e-6)
+    assert float(jnp.min(jnp.abs(y_grouped[cap:]).sum(-1))) > 0.0
+
+
 def test_capacity_function_bounds():
     assert capacity(100, 2, 8, 1.25) >= 100 * 2 * 1.25 / 8
     assert capacity(100, 2, 8, 1.25) <= 100
     assert capacity(2, 1, 64, 1.0) >= 4  # floor
+
+
+def test_ep_exchange_plan_is_a_partition(rng):
+    """The expert-parallel send plan assigns every sorted row exactly one
+    (dest shard, position) slot, positions are dense per shard, and local
+    expert ids are consistent with the global sort."""
+    E, n_shards, T, k = 8, 4, 13, 2
+    e_local = E // n_shards
+    experts = jnp.asarray(rng.integers(0, E, (T, k)), jnp.int32)
+    x = jnp.asarray(rng.standard_normal((T, 4)), jnp.float32)
+    w = jnp.ones((T, k), jnp.float32)
+    d = grouped_dispatch(x, experts, w, E)
+    R = T * k
+    plan = ep_exchange_plan(d.group_sizes, n_shards, R)
+    assert int(plan.shard_counts.sum()) == R
+    # (shard, pos) pairs are unique and dense: pos < count of that shard
+    pairs = set()
+    for s, p0 in zip(np.asarray(plan.row_shard), np.asarray(plan.row_pos)):
+        assert 0 <= p0 < int(plan.shard_counts[s])
+        pairs.add((int(s), int(p0)))
+    assert len(pairs) == R
+    glob = expert_of_sorted_rows(d.group_sizes, R)
+    np.testing.assert_array_equal(
+        np.asarray(plan.row_shard) * e_local + np.asarray(plan.row_local_expert),
+        np.asarray(glob))
