@@ -1,0 +1,222 @@
+"""Autoscaling admission benchmark: offered-load ramp -> replica-count
+trace (DESIGN.md section 8; the ROADMAP "Autoscaling admission" item made
+measurable).
+
+Drives an open-loop arrival process through ``ServingCluster`` +
+``Autoscaler`` in three phases — low, surge (past one replica's measured
+capacity), low — and samples a trace of (t, active replicas, standby,
+draining, front depth, windowed p95). The expected shape, asserted softly
+and written to ``BENCH_autoscale.json``:
+
+  * the replica count **rises** during the surge (pre-warmed standbys
+    promoted into the router) and **falls back** in the final low phase
+    (replicas drained to standby);
+  * pooled p95 latency returns under the SLO after scale-up;
+  * **no request is lost**: every submitted request completes, including
+    the ones in flight on replicas that drain mid-run.
+
+Single-replica capacity is measured first (closed-loop burst on a
+throwaway engine), so the surge rate adapts to the machine — the trace
+shape is load-real even though all replicas share one CPU.
+
+  PYTHONPATH=src python benchmarks/serve_autoscale.py --smoke
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python benchmarks/serve_autoscale.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def measure_single_replica_fps(cfg, params, bucket: int, n: int) -> float:
+    """Closed-loop FPS of one replica (throwaway engine: keeps the
+    measurement out of the cluster's metrics)."""
+    from repro.serving.vision import VisionEngine, synth_requests
+
+    eng = VisionEngine(cfg, params, batch_buckets=(bucket,), max_wait_s=0.0)
+    eng.warmup()
+    reqs = synth_requests(cfg, n, seed=99)
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+        eng.step()
+    eng.flush()
+    return n / (time.perf_counter() - t0)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="m3vit-tiny")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced smoke config + short phases (CI)")
+    ap.add_argument("--out", default="BENCH_autoscale.json")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="p95 SLO; 0 = auto (8x the closed-loop batch time)")
+    ap.add_argument("--max-replicas", type=int, default=4)
+    ap.add_argument("--phase-s", type=float, default=0.0,
+                    help="surge-phase duration; 0 = 2.5s (smoke) / 6s")
+    args = ap.parse_args()
+
+    import jax
+
+    import repro.models as M
+    from repro.configs import PAPER_ARCHS, AutoscaleConfig, smoke_config
+    from repro.serving.autoscaler import Autoscaler
+    from repro.serving.cluster import ServingCluster
+    from repro.serving.vision import synth_requests
+
+    if args.smoke:
+        cfg = smoke_config(args.arch).replace(remat=False)
+        bucket, est_n = 2, 16
+    else:
+        cfg = PAPER_ARCHS[args.arch].replace(remat=False)
+        bucket, est_n = 4, 64
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+
+    cap_fps = measure_single_replica_fps(cfg, params, bucket, est_n)
+    slo_ms = args.slo_ms or max(50.0, 8e3 * bucket / cap_fps)
+    surge_s = args.phase_s or (2.5 if args.smoke else 6.0)
+    # surge past one replica's capacity, but not past the fleet's: on a
+    # shared-compute box an unbounded 2.5x overload just builds a backlog
+    # no amount of scale-up can absorb — the interesting regime is the one
+    # where added replicas actually clear the queue
+    phases = [  # (duration_s, offered rate in requests/s)
+        ("low", surge_s * 0.6, 0.4 * cap_fps),
+        ("surge", surge_s, 1.6 * cap_fps),
+        ("low", surge_s * 1.6, 0.15 * cap_fps),
+    ]
+    print(f"arch={cfg.name} devices={jax.device_count()} "
+          f"single-replica capacity ~{cap_fps:.1f} FPS, SLO p95 {slo_ms:.0f}ms")
+
+    # the controller is evaluated on a fixed wall-clock cadence (the pump
+    # spins much faster), so patience/cooldown/TTL counts mean stable
+    # wall-time amounts regardless of how hot the serving loop runs
+    tick_every = 0.005
+    policy = AutoscaleConfig(
+        min_replicas=1, max_replicas=args.max_replicas,
+        standby=args.max_replicas - 1,
+        slo_p95_ms=slo_ms, depth_high=2.0 * bucket, up_patience=2,
+        depth_low=0.0, down_patience=60, cooldown=40,
+        min_window_samples=8, p95_ttl=200,
+    )
+    cluster = ServingCluster(
+        cfg, params, replicas=policy.min_replicas, standby=policy.standby,
+        batch_buckets=(1, bucket), max_wait_s=1e-3,
+        max_pending=0, max_pending_per_replica=2 * bucket,
+        clock=time.perf_counter,  # one clock for trace, timeline, events
+    )
+    cluster.warmup()
+    scaler = Autoscaler(cluster, policy)
+
+    # open-loop arrival schedule
+    arrivals = []
+    t = 0.0
+    for _, dur, rate in phases:
+        end = t + dur
+        while t < end:
+            arrivals.append(t)
+            t += 1.0 / rate
+    reqs = synth_requests(cfg, len(arrivals), seed=0)
+
+    trace = []
+    sample_every = 0.05
+    t0 = time.perf_counter()
+    next_sample = 0.0
+    next_tick = 0.0
+    i = 0
+
+    def pump(now: float) -> None:
+        nonlocal next_tick, next_sample
+        cluster.step()
+        if now >= next_tick:
+            scaler.tick()
+            next_tick = now + tick_every
+        if now >= next_sample:
+            s = scaler.state()
+            s["t"] = round(now, 4)
+            trace.append(s)
+            next_sample = now + sample_every
+
+    while i < len(arrivals) or not cluster.idle:
+        now = time.perf_counter() - t0
+        while i < len(arrivals) and arrivals[i] <= now:
+            cluster.submit(reqs[i])
+            i += 1
+        pump(now)
+    cluster.flush()
+    # post-ramp cooldown: keep ticking so the controller drains back down
+    deadline = time.perf_counter() - t0 + 3 * surge_s
+    while (cluster.num_replicas > policy.min_replicas
+           and time.perf_counter() - t0 < deadline):
+        pump(time.perf_counter() - t0)
+    wall = time.perf_counter() - t0
+    final = scaler.state()
+    final["t"] = round(wall, 4)
+    trace.append(final)
+
+    assert all(r.done for r in reqs), "requests lost across the ramp/drain"
+    snap = cluster.metrics.snapshot()
+    agg = snap["aggregate"]
+    counts = [row["replicas"] for row in trace]
+    peak = max(counts)
+    first_peak = counts.index(peak)
+    # windowed p95 samples after the fleet reached peak size: scale-up is
+    # "working" if latency recovers under the SLO at some point (the surge
+    # backlog takes a few windows to clear; "the last sample" would be
+    # hostage to scheduling noise on a shared box)
+    post_peak_p95 = [row["p95_ms"] for row in trace[first_peak:]
+                     if row["p95_ms"] == row["p95_ms"]]
+    checks = {
+        "replicas_rose": peak > policy.min_replicas,
+        "replicas_fell_back": counts[-1] == policy.min_replicas,
+        "p95_under_slo_after_scale_up": bool(
+            post_peak_p95 and min(post_peak_p95) <= slo_ms),
+        "no_request_lost": agg["counters"]["completed"] == len(reqs),
+    }
+    for name, ok in checks.items():
+        print(f"  [{'ok' if ok else 'MISS'}] {name}")
+    print(f"replica count: start=1 peak={peak} end={counts[-1]}  "
+          f"fps={agg['fps']:.1f}  p95={agg['latency_ms']['p95']:.1f}ms  "
+          f"completed={agg['counters']['completed']}/{len(reqs)}")
+
+    report = {
+        "meta": {
+            "bench": "serve_autoscale",
+            "mode": "smoke" if args.smoke else "full",
+            "arch": cfg.name,
+            "devices": jax.device_count(),
+            "single_replica_fps": cap_fps,
+            "slo_p95_ms": slo_ms,
+            "phases": [{"name": n, "duration_s": d, "rate_rps": r}
+                       for n, d, r in phases],
+            "wall_s": wall,
+            "note": ("CPU-host run: all replicas share compute, so the "
+                     "trace shows controller behavior under real load, "
+                     "not hardware speedup"),
+        },
+        "policy": {k: getattr(policy, k) for k in (
+            "min_replicas", "max_replicas", "standby", "slo_p95_ms",
+            "depth_high", "up_patience", "depth_low", "down_patience",
+            "cooldown", "min_window_samples")},
+        "checks": checks,
+        # cluster clock is perf_counter; report times relative to ramp start
+        "scale_events": [
+            {"t": round(t - t0, 4), "action": a, "replicas": n}
+            for t, a, n in scaler.events
+        ],
+        "trace": trace,
+        "replica_timeline": [[round(t - t0, 4), n]
+                             for t, n in snap["replica_timeline"]],
+        "aggregate": agg,
+        "fps": agg["fps"],
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out} ({len(trace)} trace samples, "
+          f"{len(scaler.events)} scale events)")
+
+
+if __name__ == "__main__":
+    main()

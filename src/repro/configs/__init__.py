@@ -7,6 +7,7 @@ from typing import Dict
 from repro.configs import moe_vit as _moe_vit
 from repro.configs.base import (
     AttnConfig,
+    AutoscaleConfig,
     DECODE_32K,
     FULL_ATTENTION_FAMILIES,
     LONG_500K,

@@ -82,6 +82,43 @@ class QuantConfig:
 
 
 @dataclass(frozen=True)
+class AutoscaleConfig:
+    """Target-range admission autoscaling for ``ServingCluster``
+    (serving/autoscaler.py — DESIGN.md section 8).
+
+    The controller reacts to two pressure signals: front-end queue depth
+    per active replica and the *windowed* pooled p95 request latency vs the
+    SLO. Hysteresis comes from patience (consecutive breached evaluations
+    before acting) plus a post-action cooldown, so a bursty arrival process
+    does not flap the replica set."""
+
+    min_replicas: int = 1
+    max_replicas: int = 8
+    # pre-warmed standby pool size ServingCluster should hold (replicas
+    # beyond it are spawned + warmed on demand, which is much slower)
+    standby: int = 1
+    # scale-up triggers: front-end depth per active replica, or pooled
+    # windowed p95 over the SLO
+    depth_high: float = 4.0
+    slo_p95_ms: float = 250.0
+    up_patience: int = 2
+    # scale-down triggers: total load at/below depth_low AND p95 under
+    # down_margin * SLO, sustained for down_patience evaluations
+    depth_low: float = 0.0
+    down_margin: float = 0.5
+    down_patience: int = 16
+    # evaluations to wait after any scale action before the next one
+    cooldown: int = 8
+    # samples needed before the windowed p95 advances (below it the window
+    # keeps accumulating and the previous estimate holds)
+    min_window_samples: int = 8
+    # evaluations without a window close before the p95 estimate expires to
+    # NaN — a breach measured during a surge must not keep scaling (or pin
+    # the replica count) once traffic has stopped
+    p95_ttl: int = 32
+
+
+@dataclass(frozen=True)
 class ModelConfig:
     name: str
     # dense | moe | ssm | hybrid | encdec | vlm | vit | vit_moe

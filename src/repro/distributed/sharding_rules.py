@@ -68,6 +68,9 @@ def spec_for_axes(axes: Tuple[Optional[str], ...], rules=DEFAULT_RULES,
     out = []
     for i, ax in enumerate(axes):
         mesh_ax = table.get(ax) if ax is not None else None
+        if mesh_ax is not None and mesh is not None \
+                and mesh_ax not in mesh.shape:
+            mesh_ax = None  # mesh lacks the axis (e.g. ('model',)-only)
         if mesh_ax is not None and shape is not None and mesh is not None:
             if shape[i] % mesh.shape.get(mesh_ax, 1) != 0:
                 mesh_ax = None
@@ -129,18 +132,20 @@ def _axis_size(mesh: Mesh, ax) -> int:
     if ax is None:
         return 1
     if isinstance(ax, tuple):
-        return int(np.prod([mesh.shape[a] for a in ax]))
-    return mesh.shape[ax]
+        return int(np.prod([mesh.shape.get(a, 1) for a in ax]))
+    return mesh.shape.get(ax, 1)
 
 
 def _fit(entries, shape, mesh: Mesh) -> P:
-    """Drop spec entries whose dim is not divisible (or whose mesh axis is
-    already used)."""
+    """Drop spec entries whose dim is not divisible, whose mesh axis is
+    already used, or whose axis the mesh does not carry (replica slices are
+    1-axis ('model',) meshes — batch entries naming 'data' degrade)."""
     used = set()
     out = []
     for dim, ax in zip(shape, entries):
         axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
         if (ax is None or any(a in used for a in axes)
+                or any(a not in mesh.shape for a in axes)
                 or dim % _axis_size(mesh, ax) != 0):
             out.append(None)
         else:

@@ -1,7 +1,14 @@
 """Serving launcher: batched generation with the CoQMoE quantized path.
 
+Single engine:
+
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
       --requests 8 --new-tokens 16 --quantized
+
+Multi-replica LM cluster (engine-agnostic front-end, DESIGN.md section 8):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+      --requests 16 --replicas 2
 """
 from __future__ import annotations
 
@@ -13,6 +20,7 @@ import numpy as np
 
 from repro import models
 from repro.configs import get_config, smoke_config
+from repro.serving.cluster import ServingCluster
 from repro.serving.engine import Request, ServeEngine
 
 
@@ -25,6 +33,9 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--replicas", type=int, default=0,
+                    help=">=2 serves through a ServingCluster of ServeEngine "
+                         "replicas (one front-end, least-loaded routing)")
     ap.add_argument("--quantized", action="store_true",
                     help="enable W8A8 + int8 KV + 4-bit log-sqrt2 attention")
     ap.add_argument("--seed", type=int, default=0)
@@ -36,16 +47,51 @@ def main() -> None:
 
         cfg = cfg.replace(quant=dataclasses.replace(cfg.quant, enable=True))
     params = models.init_model_params(cfg, jax.random.PRNGKey(args.seed))
-    engine = ServeEngine(cfg, params, batch_slots=args.slots,
-                         max_len=args.max_len)
     rng = np.random.default_rng(args.seed)
-    for uid in range(args.requests):
-        engine.submit(Request(
+    reqs = [
+        Request(
             uid=uid,
             prompt=rng.integers(0, cfg.vocab_size,
                                 args.prompt_len).astype(np.int32),
             max_new_tokens=args.new_tokens,
-        ))
+        )
+        for uid in range(args.requests)
+    ]
+
+    if args.replicas >= 2:
+        cluster = ServingCluster(cfg, params, replicas=args.replicas,
+                                 engine="lm", batch_slots=args.slots,
+                                 max_len=args.max_len)
+        cluster.warmup()
+        t0 = time.perf_counter()
+        for r in reqs:
+            cluster.submit(r)
+            cluster.step()
+        cluster.flush()
+        dt = time.perf_counter() - t0
+        total = args.requests * args.new_tokens
+        print(f"generated {total} tokens in {dt:.2f}s "
+              f"({total / dt:.1f} tok/s, replicas={cluster.num_replicas}, "
+              f"quantized={args.quantized})")
+        snap = cluster.metrics.snapshot()
+        agg = snap["aggregate"]
+        print(f"aggregate: tokens/s={agg['fps']:.1f} "
+              f"latency p50={agg['latency_ms']['p50']:.0f}ms "
+              f"p99={agg['latency_ms']['p99']:.0f}ms "
+              f"queue_wait p95={agg['queue_wait_ms']['p95']:.1f}ms")
+        for i, rep in enumerate(snap["replicas"]):
+            print(f"  replica {i}: tokens={rep['counters'].get('tokens', 0)} "
+                  f"completed={rep['counters'].get('completed', 0)} "
+                  f"p50={rep['latency_ms']['p50']:.0f}ms")
+        if agg["expert_tokens"]:
+            occ = ", ".join(f"{x:.3f}" for x in agg["expert_occupancy"])
+            print(f"expert occupancy (summed over replicas): [{occ}]")
+        return
+
+    engine = ServeEngine(cfg, params, batch_slots=args.slots,
+                         max_len=args.max_len)
+    for r in reqs:
+        engine.submit(r)
     t0 = time.perf_counter()
     engine.run_until_drained()
     dt = time.perf_counter() - t0

@@ -1,13 +1,22 @@
+from repro.serving.autoscaler import Autoscaler
 from repro.serving.cluster import ServingCluster, replica_meshes
 from repro.serving.engine import Request, ServeEngine, build_serve_step
-from repro.serving.metrics import ClusterMetrics, EngineMetrics, LatencyTracker
+from repro.serving.metrics import (
+    ClusterMetrics,
+    EngineMetrics,
+    LatencyTracker,
+    hist_percentile,
+)
+from repro.serving.replica import EngineReplica
 from repro.serving.scheduler import Backpressure, MicroBatch, MicroBatcher
 from repro.serving.vision import VisionEngine, VisionRequest, synth_requests
 
 __all__ = [
+    "Autoscaler",
     "Backpressure",
     "ClusterMetrics",
     "EngineMetrics",
+    "EngineReplica",
     "LatencyTracker",
     "MicroBatch",
     "MicroBatcher",
@@ -17,6 +26,7 @@ __all__ = [
     "VisionEngine",
     "VisionRequest",
     "build_serve_step",
+    "hist_percentile",
     "replica_meshes",
     "synth_requests",
 ]

@@ -1,25 +1,41 @@
-"""Multi-replica vision serving cluster (DESIGN.md section 7).
+"""Engine-agnostic multi-replica serving cluster (DESIGN.md sections 7-8).
 
-``ServingCluster`` runs N ``VisionEngine`` replicas over disjoint
-device-mesh slices behind one admission front-end:
+``ServingCluster`` runs N engine replicas over disjoint device-mesh slices
+behind one admission front-end:
 
   client -> cluster ``MicroBatcher`` (FIFO + global backpressure + drain)
          -> least-loaded routing (replica with the smallest queued +
             in-flight load that still has admission room)
-         -> replica ``VisionEngine`` (own scheduler, own jitted forward on
-            its mesh slice, own ``EngineMetrics``)
+         -> replica (own scheduler, own jitted program on its mesh slice,
+            own ``EngineMetrics``)
 
-Replica layout: the device list is split into ``replicas`` contiguous
-groups of equal size; each group becomes a ``('model',)`` mesh. With one
-device per group this is pure data parallelism (params replicated per
-replica); with ``cfg.moe.moe_exec == "expert_parallel"`` each replica runs
-the sharded-expert all_to_all path of ``distributed/expert_parallel.py``
-inside its slice — DP across replicas x EP within a replica.
+The cluster is generic over the ``EngineReplica`` protocol
+(serving/replica.py): the replica factory is pluggable, and the default
+builds ``VisionEngine`` replicas for the vit families and ``ServeEngine``
+(LM decode — free decode slots as the load signal) replicas for everything
+else. An LM cluster therefore works exactly like the vision one: DP across
+replicas, and with ``cfg.moe.moe_exec == "expert_parallel"`` EP within a
+replica's slice.
 
-Backpressure is two-level: each replica bounds its own queue
+Replica layout: the device list is split into ``replicas + standby``
+contiguous groups of equal size; each group becomes a ``('model',)`` mesh.
+With one device per group this is pure data parallelism (params replicated
+per replica); with EP each replica runs the sharded-expert all_to_all path
+of ``distributed/expert_parallel.py`` inside its slice.
+
+Backpressure is two-level: each replica bounds its own admission
 (``max_pending_per_replica``; the router only offers work to replicas with
 room) and the front-end bounds total admission (``max_pending`` — beyond
 it ``submit`` raises ``scheduler.Backpressure`` to the client).
+
+**Elasticity** (serving/autoscaler.py drives this): ``scale_up()`` moves a
+pre-warmed standby replica into the router (or spawns + warms a new one
+when the pool is empty); ``scale_down()`` stops routing to the least-loaded
+replica and moves it to the *draining* set — it keeps being ticked until it
+has served everything queued and in flight, then returns to standby, its
+metrics folded into ``ClusterMetrics``' retired accumulator (no request and
+no metric is ever lost across a drain). ``ClusterMetrics.mark_replicas``
+records the (t, active-count) timeline on every transition.
 
 ``metrics`` is a ``ClusterMetrics`` roll-up: aggregate FPS over the union
 window, latency percentiles merged from replica distributions (pooled, not
@@ -28,15 +44,17 @@ averaged), per-expert occupancy summed across replicas.
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Sequence
+from typing import Any, Callable, List, Optional, Sequence, Union
 
 import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.serving.metrics import ClusterMetrics
+from repro.serving.replica import EngineReplica
 from repro.serving.scheduler import MicroBatcher
-from repro.serving.vision import VisionEngine, VisionRequest
+
+EngineFactory = Callable[[Any], EngineReplica]  # mesh -> replica
 
 
 def replica_meshes(n_replicas: int, devices=None) -> List[jax.sharding.Mesh]:
@@ -58,49 +76,54 @@ def replica_meshes(n_replicas: int, devices=None) -> List[jax.sharding.Mesh]:
 
 
 class ServingCluster:
-    """N-replica MoE-ViT serving cluster behind one admission queue."""
+    """N-replica serving cluster behind one admission queue, generic over
+    the ``EngineReplica`` protocol."""
 
     def __init__(
         self,
-        cfg: ModelConfig,
-        params,
+        cfg: Optional[ModelConfig],
+        params=None,
         *,
         replicas: int = 0,
+        standby: int = 0,
         devices=None,
+        engine: Union[None, str, EngineFactory] = None,
+        # vision replica knobs (engine="vision")
         batch_buckets: Sequence[int] = (1, 4, 8),
         max_wait_s: float = 2e-3,
-        max_pending: int = 4096,
-        max_pending_per_replica: int = 64,
         top_k: int = 5,
         max_inflight: int = 2,
+        # LM replica knobs (engine="lm")
+        batch_slots: int = 4,
+        max_len: int = 512,
+        # shared admission bounds
+        max_pending: int = 4096,
+        max_pending_per_replica: int = 64,
         clock: Callable[[], float] = time.monotonic,
     ) -> None:
         devices = list(devices if devices is not None else jax.devices())
-        ep = cfg.moe is not None and cfg.moe.moe_exec == "expert_parallel"
+        self._devices = devices
+        ep = (cfg is not None and cfg.moe is not None
+              and cfg.moe.moe_exec == "expert_parallel")
+        self._ep = ep
         if replicas <= 0:
             # default: one replica per device (pure DP); EP defaults to a
             # single replica spanning every device
             replicas = 1 if ep else len(devices)
-        self.meshes = replica_meshes(replicas, devices)
-        if not ep:
-            # without expert parallelism a multi-device slice would run the
-            # identical replicated program on every device of the slice —
-            # pin each replica to its first device instead
-            self.meshes = [
-                m if m.size == 1 else jax.sharding.Mesh(
-                    np.asarray(list(m.devices.flat)[:1], object), ("model",))
-                for m in self.meshes
-            ]
         self._clock = clock
-        self.engines: List[VisionEngine] = [
-            VisionEngine(
-                cfg, params,
-                batch_buckets=batch_buckets, max_wait_s=max_wait_s,
-                max_pending=max_pending_per_replica, top_k=top_k,
-                max_inflight=max_inflight, mesh=mesh, clock=clock,
-            )
-            for mesh in self.meshes
-        ]
+        self._factory = self._resolve_factory(
+            cfg, params, engine,
+            batch_buckets=batch_buckets, max_wait_s=max_wait_s,
+            top_k=top_k, max_inflight=max_inflight,
+            batch_slots=batch_slots, max_len=max_len,
+            max_pending_per_replica=max_pending_per_replica,
+        )
+        self.meshes = self._build_meshes(replicas + standby)
+        self._next_mesh_i = replicas + standby
+        built = [self._factory(mesh) for mesh in self.meshes]
+        self.engines: List[EngineReplica] = built[:replicas]  # routable
+        self._standby: List[EngineReplica] = built[replicas:]  # warm pool
+        self._draining: List[EngineReplica] = []  # no admission, still ticked
         # admission front-end: FIFO + global backpressure + drain; routing
         # pulls single requests (batch formation happens per replica, where
         # the bucket ladder lives)
@@ -110,12 +133,90 @@ class ServingCluster:
         )
         self.metrics = ClusterMetrics([e.metrics for e in self.engines],
                                       clock=clock)
+        self.metrics.mark_replicas(len(self.engines))
+
+    # -- construction internals ---------------------------------------------
+
+    def _resolve_factory(self, cfg, params, engine, *, batch_buckets,
+                         max_wait_s, top_k, max_inflight, batch_slots,
+                         max_len, max_pending_per_replica) -> EngineFactory:
+        if callable(engine):
+            return engine
+        if engine is None:
+            if cfg is None:
+                raise ValueError("engine factory required when cfg is None")
+            engine = "vision" if cfg.family in ("vit", "vit_moe") else "lm"
+        clock = self._clock
+        if engine == "vision":
+            from repro.serving.vision import VisionEngine
+
+            return lambda mesh: VisionEngine(
+                cfg, params,
+                batch_buckets=batch_buckets, max_wait_s=max_wait_s,
+                max_pending=max_pending_per_replica, top_k=top_k,
+                max_inflight=max_inflight, mesh=mesh, clock=clock,
+            )
+        if engine == "lm":
+            from repro.serving.engine import ServeEngine
+
+            return lambda mesh: ServeEngine(
+                cfg, params, batch_slots=batch_slots, max_len=max_len,
+                max_pending=max_pending_per_replica, mesh=mesh, clock=clock,
+            )
+        raise ValueError(
+            f"engine must be 'vision', 'lm', or a factory: {engine!r}")
+
+    def _build_meshes(self, n: int) -> List[jax.sharding.Mesh]:
+        meshes = replica_meshes(n, self._devices)
+        if not self._ep:
+            # without expert parallelism a multi-device slice would run the
+            # identical replicated program on every device of the slice —
+            # pin each replica to its first device instead
+            meshes = [
+                m if m.size == 1 else jax.sharding.Mesh(
+                    np.asarray(list(m.devices.flat)[:1], object), ("model",))
+                for m in meshes
+            ]
+        return meshes
+
+    def _next_mesh(self) -> jax.sharding.Mesh:
+        """Mesh slice for a replica grown past the pre-built pool: EP
+        replicas span all devices; DP replicas take a device no live
+        replica is pinned to (falling back to round-robin only once every
+        device is occupied — blindly cycling indices would double up on an
+        active replica's device while others sit free)."""
+        if self._ep:
+            return self._build_meshes(1)[0]
+        used = {
+            d for e in self.engines + self._draining + self._standby
+            if e.mesh is not None for d in e.mesh.devices.flat
+        }
+        free = [d for d in self._devices if d not in used]
+        if free:
+            d = free[0]
+        else:
+            d = self._devices[self._next_mesh_i % len(self._devices)]
+            self._next_mesh_i += 1
+        return jax.sharding.Mesh(np.asarray([d], object), ("model",))
 
     # -- properties ---------------------------------------------------------
 
     @property
+    def clock(self) -> Callable[[], float]:
+        return self._clock
+
+    @property
     def num_replicas(self) -> int:
+        """Routable (active) replicas."""
         return len(self.engines)
+
+    @property
+    def standby_replicas(self) -> int:
+        return len(self._standby)
+
+    @property
+    def draining_replicas(self) -> int:
+        return len(self._draining)
 
     @property
     def depth(self) -> int:
@@ -123,12 +224,74 @@ class ServingCluster:
         return self._front.depth
 
     @property
+    def total_load(self) -> int:
+        """Front-end depth + every serving replica's queued + in-flight."""
+        return self._front.depth + sum(
+            e.load for e in self.engines + self._draining)
+
+    @property
     def idle(self) -> bool:
-        return self._front.depth == 0 and all(e.idle for e in self.engines)
+        return (self._front.depth == 0
+                and all(e.idle for e in self.engines)
+                and all(e.idle for e in self._draining))
+
+    # -- elasticity (driven by serving/autoscaler.py) ------------------------
+
+    def scale_up(self) -> bool:
+        """Admit one more replica to the router. Preference order: (1)
+        re-admit a *draining* replica — it is warm, still holds devices, and
+        re-admitting it keeps active + draining within the operator's cap
+        instead of piling a new engine on top of one that has not left yet;
+        (2) promote a pre-warmed standby; (3) cold-spawn. The cold-spawn
+        branch warms (compiles) synchronously — the pump that called it
+        stalls for the compile, so size the standby pool to cover the
+        expected surge (the autoscale benchmark sets
+        ``standby = max_replicas - 1``) and treat cold spawns as a last
+        resort, not the steady-state path."""
+        if self._draining:
+            eng = self._draining.pop()  # most recently drained
+        elif self._standby:
+            eng = self._standby.pop(0)
+        else:
+            eng = self._factory(self._next_mesh())
+            eng.warmup()
+        self.engines.append(eng)
+        self.metrics.add_replica(eng.metrics)
+        self.metrics.mark_replicas(len(self.engines))
+        self.metrics.inc("cluster_scale_up")
+        return True
+
+    def scale_down(self) -> bool:
+        """Stop routing to the least-loaded replica and start draining it:
+        it keeps being ticked until everything queued + in flight on it is
+        served, then returns to standby (``_reap_drained``). Refuses to
+        drop the last active replica."""
+        if len(self.engines) <= 1:
+            return False
+        eng = min(self.engines, key=lambda e: e.load)
+        self.engines.remove(eng)
+        self._draining.append(eng)
+        self.metrics.mark_replicas(len(self.engines))
+        self.metrics.inc("cluster_scale_down")
+        return True
+
+    def _reap_drained(self) -> None:
+        """Move fully drained replicas to the standby pool, folding their
+        metrics into the retired accumulator (then resetting them so a
+        rejoin is never double-counted)."""
+        still: List[EngineReplica] = []
+        for e in self._draining:
+            if e.idle:
+                self.metrics.remove_replica(e.metrics)
+                e.reset_metrics()
+                self._standby.append(e)
+            else:
+                still.append(e)
+        self._draining = still
 
     # -- request path -------------------------------------------------------
 
-    def submit(self, req: VisionRequest) -> None:
+    def submit(self, req) -> None:
         """Admit one request; raises ``scheduler.Backpressure`` when the
         cluster-wide admission bound is reached. Latency is stamped HERE —
         client-observed percentiles include front-end queue wait, not just
@@ -144,39 +307,49 @@ class ServingCluster:
     def _route(self) -> None:
         """Move front-end requests to replicas, least-loaded first. Only
         pulls what the replicas can admit — per-replica backpressure keeps
-        the remainder queued at the front in FIFO order."""
+        the remainder queued at the front in FIFO order. The front-end
+        depth left after routing is sampled into the cluster metrics (the
+        autoscaler's pressure signal)."""
         while self._front.depth:
             open_engines = [e for e in self.engines if e.free_room > 0]
             if not open_engines:
-                return
+                break
             batch = self._front.poll(limit=1)
             if batch is None:
-                return
+                break
             target = min(open_engines, key=lambda e: e.load)
             target.submit(batch.items[0])
+        self.metrics.observe_queue_depth(self._front.depth)
 
     def step(self) -> None:
-        """One cluster pump: route queued requests, then tick every replica
-        (retire finished device batches, dispatch ready ones)."""
+        """One cluster pump: route queued requests, tick every serving
+        replica (admit / dispatch / retire), and reap drained ones."""
         self._route()
         for e in self.engines:
             e.step()
+        for e in self._draining:
+            e.step()
+        if self._draining:
+            self._reap_drained()
 
     def warmup(self) -> None:
-        """Compile every bucket on every replica outside the measured path."""
-        for e in self.engines:
+        """Compile every program on every replica — active and standby (a
+        standby must be warm *before* the autoscaler routes to it) —
+        outside the measured path."""
+        for e in self.engines + self._standby:
             e.warmup()
 
     def flush(self) -> None:
         """Drain: push everything queued through the replicas and retire
-        every in-flight batch on each of them."""
+        every in-flight batch on each of them (draining replicas too)."""
         self._front.drain(True)
         try:
             while not self.idle:
                 self._route()
-                for e in self.engines:
-                    if e.scheduler.depth or e._inflight:
+                for e in self.engines + self._draining:
+                    if not e.idle:
                         e.flush()
+            self._reap_drained()
         finally:
             self._front.drain(False)
 

@@ -15,6 +15,7 @@ token.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
@@ -27,6 +28,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import models
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.distributed.sharding_rules import (
+    EXPERT_PARALLEL_RULES,
     SERVING_RULES,
     cache_specs,
     fit_specs_to_tree,
@@ -63,7 +65,8 @@ def lowering_config(cfg: ModelConfig) -> ModelConfig:
 
 def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                      *, donate_cache: bool = True, for_lowering: bool = False,
-                     params=None, with_stats: bool = False):
+                     params=None, with_stats: bool = False,
+                     rules=SERVING_RULES):
     """Jitted decode step: (params, tokens [B,1], cache, index) ->
     (logits, new_cache). The cache buffer is donated (updated in place).
 
@@ -77,9 +80,18 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 
     ``with_stats=True`` (transformer MoE families) appends the per-step
     routed-token histogram to the outputs: (logits, new_cache,
-    {"expert_tokens": [E] int32})."""
+    {"expert_tokens": [E] int32}).
+
+    ``rules``: sharding rules for the param specs. With
+    ``EXPERT_PARALLEL_RULES`` only the expert stacks shard over 'model' and
+    every activation/cache buffer replicates — the EP exchange happens
+    inside ``shard_map`` on tokens, so a context-parallel cache layout
+    would only fight the all_to_all (and the eager prefill merge)."""
     cfg = lowering_config(cfg) if for_lowering else serving_config(cfg)
     mod = models.module_for(cfg)
+    # value (not identity) comparison: an equal copy of the EP rules must
+    # get the same replicated-activation layout
+    replicate_activations = dict(rules) == dict(EXPERT_PARALLEL_RULES)
 
     def serve_step(params, tokens, cache, index):
         if with_stats:
@@ -87,11 +99,14 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                                    with_stats=True)
         return mod.decode_step(params, cfg, tokens, cache, index)
 
-    p_specs = param_specs(cfg, mesh, rules=SERVING_RULES)
+    p_specs = param_specs(cfg, mesh, rules=rules)
     if params is not None:
         p_specs = fit_specs_to_tree(p_specs, params)
     in_tree = models.input_specs(cfg, shape)
     b_specs = input_shardings(cfg, shape, mesh, in_tree)
+    if replicate_activations:
+        b_specs = jax.tree.map(lambda _: P(), b_specs,
+                               is_leaf=lambda x: isinstance(x, P))
     named = lambda tree: jax.tree.map(
         lambda s: NamedSharding(mesh, s), tree,
         is_leaf=lambda x: isinstance(x, P),
@@ -115,11 +130,14 @@ class Request:
     prompt: np.ndarray  # [S] int32
     max_new_tokens: int
     generated: Optional[List[int]] = None
-    submitted_at: float = 0.0  # stamped by submit(); drives latency metrics
+    # stamped by submit() (None = not yet admitted anywhere); drives the
+    # latency metrics. A 0.0 stamp from a fake clock is a real stamp.
+    submitted_at: Optional[float] = None
 
 
 class ServeEngine:
-    """Slot-based batched generation (single-host driver).
+    """Slot-based batched generation — an ``EngineReplica``
+    (serving/replica.py; single-host driver).
 
     greedy sampling; per-slot bookkeeping on host, all model math jitted.
     ``params`` may be an FP tree, a fake-quant PTQ tree, or a QuantizedParams
@@ -129,14 +147,25 @@ class ServeEngine:
 
     Admission runs through a ``MicroBatcher`` in greedy mode (``max_wait_s=0``
     — a queued prompt is admitted the moment a decode slot frees; the batch
-    limit per poll is the number of free slots). ``max_pending > 0`` bounds
-    the queue: ``submit`` then raises ``scheduler.Backpressure`` when full.
-    ``metrics`` exposes tokens/s, request latency percentiles, queue depth,
-    and (MoE archs) per-expert routed-token occupancy.
+    limit per poll is the number of free slots, and each admitted prompt's
+    ``queue_wait`` is recorded *before* its prefill starts). ``max_pending >
+    0`` bounds the queue: ``submit`` then raises ``scheduler.Backpressure``
+    when full. ``metrics`` exposes tokens/s, request latency percentiles,
+    queue depth, and (MoE archs) per-expert routed-token occupancy.
+
+    ``mesh=`` pins the replica to a device-mesh slice (the cluster's
+    ``replica_meshes`` hand one to every replica; None keeps the process
+    host mesh). With ``cfg.moe.moe_exec == "expert_parallel"`` the slice's
+    ``'model'`` axis shards the expert stacks and both prefill and the
+    decode tick run inside the ambient ``use_ep_mesh`` scope — DP across
+    cluster replicas x EP within one. ``clock=`` injects a fake clock for
+    deterministic tests (the engine never reads ``time`` directly).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
-                 max_len: int = 512, max_pending: int = 0) -> None:
+                 max_len: int = 512, max_pending: int = 0,
+                 mesh: Optional[Mesh] = None,
+                 clock: Callable[[], float] = time.monotonic) -> None:
         assert cfg.family not in ("vit", "vit_moe"), "decoder families only"
         self.cfg = serving_config(cfg)
         cfg = self.cfg
@@ -144,32 +173,116 @@ class ServeEngine:
         self.mod = models.module_for(cfg)
         self.B = batch_slots
         self.max_len = max_len
+        self.mesh = mesh
+        self._clock = clock
         self.cache = self.mod.init_cache(cfg, batch_slots, max_len)
         self.pos = np.zeros(batch_slots, np.int32)  # cache fill per slot
         self.active: Dict[int, Request] = {}  # slot -> request
         self.scheduler = MicroBatcher(batch_sizes=(batch_slots,),
-                                      max_wait_s=0.0, max_pending=max_pending)
+                                      max_wait_s=0.0, max_pending=max_pending,
+                                      clock=clock)
         self._with_stats = (cfg.moe is not None
                             and cfg.family in ("dense", "moe", "vlm"))
         self.metrics = EngineMetrics(
-            num_experts=cfg.moe.num_experts if self._with_stats else 0)
+            num_experts=cfg.moe.num_experts if self._with_stats else 0,
+            clock=clock)
+        self._ep = (cfg.moe is not None
+                    and cfg.moe.moe_exec == "expert_parallel")
+        if self._ep:
+            from repro.distributed.expert_parallel import (
+                use_ep_mesh,
+                validate_ep,
+            )
+
+            if mesh is None:
+                raise ValueError(
+                    "moe_exec='expert_parallel' needs mesh= (a 'model'-axis "
+                    "mesh whose size divides num_experts)")
+            validate_ep(cfg, mesh)
+            self._scope = lambda: use_ep_mesh(mesh)
+        else:
+            self._scope = contextlib.nullcontext
+        rules = EXPERT_PARALLEL_RULES if self._ep else SERVING_RULES
+        if mesh is not None:
+            # pin the replica to its slice: eager prefill math follows the
+            # committed params; the jitted decode in_shardings match below
+            specs = fit_specs_to_tree(
+                param_specs(cfg, mesh, rules=rules), params)
+            named = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), specs,
+                is_leaf=lambda x: isinstance(x, P))
+            self.params = jax.device_put(params, named)
         # the decode tick: donated cache (in-place K/V update, no per-token
         # copy), shardings fitted to the actual — possibly int8 — param tree
         shape = ShapeConfig("engine_decode", "decode",
                             seq_len=max_len, global_batch=batch_slots)
         self._decode = build_serve_step(
-            cfg, shape, make_host_mesh(), params=params,
-            with_stats=self._with_stats,
+            cfg, shape, mesh if mesh is not None else make_host_mesh(),
+            params=params, with_stats=self._with_stats, rules=rules,
         )
+
+    # -- replica surface (serving/replica.py) --------------------------------
 
     @property
     def queue(self) -> List[Request]:
         """Pending (not yet admitted) requests in FIFO order."""
         return self.scheduler.pending_items()
 
+    @property
+    def free_slots(self) -> int:
+        """Unoccupied decode slots — the LM load signal's numerator."""
+        return self.B - len(self.active)
+
+    @property
+    def inflight(self) -> int:
+        """Requests occupying decode slots (public in-flight surface)."""
+        return len(self.active)
+
+    @property
+    def load(self) -> int:
+        """Queued + in-flight requests (least-loaded routing key)."""
+        return self.scheduler.depth + len(self.active)
+
+    @property
+    def free_room(self) -> float:
+        """Admission headroom: free decode slots plus scheduler queue room
+        (inf when the queue is unbounded). Decode slots are the load
+        signal — a replica with open slots admits even at queue bound 0."""
+        room = self.scheduler.room
+        if room == float("inf"):
+            return float("inf")
+        return self.free_slots + room
+
+    @property
+    def idle(self) -> bool:
+        return not self.active and self.scheduler.depth == 0
+
+    def reset_metrics(self) -> None:
+        """Fresh ``EngineMetrics`` (cluster replica leave — the old one was
+        folded into the retired accumulator)."""
+        self.metrics = EngineMetrics(
+            num_experts=self.metrics.expert_tokens.size, clock=self._clock)
+
+    def warmup(self) -> None:
+        """Compile the decode step outside the measured path. The dummy tick
+        writes K/V rows at the (empty) slots' positions; prefill overwrites
+        a slot's full cache row at admission, so nothing leaks."""
+        tokens = jnp.zeros((self.B, 1), jnp.int32)
+        index = jnp.asarray(self.pos, jnp.int32)
+        with self._scope():
+            out = self._decode(self.params, tokens, self.cache, index)
+        self.cache = out[1]
+        jax.block_until_ready(jax.tree.leaves(self.cache)[0])
+
     def submit(self, req: Request) -> None:
         req.generated = []
-        req.submitted_at = time.monotonic()
+        if req.submitted_at is None:  # cluster front-end may have stamped it
+            req.submitted_at = self._clock()
+        if self.scheduler.room == 0 and self.free_slots > 0:
+            # queue full but decode slots free: admit queued prompts into
+            # slots first, so free_room (slots + queue room) is exactly the
+            # number of submits that succeed — the router relies on that
+            self._admit()
         try:
             self.scheduler.submit(req)  # raises Backpressure when full
         except Exception:
@@ -179,22 +292,29 @@ class ServeEngine:
         self.metrics.observe_queue_depth(self.scheduler.depth)
 
     def _admit(self) -> None:
+        """Batch-prefill admission: admit up to ``free_slots`` prompts per
+        tick; each prompt's queue wait is recorded before its prefill
+        starts (prefill time is service time, not queue time)."""
         free = [s for s in range(self.B) if s not in self.active]
         while free:
             batch = self.scheduler.poll(limit=len(free))
             if batch is None:
                 return
+            now = self._clock()
             for req in batch.items:
                 slot = free.pop(0)
+                self.metrics.queue_wait.record(
+                    max(0.0, now - req.submitted_at))
                 # prefill the slot: feed prompt tokens one microstep at a
                 # time into the shared cache at this slot's rows
                 # (token-parallel prefill would batch this; slot isolation
                 # keeps it simple).
                 toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-                logits, slot_cache = self.mod.prefill(
-                    self.params, self.cfg,
-                    toks, max_len=self.max_len,
-                )
+                with self._scope():
+                    logits, slot_cache = self.mod.prefill(
+                        self.params, self.cfg,
+                        toks, max_len=self.max_len,
+                    )
                 # merge the slot's prefilled cache rows into the engine cache
                 def merge(full, part):
                     return jax.lax.dynamic_update_slice(
@@ -218,7 +338,9 @@ class ServeEngine:
             tokens[slot, 0] = req.generated[-1]
         # per-slot cache positions: slots decode at their own fill level
         index = jnp.asarray(self.pos, jnp.int32)
-        out = self._decode(self.params, jnp.asarray(tokens), self.cache, index)
+        with self._scope():
+            out = self._decode(self.params, jnp.asarray(tokens), self.cache,
+                               index)
         if self._with_stats:
             logits, self.cache, stats = out
             self.metrics.add_expert_tokens(np.asarray(stats["expert_tokens"]))
@@ -228,7 +350,7 @@ class ServeEngine:
         self.metrics.work_done(len(self.active), "tokens")
         self.metrics.observe_queue_depth(self.scheduler.depth)
         done = []
-        now = time.monotonic()
+        now = self._clock()
         for slot, req in self.active.items():
             req.generated.append(int(nxt[slot]))
             self.pos[slot] += 1
@@ -240,8 +362,11 @@ class ServeEngine:
             self.metrics.inc("completed")
             self.metrics.request_latency.record(now - req.submitted_at)
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> None:
+    def flush(self, max_ticks: int = 10_000) -> None:
+        """Blocking drain: serve everything queued and in flight."""
         for _ in range(max_ticks):
-            if not self.active and not self.scheduler.depth:
+            if self.idle:
                 return
             self.step()
+
+    run_until_drained = flush

@@ -28,6 +28,26 @@ import numpy as np
 _BIN_EDGES = np.logspace(-5, 2, 7 * 8 + 1)
 
 
+def hist_percentile(hist: np.ndarray, p: float,
+                    max_value: Optional[float] = None) -> float:
+    """p-th percentile of a ``_BIN_EDGES`` histogram (geometric bin
+    midpoint). One formula shared by ``LatencyTracker`` and the
+    autoscaler's *windowed* p95 (which differences two pooled histograms —
+    a deque of raw samples could not be windowed across replica churn)."""
+    total = int(hist.sum())
+    if total == 0:
+        return float("nan")
+    target = (p / 100.0) * total
+    cum = np.cumsum(hist)
+    b = int(np.searchsorted(cum, max(target, 1), side="left"))
+    if b == 0:
+        return float(_BIN_EDGES[0])
+    if b >= _BIN_EDGES.size:
+        hi = _BIN_EDGES[-1]
+        return float(min(hi, max_value) if max_value is not None else hi)
+    return float(np.sqrt(_BIN_EDGES[b - 1] * _BIN_EDGES[b]))
+
+
 class LatencyTracker:
     """Latency distribution: exact-sample reservoir + mergeable histogram.
 
@@ -82,16 +102,7 @@ class LatencyTracker:
 
     def _hist_percentile(self, p: float) -> float:
         """Percentile from the log-bin histogram (geometric bin midpoint)."""
-        if self._total == 0:
-            return float("nan")
-        target = (p / 100.0) * self._total
-        cum = np.cumsum(self._hist)
-        b = int(np.searchsorted(cum, max(target, 1), side="left"))
-        if b == 0:
-            return float(_BIN_EDGES[0])
-        if b >= _BIN_EDGES.size:
-            return float(min(_BIN_EDGES[-1], self._max))
-        return float(np.sqrt(_BIN_EDGES[b - 1] * _BIN_EDGES[b]))
+        return hist_percentile(self._hist, p, max_value=self._max)
 
     def percentile(self, p: float) -> float:
         """p-th percentile in seconds (nan when empty). Exact while the
@@ -135,6 +146,9 @@ class EngineMetrics:
         self.counters: Dict[str, int] = {}
         self.request_latency = LatencyTracker()
         self.batch_latency = LatencyTracker()
+        # admission-queue wait, stamped when a request leaves the queue
+        # (LM: before its prefill starts; vision: at batch dispatch)
+        self.queue_wait = LatencyTracker()
         self.expert_tokens = np.zeros(max(0, num_experts), np.int64)
         self._depth_sum = 0
         self._depth_max = 0
@@ -202,6 +216,7 @@ class EngineMetrics:
             "fps": self.fps,
             "latency_ms": self.request_latency.snapshot(),
             "batch_latency_ms": self.batch_latency.snapshot(),
+            "queue_wait_ms": self.queue_wait.snapshot(),
             "queue_depth": {
                 "mean": (self._depth_sum / self._depth_n)
                 if self._depth_n else 0.0,
@@ -223,7 +238,7 @@ def _occupancy_of(tokens: np.ndarray) -> List[float]:
 
 
 class ClusterMetrics:
-    """Merge-safe roll-up over N replica ``EngineMetrics`` (DESIGN.md §7).
+    """Merge-safe roll-up over N replica ``EngineMetrics`` (DESIGN.md §7-8).
 
     Aggregation rules:
       * counters — summed;
@@ -235,6 +250,16 @@ class ClusterMetrics:
         per-replica percentiles;
       * per-expert occupancy — routed-token histograms summed across
         replicas, then normalized.
+
+    Membership is **dynamic** (autoscaling): ``add_replica`` joins a
+    replica's metrics to the live set; ``remove_replica`` folds the leaving
+    replica's whole distribution into a *retired accumulator* (histogram
+    merge — exactly what makes ``LatencyTracker`` merge-safe), so cluster
+    totals, percentiles, and the FPS window never lose a drained replica's
+    history. The cluster resets the engine's own ``EngineMetrics`` after
+    the fold, so a replica that later rejoins is never double-counted.
+    ``mark_replicas`` records the (t, active-count) timeline the autoscale
+    benchmark plots.
     """
 
     def __init__(self, replicas: Sequence[EngineMetrics],
@@ -244,11 +269,82 @@ class ClusterMetrics:
         self._first_t: Optional[float] = None
         # cluster-front-end counters (admission rejections etc.)
         self.counters: Dict[str, int] = {}
+        # front-end queue-depth samples (the autoscaler's pressure signal)
+        self._depth_sum = 0
+        self._depth_max = 0
+        self._depth_last = 0
+        self._depth_n = 0
+        # retired accumulator: drained replicas fold in here
+        self._ret_request = LatencyTracker(maxlen=65536)
+        self._ret_batch = LatencyTracker(maxlen=65536)
+        self._ret_queue_wait = LatencyTracker(maxlen=65536)
+        self._ret_counters: Dict[str, int] = {}
+        self._ret_tokens: Optional[np.ndarray] = None
+        self._ret_first: Optional[float] = None
+        self._ret_last: Optional[float] = None
+        # (t, active-replica-count) — appended by mark_replicas on every
+        # scale event (and at cluster construction)
+        self._timeline: List[tuple] = []
+
+    # -- membership ---------------------------------------------------------
+
+    @property
+    def num_replicas(self) -> int:
+        return len(self._replicas)
+
+    def add_replica(self, m: EngineMetrics) -> None:
+        """Join a replica's metrics to the live set (replica scale-up)."""
+        if m not in self._replicas:
+            self._replicas.append(m)
+
+    def remove_replica(self, m: EngineMetrics) -> None:
+        """Fold a leaving replica's distribution into the retired
+        accumulator (replica drain). The caller must reset the engine's
+        metrics afterwards (``engine.reset_metrics()``) or a rejoin would
+        double-count."""
+        if m in self._replicas:
+            self._replicas.remove(m)
+        self._ret_request.merge(m.request_latency)
+        self._ret_batch.merge(m.batch_latency)
+        self._ret_queue_wait.merge(m.queue_wait)
+        for k, v in m.counters.items():
+            self._ret_counters[k] = self._ret_counters.get(k, 0) + v
+        if m.expert_tokens.size:
+            if self._ret_tokens is None:
+                self._ret_tokens = m.expert_tokens.astype(np.int64).copy()
+            elif self._ret_tokens.size == m.expert_tokens.size:
+                self._ret_tokens += m.expert_tokens
+        f, l = m.window
+        if f is not None:
+            self._ret_first = f if self._ret_first is None \
+                else min(self._ret_first, f)
+        if l is not None:
+            self._ret_last = l if self._ret_last is None \
+                else max(self._ret_last, l)
+
+    def mark_replicas(self, n: int) -> None:
+        """Append (now, active-replica-count) to the scale timeline."""
+        self._timeline.append((self._clock(), int(n)))
+
+    @property
+    def replica_timeline(self) -> List[tuple]:
+        return list(self._timeline)
+
+    # -- feeding ------------------------------------------------------------
 
     def inc(self, name: str, n: int = 1) -> None:
         self.counters[name] = self.counters.get(name, 0) + n
         if name == "cluster_submitted" and self._first_t is None:
             self._first_t = self._clock()  # window opens at admission
+
+    def observe_queue_depth(self, depth: int) -> None:
+        """Sample the *front-end* queue depth (cluster route path)."""
+        self._depth_sum += depth
+        self._depth_max = max(self._depth_max, depth)
+        self._depth_last = depth
+        self._depth_n += 1
+
+    # -- readout ------------------------------------------------------------
 
     @property
     def fps(self) -> float:
@@ -256,40 +352,82 @@ class ClusterMetrics:
             m.counters.get("frames", 0) or m.counters.get("tokens", 0)
             for m in self._replicas
         )
+        frames += (self._ret_counters.get("frames", 0)
+                   or self._ret_counters.get("tokens", 0))
         firsts = [m.window[0] for m in self._replicas
                   if m.window[0] is not None]
         if self._first_t is not None:
             firsts.append(self._first_t)  # front-end admission opens earlier
+        if self._ret_first is not None:
+            firsts.append(self._ret_first)
         lasts = [m.window[1] for m in self._replicas
                  if m.window[1] is not None]
+        if self._ret_last is not None:
+            lasts.append(self._ret_last)
         if not firsts or not lasts or max(lasts) <= min(firsts):
             return float("nan")
         return frames / (max(lasts) - min(firsts))
 
     def merged_request_latency(self) -> LatencyTracker:
-        return LatencyTracker.merged(
+        t = LatencyTracker.merged(
             [m.request_latency for m in self._replicas])
+        t.merge(self._ret_request)
+        return t
+
+    def pooled_request_hist(self) -> np.ndarray:
+        """Pooled request-latency histogram (live replicas + retired).
+
+        Monotone non-decreasing over time as long as the leave protocol is
+        followed (fold into retired, then reset), which is what lets the
+        autoscaler difference two snapshots into a *windowed* percentile."""
+        h = self._ret_request._hist.copy()
+        for m in self._replicas:
+            h = h + m.request_latency._hist
+        return h
 
     def snapshot(self) -> dict:
         counters: Dict[str, int] = dict(self.counters)
+        for k, v in self._ret_counters.items():
+            counters[k] = counters.get(k, 0) + v
         for m in self._replicas:
             for k, v in m.counters.items():
                 counters[k] = counters.get(k, 0) + v
         sizes = {m.expert_tokens.size for m in self._replicas}
-        if len(sizes) == 1 and self._replicas:
+        if self._ret_tokens is not None:
+            sizes.add(self._ret_tokens.size)
+        if len(sizes) == 1 and (self._replicas
+                                or self._ret_tokens is not None):
             tokens = np.sum(
-                [m.expert_tokens for m in self._replicas], axis=0)
+                [m.expert_tokens for m in self._replicas]
+                + ([self._ret_tokens] if self._ret_tokens is not None
+                   else []),
+                axis=0)
         else:
             tokens = np.zeros(0, np.int64)
+        batch_lat = LatencyTracker.merged(
+            [m.batch_latency for m in self._replicas])
+        batch_lat.merge(self._ret_batch)
+        queue_wait = LatencyTracker.merged(
+            [m.queue_wait for m in self._replicas])
+        queue_wait.merge(self._ret_queue_wait)
         return {
             "replicas": [m.snapshot() for m in self._replicas],
             "aggregate": {
                 "counters": counters,
                 "fps": self.fps,
                 "latency_ms": self.merged_request_latency().snapshot(),
-                "batch_latency_ms": LatencyTracker.merged(
-                    [m.batch_latency for m in self._replicas]).snapshot(),
+                "batch_latency_ms": batch_lat.snapshot(),
+                "queue_wait_ms": queue_wait.snapshot(),
+                "front_queue_depth": {
+                    "mean": (self._depth_sum / self._depth_n)
+                    if self._depth_n else 0.0,
+                    "max": self._depth_max,
+                    "last": self._depth_last,
+                },
                 "expert_tokens": tokens.tolist(),
                 "expert_occupancy": _occupancy_of(tokens),
             },
+            "replicas_active": (self._timeline[-1][1] if self._timeline
+                                else len(self._replicas)),
+            "replica_timeline": [[t, n] for t, n in self._timeline],
         }

@@ -96,6 +96,15 @@ class MicroBatcher:
     def draining(self) -> bool:
         return self._draining
 
+    @property
+    def room(self) -> float:
+        """Admission headroom: how many more ``submit`` calls succeed before
+        ``Backpressure`` (inf when ``max_pending`` is 0 = unbounded). Both
+        engines derive their ``free_room`` routing signal from this."""
+        if self.max_pending == 0:
+            return float("inf")
+        return max(0, self.max_pending - self._depth)
+
     def pending_items(self) -> List[Any]:
         """Queued requests in global FIFO (submission) order."""
         entries = [e for q in self._buckets.values() for e in q]

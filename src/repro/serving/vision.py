@@ -52,7 +52,8 @@ class VisionRequest:
     classes: Optional[np.ndarray] = None  # [k] int32, most-probable first
     probs: Optional[np.ndarray] = None  # [k] f32, descending
     latency_s: Optional[float] = None
-    submitted_at: float = 0.0
+    # None = not yet admitted; a 0.0 stamp from a fake clock is a real stamp
+    submitted_at: Optional[float] = None
 
     @property
     def done(self) -> bool:
@@ -164,11 +165,17 @@ class VisionEngine:
             jax.block_until_ready(self._classify(self.params, x))
 
     @property
+    def inflight(self) -> int:
+        """Requests inside dispatched (not yet retired) device batches —
+        the public in-flight surface (the cluster never reads
+        ``_inflight``)."""
+        return sum(len(f.reqs) for f in self._inflight)
+
+    @property
     def load(self) -> int:
         """Queued + in-flight requests — the cluster's least-loaded routing
         signal (DESIGN.md section 7)."""
-        return self.scheduler.depth + sum(
-            len(f.reqs) for f in self._inflight)
+        return self.scheduler.depth + self.inflight
 
     @property
     def idle(self) -> bool:
@@ -178,16 +185,20 @@ class VisionEngine:
     def free_room(self) -> float:
         """Admission slots left before ``submit`` raises ``Backpressure``
         (inf when unbounded)."""
-        if self.scheduler.max_pending == 0:
-            return float("inf")
-        return max(0, self.scheduler.max_pending - self.scheduler.depth)
+        return self.scheduler.room
+
+    def reset_metrics(self) -> None:
+        """Fresh ``EngineMetrics`` (cluster replica leave — the old one was
+        folded into the retired accumulator)."""
+        self.metrics = EngineMetrics(
+            num_experts=self.metrics.expert_tokens.size, clock=self._clock)
 
     def submit(self, req: VisionRequest) -> None:
         """Enqueue one image; raises ``scheduler.Backpressure`` when the
         pending queue is at ``max_pending``. A ``submitted_at`` already
         stamped upstream (the cluster front-end) is preserved so request
         latency includes admission-queue wait, not just replica time."""
-        if not req.submitted_at:
+        if req.submitted_at is None:
             req.submitted_at = self._clock()
         try:
             self.scheduler.submit(req)
@@ -244,6 +255,12 @@ class VisionEngine:
             for i, r in enumerate(reqs):
                 x[i] = r.patches
             t0 = self._clock()
+            for r in reqs:
+                # per-request admission wait measured from the submitted_at
+                # stamp (cluster front-end or engine submit) to dispatch —
+                # the same semantics ServeEngine records before prefill, so
+                # queue_wait_ms compares across engine families
+                self.metrics.queue_wait.record(max(0.0, t0 - r.submitted_at))
             # async dispatch: returns device futures; nothing blocks here
             out = self._classify(self.params, jnp.asarray(x))
             self._inflight.append(_InFlight(reqs, batch.pad_to, out, t0))

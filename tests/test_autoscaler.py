@@ -1,0 +1,306 @@
+"""Autoscaler: target-range control law, warm-standby lifecycle, drain
+safety, and the windowed pooled-p95 signal (DESIGN.md section 8).
+
+All tests run under a fake clock with a ``FakeReplica`` implementing the
+``EngineReplica`` protocol — the controller is pure host-side bookkeeping,
+so no model math is needed to pin its behavior down deterministically.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.base import AutoscaleConfig
+from repro.serving.autoscaler import Autoscaler
+from repro.serving.cluster import ServingCluster
+from repro.serving.metrics import EngineMetrics
+from repro.serving.replica import EngineReplica
+from repro.serving.scheduler import Backpressure
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@dataclasses.dataclass
+class FakeRequest:
+    uid: int
+    submitted_at: float = None
+
+
+class FakeReplica:
+    """Deterministic ``EngineReplica``: serves up to ``capacity`` queued
+    requests per ``step()``; request latency = fake-clock queue wait."""
+
+    def __init__(self, mesh, clock, *, capacity=2, max_pending=4):
+        self.mesh = mesh
+        self._clock = clock
+        self.capacity = capacity
+        self.max_pending = max_pending
+        self._queue = []
+        self.metrics = EngineMetrics(clock=clock)
+
+    def submit(self, req):
+        if len(self._queue) >= self.max_pending:
+            self.metrics.inc("rejected")
+            raise Backpressure("fake replica full")
+        if req.submitted_at is None:
+            req.submitted_at = self._clock()
+        self._queue.append(req)
+        self.metrics.inc("submitted")
+        self.metrics.observe_queue_depth(len(self._queue))
+
+    def step(self):
+        now = self._clock()
+        for req in self._queue[:self.capacity]:
+            self.metrics.inc("completed")
+            self.metrics.work_done(1, "frames")
+            self.metrics.request_latency.record(
+                max(0.0, now - req.submitted_at))
+        del self._queue[:self.capacity]
+
+    def warmup(self):
+        pass
+
+    def flush(self):
+        while self._queue:
+            self.step()
+
+    def reset_metrics(self):
+        self.metrics = EngineMetrics(clock=self._clock)
+
+    @property
+    def load(self):
+        return len(self._queue)
+
+    @property
+    def free_room(self):
+        return max(0, self.max_pending - len(self._queue))
+
+    @property
+    def idle(self):
+        return not self._queue
+
+
+def _fake_cluster(clock, *, replicas=1, standby=2, capacity=2,
+                  max_pending=4, front_pending=0):
+    factory = lambda mesh: FakeReplica(mesh, clock, capacity=capacity,
+                                       max_pending=max_pending)
+    return ServingCluster(None, None, replicas=replicas, standby=standby,
+                          engine=factory, max_pending=front_pending,
+                          clock=clock)
+
+
+def test_fake_replica_satisfies_protocol():
+    clock = FakeClock()
+    assert isinstance(FakeReplica(None, clock), EngineReplica)
+
+
+def test_scale_up_on_queue_pressure_then_down_when_idle():
+    clock = FakeClock()
+    cluster = _fake_cluster(clock, replicas=1, standby=2, capacity=1,
+                            max_pending=2)
+    policy = AutoscaleConfig(min_replicas=1, max_replicas=3,
+                             depth_high=2.0, up_patience=2,
+                             depth_low=0.0, down_patience=4, cooldown=1,
+                             slo_p95_ms=1e9, min_window_samples=10**9)
+    scaler = Autoscaler(cluster, policy)
+    uid = 0
+    # burst: 12 arrivals over 4 ticks with 1 replica serving 1/tick ->
+    # front-end depth builds past depth_high * n
+    for _ in range(4):
+        for _ in range(3):
+            cluster.submit(FakeRequest(uid=uid))
+            uid += 1
+        cluster.step()
+        scaler.tick()
+        clock.advance(0.01)
+    assert cluster.num_replicas > 1, "pressure never triggered scale-up"
+    # keep serving (no new arrivals) until drained; controller scales back
+    for _ in range(60):
+        cluster.step()
+        scaler.tick()
+        clock.advance(0.01)
+    assert cluster.idle
+    assert cluster.num_replicas == 1, "idle cluster should shrink to min"
+    snap = cluster.metrics.snapshot()
+    # no request lost across the whole up/down cycle (drained replicas'
+    # counters survive in the retired accumulator)
+    assert snap["aggregate"]["counters"]["completed"] == uid
+    assert snap["aggregate"]["counters"]["cluster_submitted"] == uid
+    # replica-count timeline rose then fell back
+    counts = [n for _, n in snap["replica_timeline"]]
+    assert max(counts) > 1 and counts[0] == 1 and counts[-1] == 1
+    # standby pool got its replicas back
+    assert cluster.standby_replicas == 2 and cluster.draining_replicas == 0
+
+
+def test_scale_up_on_slo_breach_without_front_depth():
+    """Replica-internal queueing (front depth 0) still triggers scale-up
+    through the windowed pooled-p95 signal."""
+    clock = FakeClock()
+    # deep per-replica queue: the router always finds room, so the front
+    # depth stays 0 and only the latency signal can fire
+    cluster = _fake_cluster(clock, replicas=1, standby=1, capacity=1,
+                            max_pending=100)
+    policy = AutoscaleConfig(min_replicas=1, max_replicas=2,
+                             depth_high=1e9, up_patience=1,
+                             slo_p95_ms=50.0, min_window_samples=4,
+                             down_patience=10**9, cooldown=0)
+    scaler = Autoscaler(cluster, policy)
+    uid = 0
+    for _ in range(20):
+        for _ in range(3):
+            cluster.submit(FakeRequest(uid=uid))
+            uid += 1
+        cluster.step()
+        scaler.tick()
+        clock.advance(0.1)  # waits grow ~100ms/tick >> 50ms SLO
+        assert cluster.depth == 0, "front depth must stay empty here"
+        if cluster.num_replicas == 2:
+            break
+    assert cluster.num_replicas == 2, "SLO breach never triggered scale-up"
+    assert scaler.window_p95_ms > policy.slo_p95_ms
+
+
+def test_hysteresis_patience_and_cooldown():
+    clock = FakeClock()
+    cluster = _fake_cluster(clock, replicas=1, standby=2, capacity=0,
+                            max_pending=1)
+    policy = AutoscaleConfig(min_replicas=1, max_replicas=3,
+                             depth_high=0.5, up_patience=3, cooldown=5,
+                             down_patience=10**9,
+                             slo_p95_ms=1e9, min_window_samples=10**9)
+    scaler = Autoscaler(cluster, policy)
+    for i in range(8):  # enough to keep depth > depth_high * max_replicas
+        cluster.submit(FakeRequest(uid=i))
+    cluster._route()
+    assert cluster.depth >= 7  # replica bound 1 -> pressure at the front
+    # patience: two breached ticks do nothing, the third scales
+    assert scaler.tick() is None
+    assert scaler.tick() is None
+    assert scaler.tick() == "up"
+    # cooldown: sustained pressure cannot scale again for `cooldown` ticks
+    fired = [scaler.tick() for _ in range(policy.cooldown)]
+    assert fired == [None] * policy.cooldown
+    assert scaler.tick() == "up"
+
+
+def test_drain_serves_inflight_before_standby_return():
+    clock = FakeClock()
+    cluster = _fake_cluster(clock, replicas=2, standby=0, capacity=1,
+                            max_pending=10)
+    reqs = [FakeRequest(uid=i) for i in range(6)]
+    for r in reqs:
+        cluster.submit(r)
+    cluster._route()
+    assert all(e.load > 0 for e in cluster.engines)
+    # drain one replica while it still holds queued work
+    assert cluster.scale_down()
+    assert cluster.num_replicas == 1 and cluster.draining_replicas == 1
+    for _ in range(10):
+        cluster.step()
+        clock.advance(0.01)
+    assert cluster.idle
+    # the draining replica served its queue, then returned to standby
+    assert cluster.draining_replicas == 0 and cluster.standby_replicas == 1
+    agg = cluster.metrics.snapshot()["aggregate"]
+    assert agg["counters"]["completed"] == len(reqs), "requests lost in drain"
+    # its latency distribution survived the leave (retired accumulator)
+    assert agg["latency_ms"]["n"] == len(reqs)
+
+
+def test_scale_down_refuses_last_replica():
+    clock = FakeClock()
+    cluster = _fake_cluster(clock, replicas=1, standby=0)
+    assert not cluster.scale_down()
+    assert cluster.num_replicas == 1
+
+
+def test_cold_spawn_past_standby_pool():
+    """Scaling beyond the pre-built pool spawns (and warms) a new replica
+    instead of failing."""
+    clock = FakeClock()
+    cluster = _fake_cluster(clock, replicas=1, standby=1)
+    assert cluster.scale_up()  # standby promote
+    assert cluster.standby_replicas == 0
+    assert cluster.scale_up()  # cold spawn
+    assert cluster.num_replicas == 3
+    timeline = cluster.metrics.snapshot()["replica_timeline"]
+    assert [n for _, n in timeline] == [1, 2, 3]
+
+
+def test_stale_p95_expires_and_idle_cluster_scales_back_down():
+    """A p95 breach measured during a surge must age out once traffic
+    stops: without the TTL the stale estimate reads as a live SLO breach
+    forever — scaling an idle cluster to max and blocking scale-down."""
+    clock = FakeClock()
+    cluster = _fake_cluster(clock, replicas=1, standby=2, capacity=10,
+                            max_pending=100)
+    policy = AutoscaleConfig(min_replicas=1, max_replicas=3,
+                             depth_high=1e9, up_patience=1,
+                             slo_p95_ms=50.0, min_window_samples=4,
+                             down_patience=2, cooldown=0, p95_ttl=5)
+    scaler = Autoscaler(cluster, policy)
+    # surge: 4 requests wait ~200ms >> SLO, close a breached window
+    for i in range(4):
+        cluster.submit(FakeRequest(uid=i))
+    cluster._route()
+    clock.advance(0.2)
+    cluster.step()
+    assert scaler.tick() == "up"  # breach reacts
+    assert scaler.window_p95_ms > policy.slo_p95_ms
+    # traffic stops: the stale breach must not keep scaling up, and after
+    # p95_ttl evaluations the estimate expires and the cluster shrinks
+    for _ in range(20):
+        cluster.step()
+        scaler.tick()
+        clock.advance(0.01)
+    assert math.isnan(scaler.window_p95_ms)
+    assert cluster.num_replicas == 1, "idle cluster must fall back to min"
+
+
+def test_windowed_p95_across_replica_churn():
+    """The autoscaler's latency window stays correct when a replica drains
+    mid-window: its samples fold into the retired histogram, so the delta
+    between evaluations never loses (or double-counts) mass."""
+    clock = FakeClock()
+    cluster = _fake_cluster(clock, replicas=2, standby=0, capacity=1,
+                            max_pending=10)
+    policy = AutoscaleConfig(min_window_samples=4, slo_p95_ms=50.0,
+                             down_patience=10**9, up_patience=10**9)
+    scaler = Autoscaler(cluster, policy)
+    # window 1: 6 requests at ~10ms wait
+    for i in range(6):
+        cluster.submit(FakeRequest(uid=i))
+    cluster._route()
+    clock.advance(0.01)
+    for _ in range(5):
+        cluster.step()
+        clock.advance(0.0)
+    scaler.tick()
+    n_before = int(scaler._window_hist.sum())
+    assert n_before == 6
+    # a replica drains (folds its samples into retired) mid-stream
+    assert cluster.scale_down()
+    for _ in range(5):
+        cluster.step()
+    # window 2: 4 more requests at ~100ms wait through the remaining replica
+    for i in range(4):
+        cluster.submit(FakeRequest(uid=100 + i))
+    cluster._route()
+    clock.advance(0.1)
+    for _ in range(6):
+        cluster.step()
+    scaler.tick()
+    # delta histogram must contain exactly the 4 new samples (~100ms each)
+    assert int(scaler._window_hist.sum()) == 10
+    assert 50.0 < scaler.window_p95_ms < 200.0

@@ -1,10 +1,11 @@
 """ServingCluster: multi-replica request path, least-loaded routing,
-two-level backpressure, drain, and the merge-safe metrics roll-up
-(DESIGN.md section 7).
+two-level backpressure, drain, LM (ServeEngine) cluster parity through the
+engine-agnostic replica protocol, and the merge-safe metrics roll-up under
+replica churn (DESIGN.md sections 7-8).
 
 Most tests run replicas that share the single CPU device (host-side DP —
 the routing/metrics logic is device-count-independent); the expert-parallel
-replica test skips below 8 devices.
+replica tests skip below 8 devices.
 """
 import dataclasses
 
@@ -18,7 +19,9 @@ import repro.models as M
 from repro.configs import get_shape, smoke_config
 from repro.core.quant.ptq import calibrate_model, ptq_model, quantized_config
 from repro.serving.cluster import ServingCluster, replica_meshes
+from repro.serving.engine import Request, ServeEngine
 from repro.serving.metrics import ClusterMetrics, EngineMetrics, LatencyTracker
+from repro.serving.replica import EngineReplica
 from repro.serving.scheduler import Backpressure
 from repro.serving.vision import synth_requests
 
@@ -150,6 +153,133 @@ def test_cluster_ep_replica_end_to_end(moe_vit_trees):
 
 
 # ---------------------------------------------------------------------------
+# LM cluster parity (engine-agnostic replica protocol)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def moe_lm_trees():
+    cfg = smoke_config("olmoe-1b-7b").replace(remat=False)
+    shape = get_shape("train_4k").replace(seq_len=24, global_batch=2)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    batches = [M.synth_batch(cfg, shape, jax.random.PRNGKey(i))
+               for i in range(2)]
+    taps = calibrate_model(cfg, params, batches)
+    return cfg, params, ptq_model(cfg, params, taps, materialize="int8")
+
+
+def _lm_requests(cfg, n, seed=0, max_new=4):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(uid=i,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    int(rng.integers(3, 9))).astype(np.int32),
+                max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+def test_engines_satisfy_replica_protocol(moe_lm_trees, moe_vit_trees):
+    """Both engine families present the full EngineReplica surface (the
+    cluster and the autoscaler only ever touch that surface)."""
+    lm_cfg, lm_params, _ = moe_lm_trees
+    vit_cfg, vit_params, _ = moe_vit_trees
+    from repro.serving.vision import VisionEngine
+
+    eng = ServeEngine(lm_cfg, lm_params, batch_slots=2, max_len=16)
+    vis = VisionEngine(vit_cfg, vit_params, batch_buckets=(1,))
+    for e in (eng, vis):
+        assert isinstance(e, EngineReplica)
+        assert e.idle and e.load == 0 and e.free_room > 0
+
+
+def test_lm_cluster_greedy_parity_int8(moe_lm_trees):
+    """Acceptance: >=2 ServeEngine replicas over the cluster front-end, int8
+    params, fake clock — drains to the same greedy outputs as a
+    single-engine run (routing, placement, and slot sharing leak nothing)."""
+    cfg, _, p_int8 = moe_lm_trees
+    qcfg = quantized_config(cfg)
+    solo_reqs = _lm_requests(cfg, 6, seed=5)
+    eng = ServeEngine(qcfg, p_int8, batch_slots=2, max_len=32)
+    for r in solo_reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+
+    clock_t = [100.0]
+    clock = lambda: clock_t[0]
+    cluster = ServingCluster(qcfg, p_int8, replicas=2, engine="lm",
+                             batch_slots=2, max_len=32,
+                             max_pending_per_replica=2, clock=clock)
+    reqs = _lm_requests(cfg, 6, seed=5)
+    for r in reqs:
+        cluster.submit(r)
+        cluster.step()
+        clock_t[0] += 0.25
+    cluster.flush()
+    for got, want in zip(reqs, solo_reqs):
+        assert got.generated == want.generated, got.uid
+
+    snap = cluster.metrics.snapshot()
+    agg = snap["aggregate"]
+    assert len(snap["replicas"]) == 2
+    assert agg["counters"]["completed"] == 6
+    assert agg["counters"]["cluster_submitted"] == 6
+    assert agg["latency_ms"]["n"] == 6
+    # fake clock drove the latency/FPS windows -> finite, deterministic
+    assert np.isfinite(agg["fps"]) and agg["fps"] > 0
+    # decode slots as the load signal: both replicas decoded tokens
+    per_replica = [r["counters"].get("tokens", 0) for r in snap["replicas"]]
+    assert all(n > 0 for n in per_replica)
+    # MoE decode path reported per-expert occupancy through the roll-up
+    assert sum(agg["expert_tokens"]) > 0
+    # queue_wait was recorded at admission (before prefill) on each replica
+    assert agg["queue_wait_ms"]["n"] == 6
+
+
+def test_lm_engine_free_room_counts_decode_slots(moe_lm_trees):
+    cfg, params, _ = moe_lm_trees
+    eng = ServeEngine(cfg, params, batch_slots=3, max_len=16, max_pending=2)
+    assert eng.free_slots == 3 and eng.free_room == 5  # 3 slots + 2 queue
+    reqs = _lm_requests(cfg, 4, seed=7, max_new=8)
+    for r in reqs[:3]:
+        eng.submit(r)
+    eng.step()  # admits all three into slots
+    assert eng.inflight == 3 and eng.free_slots == 0
+    assert eng.load == 3 and eng.free_room == 2  # queue room only
+    eng.submit(reqs[3])
+    assert eng.load == 4 and eng.free_room == 1
+    assert not eng.idle
+    eng.flush()
+    assert eng.idle and eng.free_room == 5
+
+
+@requires_devices(8)
+def test_lm_cluster_ep_replica_end_to_end(moe_lm_trees):
+    """DP x EP for the LM family: one ServeEngine replica spanning all
+    devices with sharded expert stacks decodes the same greedy tokens as
+    the single-device int8 engine."""
+    cfg, _, p_int8 = moe_lm_trees
+    qcfg = quantized_config(cfg)
+    solo_reqs = _lm_requests(cfg, 3, seed=11)
+    eng = ServeEngine(qcfg, p_int8, batch_slots=2, max_len=32)
+    for r in solo_reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+
+    ep_cfg = qcfg.replace(moe=dataclasses.replace(
+        qcfg.moe, moe_exec="expert_parallel"))
+    cluster = ServingCluster(ep_cfg, p_int8, replicas=1, engine="lm",
+                             batch_slots=2, max_len=32)
+    assert cluster.meshes[0].shape["model"] == jax.device_count()
+    reqs = _lm_requests(cfg, 3, seed=11)
+    for r in reqs:
+        cluster.submit(r)
+        cluster.step()
+    cluster.flush()
+    for got, want in zip(reqs, solo_reqs):
+        assert got.generated == want.generated, got.uid
+
+
+# ---------------------------------------------------------------------------
 # Merge-safe metrics
 # ---------------------------------------------------------------------------
 
@@ -205,3 +335,69 @@ def test_cluster_metrics_window_union_fps():
     cm = ClusterMetrics([m1, m2])
     # 60 frames over the union window [0, 2] -> 30 FPS (NOT 30+15=45)
     assert cm.fps == pytest.approx(30.0)
+
+
+def test_cluster_metrics_replica_churn():
+    """Autoscaling churn: a replica joins mid-window, another drains out.
+    Percentiles must stay *pooled* across both transitions (the drained
+    replica's distribution folds into the retired accumulator — never
+    averaged, never dropped), expert-occupancy sums stay stable, and the
+    timeline records every transition."""
+    clock_t = [0.0]
+    clock = lambda: clock_t[0]
+    m1 = EngineMetrics(num_experts=4, clock=clock)
+    cm = ClusterMetrics([m1], clock=clock)
+    cm.mark_replicas(1)
+    # replica 1: 98 fast + 2 slow requests, experts 0/1 hot
+    clock_t[0] = 0.0
+    m1.inc("submitted", 100)
+    for _ in range(98):
+        m1.request_latency.record(0.010)
+    m1.request_latency.record(1.0)
+    m1.request_latency.record(1.0)
+    m1.inc("completed", 100)
+    m1.work_done(100, "frames")
+    m1.add_expert_tokens(np.array([6, 4, 0, 0]))
+    # replica 2 joins mid-window and serves the fast tail
+    m2 = EngineMetrics(num_experts=4, clock=clock)
+    clock_t[0] = 1.0
+    cm.add_replica(m2)
+    cm.mark_replicas(2)
+    m2.inc("submitted", 900)
+    for _ in range(900):
+        m2.request_latency.record(0.010)
+    m2.inc("completed", 900)
+    m2.work_done(900, "frames")
+    m2.add_expert_tokens(np.array([0, 0, 7, 3]))
+
+    before = cm.snapshot()["aggregate"]
+    assert before["latency_ms"]["n"] == 1000
+    tokens_before = before["expert_tokens"]
+    assert sum(tokens_before) == 20
+
+    # replica 1 drains: fold + reset (the cluster's leave protocol)
+    clock_t[0] = 2.0
+    cm.remove_replica(m1)
+    cm.mark_replicas(1)
+
+    after = cm.snapshot()["aggregate"]
+    # nothing lost: counts, distribution mass, occupancy all stable
+    assert after["latency_ms"]["n"] == 1000
+    assert after["counters"]["completed"] == 1000
+    assert after["expert_tokens"] == tokens_before
+    assert sum(after["expert_occupancy"]) == pytest.approx(1.0)
+    # percentiles still POOLED: the 1s outliers are 0.2% of the union, so
+    # p99 stays ~10ms; averaging per-replica p99s would report ~0.5s
+    pooled = cm.merged_request_latency()
+    assert pooled.percentile(99) < 0.05
+    avg_of_p99 = (m2.request_latency.percentile(99) + 1.0) / 2
+    assert avg_of_p99 > 0.4
+    # fps window unions the drained replica's window with the live one
+    assert np.isfinite(cm.fps) and cm.fps == pytest.approx(1000 / 1.0)
+    # timeline recorded join and leave
+    assert [n for _, n in cm.replica_timeline] == [1, 2, 1]
+    # the drained replica rejoins with FRESH metrics -> no double count
+    m1_fresh = EngineMetrics(num_experts=4, clock=clock)
+    cm.add_replica(m1_fresh)
+    cm.mark_replicas(2)
+    assert cm.snapshot()["aggregate"]["latency_ms"]["n"] == 1000
