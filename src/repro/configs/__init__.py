@@ -8,6 +8,7 @@ from repro.configs import moe_vit as _moe_vit
 from repro.configs.base import (
     AttnConfig,
     AutoscaleConfig,
+    AutotuneConfig,
     DECODE_32K,
     FULL_ATTENTION_FAMILIES,
     LONG_500K,

@@ -82,6 +82,38 @@ class QuantConfig:
 
 
 @dataclass(frozen=True)
+class AutotuneConfig:
+    """Per-device Pallas tile-size autotuning (kernels/autotune.py,
+    DESIGN.md section 9) — the TPU analogue of re-synthesizing the FPGA
+    kernels per deployment (CoQMoE section 4).
+
+    When enabled, engine ``warmup()`` traces every program the replica will
+    compile (``jax.eval_shape`` — no device work), collects the kernel
+    shape-bucket keys those programs hit, benchmarks candidate tile grids
+    for each missing key on the actual device, and persists the winners in
+    a versioned JSON table keyed by device kind. A later warmup on the same
+    device kind is a pure cache hit (zero re-sweep). On CPU / interpret
+    backends no timing happens — keys are filled with the deterministic
+    default tiles."""
+
+    enable: bool = False
+    # sweep budget: max candidate tile configs timed per (kernel,
+    # shape-bucket) key (the default config is always candidate #1, so the
+    # chosen config is never slower than the default by construction)
+    budget: int = 12
+    # timing repetitions per candidate (median is recorded)
+    reps: int = 5
+    # directory holding one table file per device kind; None falls back to
+    # $REPRO_AUTOTUNE_CACHE or ".repro_autotune"
+    cache_dir: Optional[str] = None
+    # pre-pinned entries applied on top of the loaded table, as
+    # (entry_key, (block_a, block_b)) pairs — the ship-a-pretuned-table
+    # hook (keys are the strings kernels/autotune.py builds; see DESIGN.md
+    # section 9 for the key contract)
+    overrides: Tuple[Tuple[str, Tuple[int, int]], ...] = ()
+
+
+@dataclass(frozen=True)
 class AutoscaleConfig:
     """Target-range admission autoscaling for ``ServingCluster``
     (serving/autoscaler.py — DESIGN.md section 8).
@@ -150,6 +182,8 @@ class ModelConfig:
     num_classes: int = 0
     image_tokens: int = 0  # e.g. 197 for 224/16 ViT (196 patches + cls)
     quant: QuantConfig = field(default_factory=QuantConfig)
+    # per-device kernel tile autotuning (serving warmup; kernels/autotune.py)
+    autotune: AutotuneConfig = field(default_factory=AutotuneConfig)
     dtype: str = "bfloat16"
     # training knobs
     remat: bool = True

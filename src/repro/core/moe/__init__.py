@@ -4,6 +4,7 @@ from repro.core.moe.dispatch import (
     grouped_combine,
     grouped_dispatch,
     gshard_dispatch_combine,
+    quantize_ep_payload,
 )
 from repro.core.moe.router import RouterOut, route_topk
 

@@ -110,6 +110,22 @@ def ep_exchange_plan(group_sizes: jnp.ndarray, n_shards: int,
     )
 
 
+def quantize_ep_payload(x_sorted: jnp.ndarray, a_scale: jnp.ndarray,
+                        bits: int = 8) -> jnp.ndarray:
+    """Quantize expert-sorted exchange rows to int8 with the folded fc1
+    activation scale (the ``wi_as`` leaf of a QuantizedParams tree).
+
+    This is exactly the quantization ``kernels.ops.grouped_matmul`` would
+    apply to fp rows *after* the exchange — it is elementwise per row, so
+    quantize-then-exchange is bit-identical to exchange-then-quantize
+    while moving 4x fewer bytes through the all_to_all. The grouped kernel
+    consumes the int8 rows directly (int8 x int8 -> int32 with the
+    product-of-scales dequant at the flush)."""
+    from repro.core.quant.qtypes import quantize_sym
+
+    return quantize_sym(x_sorted.astype(jnp.float32), a_scale, bits)
+
+
 # ---------------------------------------------------------------------------
 # GShard-style capacity dispatch (training at scale under GSPMD)
 # ---------------------------------------------------------------------------

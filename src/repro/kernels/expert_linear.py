@@ -32,12 +32,42 @@ QuantizedParams contract, DESIGN.md section 4).
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128  # TPU vector-lane width (last tile dim)
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-int(n) // m) * m
+
+
+def _sublane(dtype) -> int:
+    """Min second-to-last tile dim for a dtype: 8 f32, 16 bf16, 32 int8
+    (8 * packing factor vs 4-byte lanes)."""
+    return 8 * max(1, 4 // jnp.dtype(dtype).itemsize)
+
+
+def legal_gmm_blocks(block_m: int, block_n: int, T: int, Dout: int,
+                     x_dtype=jnp.float32) -> Tuple[int, int]:
+    """Clamp a requested (block_m, block_n) to the problem, then round UP
+    to legal TPU tile multiples.
+
+    A bare ``min(block_m, T)`` clamp yields TPU-illegal or wasteful tiny
+    tiles (T=1 decode -> a 1-row m-tile); instead the clamped block rounds
+    up to the x tile's sublane multiple (8 f32 / 16 bf16 / 32 int8 rows)
+    and the lane multiple (128) — the kernel pads the operands to the
+    rounded tile and slices the padding off, which is free, while the
+    tile stays legal. The autotuner (kernels/autotune.py) uses the same
+    function so its candidate grid and the kernel's effective tiles can
+    never drift."""
+    bm = _round_up(max(1, min(block_m, max(T, 1))), _sublane(x_dtype))
+    bn = _round_up(max(1, min(block_n, max(Dout, 1))), LANE)
+    return bm, bn
 
 
 def _route_metadata(group_sizes: jnp.ndarray, block_m: int, n_work: int):
@@ -140,8 +170,7 @@ def grouped_matmul(
             (0, Dout),
             out_dtype or (jnp.float32 if int8_in else x.dtype),
         )
-    block_m = min(block_m, max(T, 1))
-    block_n = min(block_n, Dout)
+    block_m, block_n = legal_gmm_blocks(block_m, block_n, T, Dout, x.dtype)
     n_m = pl.cdiv(T, block_m)
     n_n = pl.cdiv(Dout, block_n)
     t_pad, n_pad = n_m * block_m, n_n * block_n

@@ -41,13 +41,24 @@ def attention(
     """Streaming attention; GQA-native (k/v carry KVH heads)."""
     mode = _mode()
     if mode in ("pallas", "interpret"):
+        from repro.kernels import autotune
         from repro.kernels.quant_attention import streaming_attention
 
+        # trace-time tile lookup: tuned entry for this shape bucket when a
+        # tuning table is active (kernels/autotune.py), defaults otherwise
+        bq, bk = autotune.attn_blocks(
+            q.shape[0], q.shape[2], k.shape[2], q.shape[3],
+            q.shape[1], k.shape[1],
+            causal=causal, quant_bits=quant_bits,
+            scaled=k_scale is not None, q_dtype=q.dtype, k_dtype=k.dtype,
+            local_window=local_window,
+        )
         return streaming_attention(
             q, k, v,
             causal=causal, q_offset=q_offset, quant_bits=quant_bits,
             logit_softcap=logit_softcap, local_window=local_window,
             k_scale=k_scale, v_scale=v_scale, kv_valid_len=kv_valid_len,
+            block_q=bq, block_k=bk,
             interpret=(mode == "interpret"),
         )
     return _ref.flash_attention_ref(
@@ -88,9 +99,16 @@ def grouped_matmul(
 
         x = quantize_sym(x.astype(jnp.float32), a_scale, a_bits)
     if mode in ("pallas", "interpret"):
+        from repro.kernels import autotune
         from repro.kernels.expert_linear import grouped_matmul as gmm
 
+        bm, bn = autotune.gmm_blocks(
+            x.shape[0], w.shape[0], x.shape[1], w.shape[2],
+            x_dtype=x.dtype, w_dtype=w.dtype,
+            scaled=w_scale is not None, ascaled=a_scale is not None,
+        )
         return gmm(x, w, group_sizes, w_scale=w_scale, a_scale=a_scale,
+                   block_m=bm, block_n=bn,
                    interpret=(mode == "interpret"))
     # ragged_dot is the fast XLA path on CPU/GPU (grouped_matmul_ref is the
     # oracle used by tests; ragged_dot matches it exactly).

@@ -30,15 +30,34 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.expert_linear import LANE, _round_up, _sublane
+
 LOG2E = 1.4426950408889634
 SQRT2M1 = 0.41421356237309515  # sqrt(2) - 1
+
+
+def legal_attn_blocks(block_q: int, block_k: int, Sq: int, Sk: int,
+                      q_dtype=jnp.float32) -> Tuple[int, int]:
+    """Clamp a requested (block_q, block_k) to the sequence, then round UP
+    to legal TPU tile multiples (shared rule: expert_linear._sublane).
+
+    ``min(block_q, Sq)`` alone produces a 1-row Q tile for decode (Sq=1),
+    which is illegal/wasteful on TPU; the clamped block rounds up to the Q
+    dtype's sublane multiple (8 f32 / 16 bf16) and block_k to the lane
+    multiple (128, which also covers the int8 K/V sublane minimum of 32).
+    Padded rows/keys are masked (``kpos < valid``) and sliced off, so the
+    rounding changes layout only, never values. The autotuner uses the
+    same function so candidate tiles match the kernel's effective tiles."""
+    bq = _round_up(max(1, min(block_q, max(Sq, 1))), _sublane(q_dtype))
+    bk = _round_up(max(1, min(block_k, max(Sk, 1))), LANE)
+    return bq, bk
 
 
 def _attn_kernel(
@@ -199,8 +218,7 @@ def streaming_attention(
     assert H % KVH == 0, (H, KVH)
     group = H // KVH
 
-    block_q = min(block_q, max(Sq, 1))
-    block_k = min(block_k, Sk)
+    block_q, block_k = legal_attn_blocks(block_q, block_k, Sq, Sk, q.dtype)
     n_q = pl.cdiv(Sq, block_q)
     n_k = pl.cdiv(Sk, block_k)
     sq_pad, sk_pad = n_q * block_q, n_k * block_k

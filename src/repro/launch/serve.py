@@ -38,6 +38,13 @@ def main() -> None:
                          "replicas (one front-end, least-loaded routing)")
     ap.add_argument("--quantized", action="store_true",
                     help="enable W8A8 + int8 KV + 4-bit log-sqrt2 attention")
+    ap.add_argument("--autotune", action="store_true",
+                    help="per-device Pallas tile autotuning at warmup "
+                         "(kernels/autotune.py; persistent table under "
+                         "--autotune-cache, pure cache hit on relaunch)")
+    ap.add_argument("--autotune-cache", default=None,
+                    help="tuning-table cache dir (default .repro_autotune "
+                         "or $REPRO_AUTOTUNE_CACHE)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -46,6 +53,11 @@ def main() -> None:
         import dataclasses
 
         cfg = cfg.replace(quant=dataclasses.replace(cfg.quant, enable=True))
+    if args.autotune:
+        import dataclasses
+
+        cfg = cfg.replace(autotune=dataclasses.replace(
+            cfg.autotune, enable=True, cache_dir=args.autotune_cache))
     params = models.init_model_params(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
     reqs = [
@@ -63,6 +75,10 @@ def main() -> None:
                                  engine="lm", batch_slots=args.slots,
                                  max_len=args.max_len)
         cluster.warmup()
+        if args.autotune:
+            from repro.kernels import autotune
+
+            print(autotune.summary())
         t0 = time.perf_counter()
         for r in reqs:
             cluster.submit(r)
@@ -90,6 +106,11 @@ def main() -> None:
 
     engine = ServeEngine(cfg, params, batch_slots=args.slots,
                          max_len=args.max_len)
+    engine.warmup()
+    if args.autotune:
+        from repro.kernels import autotune
+
+        print(autotune.summary())
     for r in reqs:
         engine.submit(r)
     t0 = time.perf_counter()

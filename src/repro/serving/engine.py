@@ -86,7 +86,12 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     ``EXPERT_PARALLEL_RULES`` only the expert stacks shard over 'model' and
     every activation/cache buffer replicates — the EP exchange happens
     inside ``shard_map`` on tokens, so a context-parallel cache layout
-    would only fight the all_to_all (and the eager prefill merge)."""
+    would only fight the all_to_all (and the eager prefill merge).
+
+    Kernel tile configs are resolved at trace time from the ambient
+    autotune table (kernels/autotune.py): compile this step *after*
+    ``autotune.ensure_tuned`` (engine ``warmup()`` orders the two) and the
+    decode program bakes the device-tuned tiles."""
     cfg = lowering_config(cfg) if for_lowering else serving_config(cfg)
     mod = models.module_for(cfg)
     # value (not identity) comparison: an equal copy of the EP rules must
@@ -263,10 +268,40 @@ class ServeEngine:
         self.metrics = EngineMetrics(
             num_experts=self.metrics.expert_tokens.size, clock=self._clock)
 
+    def _tune_trace(self) -> None:
+        """Abstract (eval_shape — no compile, no device work) trace of the
+        programs this replica runs, so the autotuner collects the exact
+        kernel shape-bucket keys before anything compiles. Runs inside the
+        replica's EP scope: under expert parallelism the shard_map body
+        traces with the *local* per-shard shapes, which is what the
+        per-shard kernels look up at serving time."""
+        tokens = jnp.zeros((self.B, 1), jnp.int32)
+        index = jnp.asarray(self.pos, jnp.int32)
+        # representative prefill: prompt lengths bucket to powers of two,
+        # so one pow2-length trace covers the common admission shapes;
+        # batch-parallel admission prefills up to `B` same-length prompts
+        # at once, so trace the single-prompt AND full-batch shapes
+        plen = min(64, max(8, self.max_len // 2))
+        with self._scope():
+            jax.eval_shape(
+                lambda p, t, c, i: self.mod.decode_step(p, self.cfg, t, c, i),
+                self.params, tokens, self.cache, index)
+            for n in sorted({1, self.B}):
+                jax.eval_shape(
+                    lambda p, t: self.mod.prefill(p, self.cfg, t,
+                                                  max_len=self.max_len),
+                    self.params, jnp.zeros((n, plen), jnp.int32))
+
     def warmup(self) -> None:
-        """Compile the decode step outside the measured path. The dummy tick
-        writes K/V rows at the (empty) slots' positions; prefill overwrites
-        a slot's full cache row at admission, so nothing leaks."""
+        """Tune (once per device kind — later replicas are pure cache
+        hits), then compile the decode step outside the measured path. The
+        dummy tick writes K/V rows at the (empty) slots' positions;
+        prefill overwrites a slot's full cache row at admission, so
+        nothing leaks."""
+        if self.cfg.autotune.enable:
+            from repro.kernels import autotune
+
+            autotune.ensure_tuned(self.cfg.autotune, self._tune_trace)
         tokens = jnp.zeros((self.B, 1), jnp.int32)
         index = jnp.asarray(self.pos, jnp.int32)
         with self._scope():
@@ -292,40 +327,50 @@ class ServeEngine:
         self.metrics.observe_queue_depth(self.scheduler.depth)
 
     def _admit(self) -> None:
-        """Batch-prefill admission: admit up to ``free_slots`` prompts per
-        tick; each prompt's queue wait is recorded before its prefill
-        starts (prefill time is service time, not queue time)."""
+        """Batch-parallel prefill admission: admit up to ``free_slots``
+        prompts per tick; same-length prompts prefill as ONE batched
+        forward (a [n, S] batch instead of n sequential [1, S] runs — the
+        prompt math is where admission time goes), then each row's cache
+        slice is merged into its slot. Grouping by exact length keeps the
+        batch unpadded, so every row's last position is its true last
+        token and the batched logits match the solo runs. Each prompt's
+        queue wait is recorded before its prefill starts (prefill time is
+        service time, not queue time)."""
         free = [s for s in range(self.B) if s not in self.active]
         while free:
             batch = self.scheduler.poll(limit=len(free))
             if batch is None:
                 return
             now = self._clock()
+            groups: Dict[int, List[Request]] = {}
             for req in batch.items:
-                slot = free.pop(0)
-                self.metrics.queue_wait.record(
-                    max(0.0, now - req.submitted_at))
-                # prefill the slot: feed prompt tokens one microstep at a
-                # time into the shared cache at this slot's rows
-                # (token-parallel prefill would batch this; slot isolation
-                # keeps it simple).
-                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                groups.setdefault(len(req.prompt), []).append(req)
+            for _, reqs in sorted(groups.items()):
+                slots = [free.pop(0) for _ in reqs]
+                for req in reqs:
+                    self.metrics.queue_wait.record(
+                        max(0.0, now - req.submitted_at))
+                toks = jnp.asarray(np.stack([r.prompt for r in reqs]),
+                                   jnp.int32)
                 with self._scope():
-                    logits, slot_cache = self.mod.prefill(
-                        self.params, self.cfg,
-                        toks, max_len=self.max_len,
+                    logits, part_cache = self.mod.prefill(
+                        self.params, self.cfg, toks, max_len=self.max_len,
                     )
-                # merge the slot's prefilled cache rows into the engine cache
-                def merge(full, part):
-                    return jax.lax.dynamic_update_slice(
-                        full, part.astype(full.dtype),
-                        (0, slot) + (0,) * (full.ndim - 2),
-                    )
-                self.cache = jax.tree.map(merge, self.cache, slot_cache)
-                self.pos[slot] = len(req.prompt)
-                first = int(jnp.argmax(logits[0, -1]))
-                req.generated.append(first)
-                self.active[slot] = req
+                self.metrics.inc("prefill_batches")
+                first = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+                for i, (slot, req) in enumerate(zip(slots, reqs)):
+                    # merge row i of the group's prefilled cache into this
+                    # slot's rows of the engine cache
+                    def merge(full, part, slot=slot, i=i):
+                        row = jax.lax.dynamic_slice_in_dim(part, i, 1, axis=1)
+                        return jax.lax.dynamic_update_slice(
+                            full, row.astype(full.dtype),
+                            (0, slot) + (0,) * (full.ndim - 2),
+                        )
+                    self.cache = jax.tree.map(merge, self.cache, part_cache)
+                    self.pos[slot] = len(req.prompt)
+                    req.generated.append(int(first[i]))
+                    self.active[slot] = req
 
     def step(self) -> None:
         """One engine tick: admit queued prompts, decode one token for every

@@ -133,6 +133,56 @@ def test_ep_layer_level_counts_and_aux(trees):
     assert np.isfinite(float(aux))
 
 
+@requires_devices(2)
+def test_ep_int8_exchange_matches_fp32_exchange(trees):
+    """Quantizing the token all_to_all payload (int8 rows, folded fc1
+    activation scale) is elementwise-before vs elementwise-after the
+    exchange — the output must be *bit-identical* to moving fp32 rows and
+    letting the grouped kernel quantize them post-exchange."""
+    cfg, _, p_int8, _ = trees
+    qcfg = _ep(quantized_config(cfg))
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((2, 9, cfg.d_model)), jnp.float32)
+    lp = jax.tree.map(lambda a: a[0], p_int8["pairs_moe"])["moe"]
+    with use_ep_mesh(make_ep_mesh(2)):
+        y_fp, _, _ = expert_parallel_moe(x, lp, qcfg,
+                                         quantize_exchange=False)
+        y_q, _, _ = expert_parallel_moe(x, lp, qcfg,
+                                        quantize_exchange=True)
+    np.testing.assert_array_equal(np.asarray(y_q), np.asarray(y_fp))
+
+
+@requires_devices(2)
+def test_ep_int8_tree_exchanges_int8_payload(trees):
+    """The forward token exchange of a materialized-int8 tree moves int8
+    rows (auto-enabled quantize_exchange): the jaxpr carries an int8
+    all_to_all alongside the f32 return exchange."""
+    cfg, _, p_int8, _ = trees
+    qcfg = _ep(quantized_config(cfg))
+    x = jnp.zeros((2, 9, cfg.d_model), jnp.float32)
+    lp = jax.tree.map(lambda a: a[0], p_int8["pairs_moe"])["moe"]
+    with use_ep_mesh(make_ep_mesh(2)):
+        jaxpr = str(jax.make_jaxpr(
+            lambda xx, pp: expert_parallel_moe(xx, pp, qcfg))(x, lp))
+    a2a = [ln for ln in jaxpr.splitlines() if "all_to_all" in ln]
+    assert any(":i8[" in ln for ln in a2a), \
+        f"token exchange still moves fp rows: {a2a}"
+
+
+def test_quantize_ep_payload_matches_kernel_quantizer(rng):
+    """The payload quantizer is the same grid kernels.ops applies to fp
+    rows entering an int8 grouped matmul (quantize_sym on the folded
+    scale)."""
+    from repro.core.moe.dispatch import quantize_ep_payload
+    from repro.core.quant.qtypes import quantize_sym
+
+    x = jnp.asarray(rng.standard_normal((12, 16)), jnp.float32)
+    s = jnp.float32(0.11)
+    np.testing.assert_array_equal(
+        np.asarray(quantize_ep_payload(x, s, 8)),
+        np.asarray(quantize_sym(x, s, 8)))
+
+
 def test_validate_ep_rejects_bad_configs():
     cfg = smoke_config("m3vit-small")  # 8 experts
     mesh = make_ep_mesh(1)

@@ -82,6 +82,40 @@ def test_continuous_batching_ragged_slots():
         assert _last_generated(eng, i)[:4] == solo[i], f"request {i}"
 
 
+def test_batched_prefill_single_dispatch_and_parity():
+    """Same-length prompts admitted together prefill as ONE batched
+    forward (not n sequential single-prompt runs) and still reproduce the
+    solo-run generations exactly."""
+    cfg = smoke_config("llama3-8b").replace(remat=False)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(4)]
+    solo = [_greedy_reference(cfg, params, p, 3) for p in prompts]
+    eng = ServeEngine(cfg, params, batch_slots=4, max_len=32)
+    calls = []
+
+    class SpyMod:
+        def __init__(self, mod):
+            self._mod = mod
+
+        def __getattr__(self, name):
+            return getattr(self._mod, name)
+
+        def prefill(self, params_, cfg_, toks, **kw):
+            calls.append(tuple(toks.shape))
+            return self._mod.prefill(params_, cfg_, toks, **kw)
+
+    eng.mod = SpyMod(eng.mod)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=3))
+    eng.run_until_drained()
+    assert calls == [(4, 6)], calls  # one batched prefill, all four rows
+    assert eng.metrics.counters["prefill_batches"] == 1
+    for i in range(4):
+        assert _last_generated(eng, i)[:3] == solo[i], f"request {i}"
+
+
 def test_quantized_engine_generates_finite():
     cfg = smoke_config("llama3-8b").replace(remat=False)
     cfg = cfg.replace(quant=dataclasses.replace(cfg.quant, enable=True))
