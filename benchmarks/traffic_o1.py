@@ -11,6 +11,11 @@ TPU kernels (DESIGN.md section 2 maps "PE count" -> tile-parallel width):
     constant; widening the per-tile parallelism (block_q — the PE-array
     width analogue) *reduces* total K re-streams as O(Sq / block_q), with
     the limit block_q = Sq giving exactly one K stream (the FPGA broadcast).
+
+This module also owns the serving stack's offered-load generator
+(``bursty_arrivals``): a two-state Markov-modulated Poisson process that
+``benchmarks/serve_continuous.py`` drives the continuous-batching engine
+with — traffic modeling lives with the traffic analysis.
 """
 from __future__ import annotations
 
@@ -18,6 +23,49 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.kernels.expert_linear import _route_metadata
+
+
+def bursty_arrivals(
+    duration_s: float,
+    rate_rps: float,
+    *,
+    burst_factor: float = 4.0,
+    burst_fraction: float = 0.25,
+    mean_phase_s: float = 0.5,
+    seed: int = 0,
+) -> np.ndarray:
+    """Bursty open-loop arrival offsets (seconds, sorted, in [0, duration)).
+
+    A two-state MMPP: the process alternates between a *calm* phase and a
+    *burst* phase (exponential phase lengths, mean ``mean_phase_s``).
+    Inter-arrivals within a phase are exponential at the phase rate; rates
+    are chosen so the long-run average is ``rate_rps`` while bursts run at
+    ``burst_factor`` times the calm rate — the arrival pattern dynamic
+    batching exists for (uniform pacing never exercises pack formation).
+
+    Deterministic for a given seed, so benchmark runs are reproducible.
+    """
+    if rate_rps <= 0 or duration_s <= 0:
+        return np.zeros(0, np.float64)
+    bf, frac = max(1.0, burst_factor), min(max(burst_fraction, 0.0), 1.0)
+    # solve calm/burst rates: frac of time in burst at bf*calm_rate, mean
+    # over both phases equals rate_rps
+    calm_rate = rate_rps / (1.0 - frac + frac * bf)
+    burst_rate = bf * calm_rate
+    rng = np.random.default_rng(seed)
+    out, t, burst = [], 0.0, False
+    while t < duration_s:
+        phase_mean = mean_phase_s * (frac if burst else (1.0 - frac)) * 2.0
+        phase_end = min(duration_s, t + rng.exponential(max(phase_mean, 1e-6)))
+        rate = burst_rate if burst else calm_rate
+        while True:
+            t += rng.exponential(1.0 / rate)
+            if t >= phase_end:
+                t = phase_end
+                break
+            out.append(t)
+        burst = not burst
+    return np.asarray(out, np.float64)
 
 
 def weight_traffic_bytes(T: int, G: int, Din: int, Dout: int,

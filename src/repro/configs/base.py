@@ -151,6 +151,29 @@ class AutoscaleConfig:
 
 
 @dataclass(frozen=True)
+class ContinuousBatchingConfig:
+    """Continuous-batching knobs for ``ServeEngine`` (DESIGN.md section 10).
+
+    Packed prefill concatenates up to ``batch_slots`` variable-length
+    prompts into one ``[1, bucket]`` token buffer (segment-masked attention)
+    so mixed-length admissions share a single prefill dispatch; buffer
+    lengths bucket to a power-of-two ladder so the AOT program cache stays
+    small. ``async_retire`` moves token materialization (device->host),
+    EOS checks, and completion callbacks onto a retirement thread fed by a
+    device-array queue, keeping the decode tick free of host syncs."""
+
+    packed_prefill: bool = True
+    # token budget of one packed prefill dispatch; 0 = the engine max_len
+    max_prefill: int = 0
+    # smallest pack-buffer bucket (ladder doubles from here to max_prefill)
+    min_bucket: int = 32
+    # retirement thread on/off (off = inline retirement, same ordering)
+    async_retire: bool = True
+    # pre-compile every (bucket x prompt-count, decode) program at warmup()
+    aot_warmup: bool = True
+
+
+@dataclass(frozen=True)
 class ModelConfig:
     name: str
     # dense | moe | ssm | hybrid | encdec | vlm | vit | vit_moe
@@ -184,6 +207,9 @@ class ModelConfig:
     quant: QuantConfig = field(default_factory=QuantConfig)
     # per-device kernel tile autotuning (serving warmup; kernels/autotune.py)
     autotune: AutotuneConfig = field(default_factory=AutotuneConfig)
+    # continuous-batching serving path (serving/engine.py; DESIGN.md §10)
+    serve: ContinuousBatchingConfig = field(
+        default_factory=ContinuousBatchingConfig)
     dtype: str = "bfloat16"
     # training knobs
     remat: bool = True

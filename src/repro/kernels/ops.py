@@ -37,6 +37,8 @@ def attention(
     k_scale: Optional[jnp.ndarray] = None,
     v_scale: Optional[jnp.ndarray] = None,
     kv_valid_len: Optional[jnp.ndarray] = None,
+    q_segment_ids: Optional[jnp.ndarray] = None,  # [B, Sq] packed prefill
+    kv_segment_ids: Optional[jnp.ndarray] = None,  # [B, Sk]
 ) -> jnp.ndarray:
     """Streaming attention; GQA-native (k/v carry KVH heads)."""
     mode = _mode()
@@ -58,6 +60,7 @@ def attention(
             causal=causal, q_offset=q_offset, quant_bits=quant_bits,
             logit_softcap=logit_softcap, local_window=local_window,
             k_scale=k_scale, v_scale=v_scale, kv_valid_len=kv_valid_len,
+            q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
             block_q=bq, block_k=bk,
             interpret=(mode == "interpret"),
         )
@@ -66,6 +69,7 @@ def attention(
         causal=causal, q_offset=q_offset, quant_bits=quant_bits,
         logit_softcap=logit_softcap, local_window=local_window,
         k_scale=k_scale, v_scale=v_scale, kv_valid_len=kv_valid_len,
+        q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
     )
 
 

@@ -68,22 +68,27 @@ def _attn_kernel(
     q_ref,  # [1, 1, bq, hd]
     k_ref,  # [1, 1, bk, hd]
     v_ref,  # [1, 1, bk, hd]
-    *rest,  # (k_scale?, v_scale?, out, m_scratch, l_scratch, acc_scratch)
+    *rest,  # (k_scale?, v_scale?, qseg?, kseg?, out, m_s, l_s, acc_s)
     causal: bool,
     local_window: int,
     logit_softcap: float,
     quant_bits: int,
     has_scales: bool,
+    has_segs: bool,
     block_q: int,
     block_k: int,
     n_k: int,
     sm_scale: float,
 ):
+    rest = list(rest)
+    ks_ref = vs_ref = qseg_ref = kseg_ref = None
     if has_scales:
-        ks_ref, vs_ref, o_ref, m_s, l_s, acc_s = rest
-    else:
-        ks_ref = vs_ref = None
-        o_ref, m_s, l_s, acc_s = rest
+        ks_ref, vs_ref = rest[0], rest[1]
+        rest = rest[2:]
+    if has_segs:
+        qseg_ref, kseg_ref = rest[0], rest[1]
+        rest = rest[2:]
+    o_ref, m_s, l_s, acc_s = rest
 
     b = pl.program_id(0)
     iq = pl.program_id(2)
@@ -115,6 +120,11 @@ def _attn_kernel(
         mask &= kpos <= qpos
     if local_window > 0:
         mask &= (qpos - kpos) < local_window
+    if has_segs:
+        # Packed variable-length prefill (DESIGN.md section 10): a position
+        # only attends within its own segment. Padded tails carry id -1 on
+        # the q side and -2 on the k side so they can never match.
+        mask &= qseg_ref[0][:, None] == kseg_ref[0][None, :]
 
     # Block-level skip: nothing in this K tile can be visible.
     row0 = q_off + iq * block_q  # first (smallest) q position of the tile
@@ -209,6 +219,8 @@ def streaming_attention(
     k_scale: Optional[jnp.ndarray] = None,  # [B, Sk, KVH]
     v_scale: Optional[jnp.ndarray] = None,
     kv_valid_len: Optional[jnp.ndarray] = None,  # [B]
+    q_segment_ids: Optional[jnp.ndarray] = None,  # [B, Sq] packed prefill
+    kv_segment_ids: Optional[jnp.ndarray] = None,  # [B, Sk]
     block_q: int = 128,
     block_k: int = 256,
     interpret: bool = False,
@@ -219,6 +231,12 @@ def streaming_attention(
     group = H // KVH
 
     block_q, block_k = legal_attn_blocks(block_q, block_k, Sq, Sk, q.dtype)
+    has_segs = q_segment_ids is not None
+    if has_segs:
+        # Segment ids ride along as 2D [B, S] blocked inputs; their minor
+        # dim is the block size, so the Q block must be lane-rounded to keep
+        # the (1, block_q) tile legal (block_k is already a LANE multiple).
+        block_q = _round_up(block_q, LANE)
     n_q = pl.cdiv(Sq, block_q)
     n_k = pl.cdiv(Sk, block_k)
     sq_pad, sk_pad = n_q * block_q, n_k * block_k
@@ -279,6 +297,26 @@ def streaming_attention(
             pl.BlockSpec((1, 1, block_k), smap),
         ]
         args += [kst, vst]
+    if has_segs:
+        kv_seg = (
+            kv_segment_ids if kv_segment_ids is not None else q_segment_ids
+        )
+        qsegp = jnp.pad(
+            q_segment_ids.astype(jnp.int32), ((0, 0), (0, sq_pad - Sq)),
+            constant_values=-1,
+        )
+        ksegp = jnp.pad(
+            kv_seg.astype(jnp.int32), ((0, 0), (0, sk_pad - Sk)),
+            constant_values=-2,  # != q pad id: padded tails never match
+        )
+        in_specs += [
+            pl.BlockSpec((1, block_q), lambda b, h, iq, ikp, m, vl: (b, iq)),
+            pl.BlockSpec(
+                (1, block_k),
+                lambda b, h, iq, ikp, m, vl: (b, ikp % n_k if two_pass else ikp),
+            ),
+        ]
+        args += [qsegp, ksegp]
 
     kernel = functools.partial(
         _attn_kernel,
@@ -287,6 +325,7 @@ def streaming_attention(
         logit_softcap=logit_softcap,
         quant_bits=quant_bits,
         has_scales=has_scales,
+        has_segs=has_segs,
         block_q=block_q,
         block_k=block_k,
         n_k=n_k,

@@ -33,9 +33,17 @@ def flash_attention_ref(
     k_scale: Optional[jnp.ndarray] = None,  # [B, Sk, KVH] int8-KV dequant scales
     v_scale: Optional[jnp.ndarray] = None,
     kv_valid_len: Optional[jnp.ndarray] = None,  # [B] cache fill level
+    q_segment_ids: Optional[jnp.ndarray] = None,  # [B, Sq] packed-prefill ids
+    kv_segment_ids: Optional[jnp.ndarray] = None,  # [B, Sk]
 ) -> jnp.ndarray:
     """The single attention oracle: GQA, local windows, softcap, log-sqrt2
-    quantized softmax numerator (paper sections 3.2/4.3), int8 KV dequant."""
+    quantized softmax numerator (paper sections 3.2/4.3), int8 KV dequant.
+
+    ``q_segment_ids``/``kv_segment_ids`` (packed variable-length prefill,
+    DESIGN.md section 10): positions attend only where the ids are equal, so
+    N prompts concatenated in one batch row never see each other. Causality
+    and local windows then operate on *buffer* indices, which inside a
+    contiguous segment equal within-segment distances."""
     B, Sq, H, hd = q.shape
     Sk, KVH = k.shape[1], k.shape[2]
     G = H // KVH
@@ -68,6 +76,9 @@ def flash_attention_ref(
         ok &= kpos[None, None, :] <= qpos[:, :, None]
     if local_window > 0:
         ok &= qpos[:, :, None] - kpos[None, None, :] < local_window
+    if q_segment_ids is not None:
+        kv_seg = kv_segment_ids if kv_segment_ids is not None else q_segment_ids
+        ok &= q_segment_ids[:, :, None] == kv_seg[:, None, :]
     mask = ok[:, None, None]  # [B,1,1,Sq,Sk]
     if kv_valid_len is not None:
         valid = kpos[None, :] < kv_valid_len[:, None]  # [B, Sk]

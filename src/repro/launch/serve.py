@@ -24,6 +24,23 @@ from repro.serving.cluster import ServingCluster
 from repro.serving.engine import Request, ServeEngine
 
 
+def _print_padding_summary(counters: dict) -> None:
+    """Padding-waste + retrace line (DESIGN.md section 10): how much of
+    every dispatched prefill buffer was real prompt tokens, and whether any
+    serving-path compiles happened after warmup (must be 0)."""
+    real = counters.get("pack_real_tokens", 0)
+    pad = counters.get("pack_pad_tokens", 0)
+    if real + pad:
+        util = 100.0 * real / (real + pad)
+        print(f"prefill padding: real={real} pad={pad} "
+              f"({util:.1f}% buffer utilization, "
+              f"{counters.get('prefill_batches', 0)} dispatches)")
+    retr = counters.get("retraces", 0)
+    cxl = counters.get("cancelled", 0)
+    print(f"retraces after warmup: {retr}"
+          + (f", cancelled (deadline): {cxl}" if cxl else ""))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -102,6 +119,7 @@ def main() -> None:
         if agg["expert_tokens"]:
             occ = ", ".join(f"{x:.3f}" for x in agg["expert_occupancy"])
             print(f"expert occupancy (summed over replicas): [{occ}]")
+        _print_padding_summary(agg["counters"])
         return
 
     engine = ServeEngine(cfg, params, batch_slots=args.slots,
@@ -127,6 +145,7 @@ def main() -> None:
     if snap["expert_tokens"]:
         occ = ", ".join(f"{x:.3f}" for x in snap["expert_occupancy"])
         print(f"expert occupancy: [{occ}]")
+    _print_padding_summary(snap["counters"])
 
 
 if __name__ == "__main__":

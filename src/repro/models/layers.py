@@ -215,12 +215,19 @@ def attention_block(
     cache_index=None,  # scalar int32, decode fill position
     memory: Optional[jnp.ndarray] = None,  # cross-attention (enc-dec)
     memory_kv: Optional[tuple] = None,  # precomputed cross (k, v) [B,S,KVH,hd]
+    segment_ids: Optional[jnp.ndarray] = None,  # [B, S] packed prefill
     taps=None,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
     """Full MSA block: qkv proj -> rope -> streaming attention -> out proj.
 
     cache (decode): {"k": [B,Smax,KVH,hd] (int8 or fp), "v": ...,
     optional "k_scale"/"v_scale": [B,Smax,KVH]}.
+
+    segment_ids (packed prefill, DESIGN.md section 10): marks each buffer
+    position with its prompt id; attention is confined to equal ids. RoPE
+    still uses ``positions`` (within-segment), while causal/window masking
+    runs on buffer indices — equal to within-segment distances because
+    segments are contiguous.
     """
     from repro.kernels import ops  # lazy: avoids import cycle
 
@@ -281,6 +288,13 @@ def attention_block(
         else:
             k_q, v_q, k_s, v_s = k, v, None, None
 
+        if segment_ids is not None and ring:
+            raise NotImplementedError(
+                "packed prefill is incompatible with ring (sliding-window) "
+                "caches — the engine keeps the grouped admission path for "
+                "alternating local/global archs"
+            )
+
         if ring and S > 1:
             # prefill into a ring: keep the last `smax` entries, rotated so
             # entry for position p lands in slot p % smax
@@ -317,12 +331,23 @@ def attention_block(
             valid = jnp.broadcast_to(
                 jnp.minimum(idx + S, smax) if ring else idx + S, (B,)
             ).astype(jnp.int32)
+            kv_segs = None
+            if segment_ids is not None:
+                # cache rows beyond the packed region are masked by
+                # kv_valid_len; pad with a never-matching id for shape only
+                kv_segs = jnp.pad(
+                    segment_ids.astype(jnp.int32),
+                    ((0, 0), (0, smax - S)), constant_values=-2,
+                )
             out = ops.attention(
                 q, k_cache, v_cache,
                 causal=causal, q_offset=idx, quant_bits=quant_bits,
                 logit_softcap=a.logit_softcap,
                 local_window=0 if ring else local_window,
                 k_scale=ks, v_scale=vs, kv_valid_len=valid,
+                q_segment_ids=(None if segment_ids is None
+                               else segment_ids.astype(jnp.int32)),
+                kv_segment_ids=kv_segs,
             )
     else:
         out = ops.attention(
@@ -331,6 +356,8 @@ def attention_block(
             quant_bits=quant_bits,
             logit_softcap=a.logit_softcap,
             local_window=0 if is_cross else local_window,
+            q_segment_ids=(None if segment_ids is None or is_cross
+                           else segment_ids.astype(jnp.int32)),
         )
     from repro.core.quant.calibrate import maybe_record
 

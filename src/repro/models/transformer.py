@@ -215,7 +215,7 @@ def _moe_apply(x: jnp.ndarray, p: dict, cfg: ModelConfig, taps=None):
 
 
 def _block(x, p, cfg, *, positions, local_window, causal=True,
-           cache=None, cache_index=None, taps=None):
+           cache=None, cache_index=None, segment_ids=None, taps=None):
     """One transformer block; returns (x, aux_loss, expert_counts,
     new_cache)."""
     h = apply_norm(x, p["ln1"], cfg)
@@ -223,7 +223,8 @@ def _block(x, p, cfg, *, positions, local_window, causal=True,
     attn_out, new_cache = attention_block(
         h, p["attn"], cfg, cfg.attn,
         positions=positions, causal=causal, local_window=local_window,
-        cache=cache, cache_index=cache_index, taps=taps,
+        cache=cache, cache_index=cache_index, segment_ids=segment_ids,
+        taps=taps,
     )
     if cfg.post_block_norm:
         attn_out = apply_norm(attn_out, p["post_ln1"], cfg)
@@ -258,7 +259,7 @@ def _embed_inputs(params, cfg, tokens, frontend_embeds):
 
 
 def _run_layers(params, cfg, x, *, positions, caches=None, cache_index=None,
-                taps=None):
+                segment_ids=None, taps=None):
     """Scan over stacked layers.
 
     Returns (x, aux_total, expert_counts, new_caches); expert_counts is the
@@ -275,7 +276,8 @@ def _run_layers(params, cfg, x, *, positions, caches=None, cache_index=None,
             x, aux, ec, new_cache = _block(
                 x, layer_p, cfg,
                 positions=positions, local_window=local_window, causal=causal,
-                cache=cache, cache_index=cache_index, taps=None,
+                cache=cache, cache_index=cache_index,
+                segment_ids=segment_ids, taps=None,
             )
             carry = {"x": x, "aux": carry["aux"] + aux,
                      "ec": carry["ec"] + ec}
@@ -412,6 +414,39 @@ def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray,
         cache_index=jnp.zeros((), jnp.int32),
     )
     logits = logits_from_hidden(params, cfg, x[:, -1:, :])
+    return logits, new_caches
+
+
+def prefill_packed(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                   positions: jnp.ndarray, segment_ids: jnp.ndarray,
+                   last_idx: jnp.ndarray, max_len: Optional[int] = None):
+    """Continuous-batching prefill: N variable-length prompts packed into ONE
+    batch row (DESIGN.md section 10).
+
+    tokens       [1, P]  prompts concatenated back-to-back (+ pad tail)
+    positions    [P]     within-segment position of each buffer slot (RoPE)
+    segment_ids  [P]     prompt index per slot; pad tail carries -1
+    last_idx     [N]     buffer index of each prompt's final token
+
+    Attention is confined to equal segment ids; causality/local windows run
+    on buffer indices, which equal within-segment distances because segments
+    are contiguous. Returns (logits [N, V] — next-token logits per prompt —
+    and the packed cache [layers, 1, max_len, ...]); the caller scatters each
+    segment's K/V rows into its decode slot (``ServeEngine._admit``).
+    """
+    x = _embed_inputs(params, cfg, tokens, None)
+    B, S = x.shape[0], x.shape[1]
+    assert B == 1, "packed prefill uses a single batch row"
+    max_len = max_len or S
+    seg = segment_ids.reshape(B, S).astype(jnp.int32)
+    cache = init_cache(cfg, B, max_len, dtype=x.dtype)
+    x, aux, _, new_caches = _run_layers(
+        params, cfg, x, positions=positions.reshape(S).astype(jnp.int32),
+        caches=cache, cache_index=jnp.zeros((), jnp.int32),
+        segment_ids=seg,
+    )
+    h_last = jnp.take(x[0], last_idx.astype(jnp.int32), axis=0)  # [N, D]
+    logits = logits_from_hidden(params, cfg, h_last)
     return logits, new_caches
 
 

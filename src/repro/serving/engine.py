@@ -17,8 +17,10 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import queue
+import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -129,6 +131,17 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     )
 
 
+def _pow2_ladder(lo: int, hi: int) -> Tuple[int, ...]:
+    """Doubling ladder from lo up to (and always including) hi."""
+    lo, hi = max(1, int(lo)), max(1, int(hi))
+    out, b = [], lo
+    while b < hi:
+        out.append(b)
+        b *= 2
+    out.append(hi)
+    return tuple(sorted(set(out)))
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -138,6 +151,18 @@ class Request:
     # stamped by submit() (None = not yet admitted anywhere); drives the
     # latency metrics. A 0.0 stamp from a fake clock is a real stamp.
     submitted_at: Optional[float] = None
+    # QoS deadline in seconds after submit (None = unbounded). An expired
+    # request is dropped from the queue before prefill, or cancelled
+    # mid-generation (its decode slot frees on the next tick); both count
+    # in the engine's ``cancelled`` metric.
+    deadline: Optional[float] = None
+    # invoked by the retirement path once the request finishes (or is
+    # cancelled) — detokenize/response callbacks run here, OFF the decode
+    # tick when async retirement is on.
+    on_done: Optional[Callable[["Request"], None]] = None
+    # set by the retirement path when eos_id is produced; the decode loop
+    # observes it and frees the slot on its next tick
+    eos_seen: bool = dataclasses.field(default=False, repr=False)
 
 
 class ServeEngine:
@@ -169,7 +194,7 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  max_len: int = 512, max_pending: int = 0,
-                 mesh: Optional[Mesh] = None,
+                 mesh: Optional[Mesh] = None, eos_id: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic) -> None:
         assert cfg.family not in ("vit", "vit_moe"), "decoder families only"
         self.cfg = serving_config(cfg)
@@ -221,10 +246,61 @@ class ServeEngine:
         # copy), shardings fitted to the actual — possibly int8 — param tree
         shape = ShapeConfig("engine_decode", "decode",
                             seq_len=max_len, global_batch=batch_slots)
+        self._mesh_eff = mesh if mesh is not None else make_host_mesh()
         self._decode = build_serve_step(
-            cfg, shape, mesh if mesh is not None else make_host_mesh(),
+            cfg, shape, self._mesh_eff,
             params=params, with_stats=self._with_stats, rules=rules,
         )
+
+        # ---- continuous batching (DESIGN.md section 10) -------------------
+        self.serve = cfg.serve
+        self._eos_id = eos_id
+        # packed prefill needs the transformer-family prefill_packed entry
+        # and a non-ring cache layout; other archs (ssm/hybrid/alternating
+        # local-global) keep the grouped same-length admission path.
+        self._packed = bool(
+            self.serve.packed_prefill
+            and cfg.attn is not None
+            and not cfg.attn.alternate_local_global
+            and cfg.family in ("dense", "moe", "vlm")
+            and hasattr(self.mod, "prefill_packed")
+        )
+        self.max_prefill = int(self.serve.max_prefill or max_len)
+        self._buckets = _pow2_ladder(
+            min(self.serve.min_bucket, self.max_prefill), self.max_prefill)
+        self._nb_ladder = _pow2_ladder(1, batch_slots)
+        # AOT program cache: key -> compiled executable (see _program_key);
+        # warmup() pre-populates it so steady-state serving never traces
+        # (EngineMetrics "retraces" counts on-path compiles).
+        self._programs: Dict[str, Any] = {}
+        self._emitted = np.zeros(batch_slots, np.int64)  # tokens per slot
+        # async retirement: decode ticks push device token arrays here; the
+        # retirement thread materializes them (the only device->host sync),
+        # appends to Request.generated, and fires callbacks/metrics.
+        self._async = bool(self.serve.async_retire) and self._packed
+        self._rq: "queue.Queue" = queue.Queue()
+        self._rthread: Optional[threading.Thread] = None
+        self._mlock = threading.Lock()
+        if self._packed:
+            named = lambda tree: jax.tree.map(
+                lambda s: NamedSharding(self._mesh_eff, s), tree,
+                is_leaf=lambda x: isinstance(x, P))
+            self._repl_sh = NamedSharding(self._mesh_eff, P())
+            p_specs = fit_specs_to_tree(
+                param_specs(cfg, self._mesh_eff, rules=rules), self.params)
+            self._param_sh = named(p_specs)
+            in_tree = models.input_specs(cfg, shape)
+            c_specs = input_shardings(cfg, shape, self._mesh_eff,
+                                      in_tree)["cache"]
+            if self._ep:
+                c_specs = jax.tree.map(lambda _: P(), c_specs,
+                                       is_leaf=lambda x: isinstance(x, P))
+            self._cache_sh = named(c_specs)
+            self.cache = jax.device_put(self.cache, self._cache_sh)
+            # next-token feed: device-resident, written by the tick program
+            # itself (never synced on the decode path)
+            self._tok = jax.device_put(
+                jnp.zeros((batch_slots,), jnp.int32), self._repl_sh)
 
     # -- replica surface (serving/replica.py) --------------------------------
 
@@ -260,13 +336,210 @@ class ServeEngine:
 
     @property
     def idle(self) -> bool:
-        return not self.active and self.scheduler.depth == 0
+        """Nothing queued, in flight, or pending async retirement."""
+        return (not self.active and self.scheduler.depth == 0
+                and self._pending_retire() == 0)
 
     def reset_metrics(self) -> None:
         """Fresh ``EngineMetrics`` (cluster replica leave — the old one was
         folded into the retired accumulator)."""
         self.metrics = EngineMetrics(
             num_experts=self.metrics.expert_tokens.size, clock=self._clock)
+
+    # -- AOT program cache (DESIGN.md section 10) ----------------------------
+
+    def _program_key(self, prog: str, **kv) -> str:
+        """Compile-cache key, same ``name|k=v|...`` schema as the autotuner's
+        TuningTable entries (kernels/autotune.py) so a dumped serving state
+        reads as one namespace: ``serve/<prog>|B=..|S=..|...``."""
+        parts = [f"serve/{prog}", f"B={self.B}", f"S={self.max_len}"]
+        parts += [f"{k}={v}" for k, v in sorted(kv.items())]
+        return "|".join(parts)
+
+    def _compiled(self, key: str, build: Callable[[], Any],
+                  count_miss: bool = True):
+        """Fetch (or compile) the executable for ``key``. A miss on the
+        serving path increments ``retraces`` — after ``warmup()`` that
+        counter must stay at 0 (the continuous-batching acceptance bar)."""
+        exe = self._programs.get(key)
+        if exe is None:
+            if count_miss:
+                self.metrics.inc("retraces")
+            with self._scope():
+                exe = build()
+            self._programs[key] = exe
+        return exe
+
+    def _build_tick(self):
+        """AOT-compile the fused decode tick: embed last tokens, decode one
+        position per slot against the donated cache, argmax ON DEVICE so
+        the tick returns the next-token feed without a host sync."""
+        cfg, mod, with_stats = self.cfg, self.mod, self._with_stats
+
+        def tick(params, tok, cache, index):
+            out = mod.decode_step(params, cfg, tok[:, None], cache, index,
+                                  with_stats=True) if with_stats else \
+                mod.decode_step(params, cfg, tok[:, None], cache, index)
+            if with_stats:
+                logits, new_cache, stats = out
+            else:
+                logits, new_cache = out
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            if with_stats:
+                return nxt, new_cache, stats["expert_tokens"]
+            return nxt, new_cache
+
+        r = self._repl_sh
+        jitted = jax.jit(
+            tick,
+            in_shardings=(self._param_sh, r, self._cache_sh, r),
+            out_shardings=((r, self._cache_sh, r) if with_stats
+                           else (r, self._cache_sh)),
+            donate_argnums=(2,),
+        )
+        sds = jax.ShapeDtypeStruct
+        cache_sds = jax.tree.map(lambda x: sds(x.shape, x.dtype), self.cache)
+        return jitted.lower(
+            self.params, sds((self.B,), jnp.int32), cache_sds,
+            sds((self.B,), jnp.int32),
+        ).compile()
+
+    def _build_admit(self, bucket: int, nb: int):
+        """AOT-compile one packed-admission program: a single segment-masked
+        forward over ``[1, bucket]`` packed tokens, per-prompt first-token
+        argmax, and the scatter-merge of every segment's K/V rows into its
+        donated decode slot (the ``insert_partial`` analogue).
+
+        Dummy pack entries (prompt-count padded up the pow2 ladder) carry
+        ``len == 0``: their merge mask is all-false and their slot write in
+        the next-token feed drops, so they are exact no-ops."""
+        cfg, mod, B = self.cfg, self.mod, self.B
+        chunk = min(self.max_len, bucket)  # per-prompt merge window
+
+        def admit(params, tokens, positions, seg, last_idx, starts, lens,
+                  slots, cache, tok):
+            logits, part = mod.prefill_packed(
+                params, cfg, tokens, positions, seg, last_idx,
+                max_len=bucket)
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [nb]
+
+            def merge(full, p):
+                # full [L, B, Smax, ...]; p [L, 1, bucket, ...]
+                pr = p[:, 0]
+                out = full
+                for i in range(nb):
+                    # gather this segment's rows; writes are sequential so
+                    # duplicate dummy slots stay exact no-ops
+                    idx = jnp.clip(starts[i] + jnp.arange(chunk),
+                                   0, bucket - 1)
+                    rows = jnp.take(pr, idx, axis=1)[:, None]  # [L,1,chunk,..]
+                    at = (0, slots[i]) + (0,) * (out.ndim - 2)
+                    cur = jax.lax.dynamic_slice(
+                        out, at,
+                        (out.shape[0], 1, chunk) + out.shape[3:])
+                    keep = (jnp.arange(chunk) < lens[i]).reshape(
+                        (1, 1, chunk) + (1,) * (out.ndim - 3))
+                    out = jax.lax.dynamic_update_slice(
+                        out, jnp.where(keep, rows.astype(out.dtype), cur), at)
+                return out
+
+            new_cache = jax.tree.map(merge, cache, part)
+            # dummy entries route to index B -> dropped by mode="drop"
+            new_tok = tok.at[jnp.where(lens > 0, slots, B)].set(
+                first, mode="drop")
+            return first, new_cache, new_tok
+
+        r = self._repl_sh
+        jitted = jax.jit(
+            admit,
+            in_shardings=(self._param_sh, r, r, r, r, r, r, r,
+                          self._cache_sh, r),
+            out_shardings=(r, self._cache_sh, r),
+            donate_argnums=(8,),
+        )
+        sds = jax.ShapeDtypeStruct
+        i32 = jnp.int32
+        cache_sds = jax.tree.map(lambda x: sds(x.shape, x.dtype), self.cache)
+        return jitted.lower(
+            self.params, sds((1, bucket), i32), sds((bucket,), i32),
+            sds((bucket,), i32), sds((nb,), i32), sds((nb,), i32),
+            sds((nb,), i32), sds((nb,), i32), cache_sds, sds((B,), i32),
+        ).compile()
+
+    # -- async retirement ----------------------------------------------------
+
+    def _ensure_thread(self) -> None:
+        if self._rthread is None or not self._rthread.is_alive():
+            self._rthread = threading.Thread(
+                target=self._retire_loop, daemon=True,
+                name=f"retire-{id(self):x}")
+            self._rthread.start()
+
+    def _retire_loop(self) -> None:
+        while True:
+            ev = self._rq.get()
+            try:
+                self._consume(ev)
+            finally:
+                self._rq.task_done()
+
+    def _emit(self, ev: dict) -> None:
+        """Hand a retirement event to the consumer: the retirement thread
+        when async, inline otherwise (same code path, same ordering)."""
+        if self._async:
+            self._ensure_thread()
+            self._rq.put(ev)
+        else:
+            self._consume(ev)
+
+    def _consume(self, ev: dict) -> None:
+        """Retire one event: materialize the tick's token array (the only
+        device->host sync — off the decode tick when async), append to each
+        request's stream, check EOS, record completion metrics, and fire
+        ``on_done`` callbacks. ``ev["now"]`` is stamped by the decode loop,
+        so latency stays deterministic under fake clocks."""
+        tok = np.asarray(ev["tok"]) if ev.get("tok") is not None else None
+        with self._mlock:
+            for req, i in ev.get("append", ()):
+                if req.eos_seen:
+                    continue  # stream ended early; drop post-EOS tokens
+                t = int(tok[i])
+                req.generated.append(t)
+                if self._eos_id is not None and t == self._eos_id:
+                    req.eos_seen = True
+            if ev.get("stats") is not None:
+                self.metrics.add_expert_tokens(np.asarray(ev["stats"]))
+            for req, latency, cancelled in ev.get("retired", ()):
+                if cancelled:
+                    self.metrics.inc("cancelled")
+                else:
+                    self.metrics.inc("completed")
+                    self.metrics.request_latency.record(latency)
+                if req.on_done is not None:
+                    try:
+                        req.on_done(req)
+                    except Exception:
+                        self.metrics.inc("callback_errors")
+
+    def _pending_retire(self) -> int:
+        return self._rq.unfinished_tasks if self._async else 0
+
+    def _cancel_expired(self) -> None:
+        """Free decode slots whose request exceeded its deadline (QoS
+        cancellation) or whose stream already hit EOS (observed from the
+        retirement thread's flag, one tick behind the token)."""
+        if not self.active:
+            return
+        now = self._clock()
+        for slot in list(self.active):
+            req = self.active[slot]
+            expired = (req.deadline is not None
+                       and now - req.submitted_at > req.deadline)
+            if expired or req.eos_seen:
+                self.active.pop(slot)
+                self._emit({"now": now, "retired": [
+                    (req, now - req.submitted_at,
+                     bool(expired and not req.eos_seen))]})
 
     def _tune_trace(self) -> None:
         """Abstract (eval_shape — no compile, no device work) trace of the
@@ -291,10 +564,25 @@ class ServeEngine:
                     lambda p, t: self.mod.prefill(p, self.cfg, t,
                                                   max_len=self.max_len),
                     self.params, jnp.zeros((n, plen), jnp.int32))
+            if self._packed:
+                # packed buffers hit attention at [1, bucket] — collect
+                # every bucket's kernel shape keys before anything compiles
+                for bucket in self._buckets:
+                    jax.eval_shape(
+                        lambda p, t, pos, seg, li, b=bucket:
+                        self.mod.prefill_packed(p, self.cfg, t, pos, seg,
+                                                li, max_len=b),
+                        self.params, jnp.zeros((1, bucket), jnp.int32),
+                        jnp.zeros((bucket,), jnp.int32),
+                        jnp.zeros((bucket,), jnp.int32),
+                        jnp.zeros((self._nb_ladder[-1],), jnp.int32))
 
     def warmup(self) -> None:
         """Tune (once per device kind — later replicas are pure cache
-        hits), then compile the decode step outside the measured path. The
+        hits), then compile every serving program outside the measured
+        path. In packed mode this AOT-lowers and compiles the decode tick
+        plus every (prefill bucket x prompt-count) admission program, so
+        steady-state serving never traces (``retraces`` stays 0). The
         dummy tick writes K/V rows at the (empty) slots' positions;
         prefill overwrites a slot's full cache row at admission, so
         nothing leaks."""
@@ -302,6 +590,23 @@ class ServeEngine:
             from repro.kernels import autotune
 
             autotune.ensure_tuned(self.cfg.autotune, self._tune_trace)
+        if self._packed:
+            exe = self._compiled(self._program_key("decode"),
+                                 self._build_tick, count_miss=False)
+            if self.serve.aot_warmup:
+                for bucket in self._buckets:
+                    for nb in self._nb_ladder:
+                        self._compiled(
+                            self._program_key("packed_prefill",
+                                              bucket=bucket, n=nb),
+                            lambda b=bucket, n=nb: self._build_admit(b, n),
+                            count_miss=False)
+            index = jax.device_put(
+                jnp.asarray(self.pos, jnp.int32), self._repl_sh)
+            out = exe(self.params, self._tok, self.cache, index)
+            self._tok, self.cache = out[0], out[1]
+            jax.block_until_ready(jax.tree.leaves(self.cache)[0])
+            return
         tokens = jnp.zeros((self.B, 1), jnp.int32)
         index = jnp.asarray(self.pos, jnp.int32)
         with self._scope():
@@ -326,7 +631,90 @@ class ServeEngine:
         self.metrics.inc("submitted")
         self.metrics.observe_queue_depth(self.scheduler.depth)
 
+    def _drop_expired(self, items, now: float) -> List[Request]:
+        """Split polled requests into live ones; expired ones are retired
+        as cancelled without ever touching the device."""
+        live = []
+        for req in items:
+            if req.deadline is not None and \
+                    now - req.submitted_at > req.deadline:
+                self._emit({"now": now,
+                            "retired": [(req, now - req.submitted_at, True)]})
+            else:
+                live.append(req)
+        return live
+
     def _admit(self) -> None:
+        if self._packed:
+            self._admit_packed()
+        else:
+            self._admit_grouped()
+
+    def _admit_packed(self) -> None:
+        """Continuous-batching admission: the pack planner hands back the
+        maximal FIFO prefix of the queue that fits the token budget; the
+        prompts are concatenated into ONE ``[1, bucket]`` buffer (segment
+        ids + within-segment positions) and a single AOT-compiled program
+        runs the segment-masked forward, scatters each segment's K/V rows
+        into its decode slot, and writes first tokens into the device-side
+        next-token feed. Mixed lengths share one dispatch — the grouped
+        path needed one dispatch per distinct length."""
+        while True:
+            free = [s for s in range(self.B) if s not in self.active]
+            if not free:
+                return
+            plan = self.scheduler.poll_pack(
+                self.max_prefill, lambda r: len(r.prompt), limit=len(free))
+            if plan is None:
+                return
+            now = self._clock()
+            reqs = self._drop_expired(plan.items, now)
+            if not reqs:
+                continue
+            total = sum(len(r.prompt) for r in reqs)
+            bucket = next(b for b in self._buckets if b >= total)
+            nb = next(n for n in self._nb_ladder if n >= len(reqs))
+            tokens = np.zeros((1, bucket), np.int32)
+            positions = np.zeros(bucket, np.int32)
+            seg = np.full(bucket, -1, np.int32)
+            starts = np.zeros(nb, np.int32)
+            lens = np.zeros(nb, np.int32)
+            slots = np.zeros(nb, np.int32)
+            last_idx = np.zeros(nb, np.int32)
+            cursor = 0
+            taken = []
+            for i, req in enumerate(reqs):
+                n = len(req.prompt)
+                slot = free.pop(0)
+                tokens[0, cursor:cursor + n] = req.prompt
+                positions[cursor:cursor + n] = np.arange(n)
+                seg[cursor:cursor + n] = i
+                starts[i], lens[i], slots[i] = cursor, n, slot
+                last_idx[i] = cursor + n - 1
+                cursor += n
+                taken.append((slot, req))
+                self.metrics.queue_wait.record(
+                    max(0.0, now - req.submitted_at))
+            self.metrics.inc("prefill_batches")
+            self.metrics.inc("pack_real_tokens", total)
+            self.metrics.inc("pack_pad_tokens", bucket - total)
+            exe = self._compiled(
+                self._program_key("packed_prefill", bucket=bucket, n=nb),
+                lambda b=bucket, n=nb: self._build_admit(b, n))
+            put = lambda a: jax.device_put(jnp.asarray(a), self._repl_sh)
+            first, self.cache, self._tok = exe(
+                self.params, put(tokens), put(positions), put(seg),
+                put(last_idx), put(starts), put(lens), put(slots),
+                self.cache, self._tok)
+            append = []
+            for i, (slot, req) in enumerate(taken):
+                self.pos[slot] = lens[i]
+                self._emitted[slot] = 1
+                self.active[slot] = req
+                append.append((req, i))
+            self._emit({"tok": first, "now": now, "append": append})
+
+    def _admit_grouped(self) -> None:
         """Batch-parallel prefill admission: admit up to ``free_slots``
         prompts per tick; same-length prompts prefill as ONE batched
         forward (a [n, S] batch instead of n sequential [1, S] runs — the
@@ -343,7 +731,7 @@ class ServeEngine:
                 return
             now = self._clock()
             groups: Dict[int, List[Request]] = {}
-            for req in batch.items:
+            for req in self._drop_expired(batch.items, now):
                 groups.setdefault(len(req.prompt), []).append(req)
             for _, reqs in sorted(groups.items()):
                 slots = [free.pop(0) for _ in reqs]
@@ -373,9 +761,50 @@ class ServeEngine:
                     self.active[slot] = req
 
     def step(self) -> None:
-        """One engine tick: admit queued prompts, decode one token for every
-        active slot, retire finished sequences."""
+        """One engine tick: cancel expired requests, admit queued prompts,
+        decode one token for every active slot, retire finished
+        sequences."""
+        self._cancel_expired()
         self._admit()
+        if self._packed:
+            self._step_packed()
+        else:
+            self._step_grouped()
+
+    def _step_packed(self) -> None:
+        """The continuous-batching decode tick: zero host syncs. The input
+        token feed is the previous tick's on-device argmax; the output feed
+        and the per-slot stats histogram go to the retirement thread as
+        device arrays. Slot lifetime is host-deterministic (emission
+        counts), so slots free without reading token values."""
+        if not self.active:
+            return
+        exe = self._compiled(self._program_key("decode"), self._build_tick)
+        index = jax.device_put(jnp.asarray(self.pos, jnp.int32),
+                               self._repl_sh)
+        out = exe(self.params, self._tok, self.cache, index)
+        if self._with_stats:
+            nxt, self.cache, stats = out
+        else:
+            (nxt, self.cache), stats = out, None
+        self._tok = nxt
+        self.metrics.work_done(len(self.active), "tokens")
+        self.metrics.observe_queue_depth(self.scheduler.depth)
+        now = self._clock()
+        append, retired = [], []
+        for slot in list(self.active):
+            req = self.active[slot]
+            append.append((req, slot))
+            self._emitted[slot] += 1
+            self.pos[slot] += 1
+            if self._emitted[slot] >= req.max_new_tokens or \
+                    self.pos[slot] >= self.max_len - 1:
+                self.active.pop(slot)
+                retired.append((req, now - req.submitted_at, False))
+        self._emit({"tok": nxt, "now": now, "append": append,
+                    "retired": retired, "stats": stats})
+
+    def _step_grouped(self) -> None:
         if not self.active:
             return
         tokens = np.zeros((self.B, 1), np.int32)
@@ -397,21 +826,26 @@ class ServeEngine:
         done = []
         now = self._clock()
         for slot, req in self.active.items():
-            req.generated.append(int(nxt[slot]))
+            tok = int(nxt[slot])
+            req.generated.append(tok)
             self.pos[slot] += 1
             if len(req.generated) >= req.max_new_tokens or \
-                    self.pos[slot] >= self.max_len - 1:
+                    self.pos[slot] >= self.max_len - 1 or \
+                    (self._eos_id is not None and tok == self._eos_id):
                 done.append(slot)
         for slot in done:
             req = self.active.pop(slot)
-            self.metrics.inc("completed")
-            self.metrics.request_latency.record(now - req.submitted_at)
+            self._emit({"now": now,
+                        "retired": [(req, now - req.submitted_at, False)]})
 
     def flush(self, max_ticks: int = 10_000) -> None:
-        """Blocking drain: serve everything queued and in flight."""
+        """Blocking drain: serve everything queued and in flight, then wait
+        for the retirement thread to finish materializing token streams."""
         for _ in range(max_ticks):
-            if self.idle:
-                return
+            if not self.active and self.scheduler.depth == 0:
+                break
             self.step()
+        if self._async:
+            self._rq.join()
 
     run_until_drained = flush

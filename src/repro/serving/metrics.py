@@ -134,10 +134,21 @@ class EngineMetrics:
 
     Counter names in use (an engine touches the subset that applies):
       submitted / completed / rejected — request lifecycle
+      cancelled                       — QoS deadline drops (queued or mid-
+                                        generation; serving/engine.py)
       batches                         — device batches dispatched
+      prefill_batches                 — prefill dispatches (LM admission)
       frames                          — images completed (vision)
       padded_frames                   — pad rows added to fill a bucket
       tokens                          — decode tokens produced (LM)
+      pack_real_tokens                — prompt tokens in prefill dispatches
+      pack_pad_tokens                 — padding tokens in prefill dispatches
+                                        (LM pack buffer / vision pad ladder;
+                                        real+pad = dispatched buffer size)
+      retraces                        — serving-path program compiles after
+                                        construction; must stay 0 once
+                                        ``warmup()`` has run (DESIGN.md §10)
+      callback_errors                 — Request.on_done raised
     """
 
     def __init__(self, num_experts: int = 0,

@@ -42,6 +42,17 @@ class MicroBatch(NamedTuple):
     waited_s: float  # queue wait of the oldest item at formation time
 
 
+class PackPlan(NamedTuple):
+    """A packed-prefill plan: the maximal FIFO prefix of the queue whose
+    token lengths fit a budget (DESIGN.md section 10)."""
+
+    items: tuple  # requests in global FIFO order
+    lengths: tuple  # token length per item (same order)
+    total: int  # sum(lengths) — real tokens in the pack buffer
+    budget: int  # token budget the plan was formed against
+    waited_s: float  # queue wait of the oldest item at formation time
+
+
 class MicroBatcher:
     """Request queue with bucketed batch formation (see module docstring)."""
 
@@ -165,6 +176,73 @@ class MicroBatcher:
             del self._buckets[best[1]]
         return MicroBatch(key=best[1], items=items, pad_to=self._pad_to(n),
                           waited_s=waited)
+
+    def poll_pack(
+        self,
+        budget: int,
+        length_of: Callable[[Any], int],
+        now: Optional[float] = None,
+        limit: Optional[int] = None,
+    ) -> Optional[PackPlan]:
+        """Form a packed-prefill plan: the maximal *strict FIFO prefix* of
+        the queue (across buckets, in submission order) whose lengths sum to
+        at most ``budget`` tokens, capped at ``limit`` items.
+
+        Strict-prefix semantics are the starvation guarantee: formation
+        stops at the first request that does not fit, rather than skipping
+        it for smaller later ones — so a long prompt at the head is next no
+        matter what arrives behind it. A plan is *ready* when it cannot grow
+        (the next request does not fit, or ``limit`` is reached, or the
+        whole queue is in it and the deadline/drain says go); otherwise the
+        pack keeps coalescing until ``max_wait_s``.
+        """
+        if self._depth == 0:
+            return None
+        cap = self._depth if limit is None else int(limit)
+        if cap <= 0 or budget <= 0:
+            return None
+        now = self._clock() if now is None else now
+        entries = [e for q in self._buckets.values() for e in q]
+        entries.sort(key=lambda e: e[0])
+        head_len = length_of(entries[0][2])
+        if head_len > budget:
+            raise ValueError(
+                f"prompt of {head_len} tokens exceeds the pack budget "
+                f"({budget}) — raise max_prefill or reject at submit"
+            )
+        take, used = [], 0
+        for e in entries:
+            if len(take) >= cap:
+                break
+            n = length_of(e[2])
+            if used + n > budget:
+                break
+            take.append(e)
+            used += n
+        blocked = len(take) < len(entries)  # pack is full: cannot grow
+        ready = (
+            blocked
+            or self._draining
+            or (now - take[0][1]) >= self.max_wait_s
+        )
+        if not ready:
+            return None
+        taken = {e[0] for e in take}
+        for key in list(self._buckets):
+            q = self._buckets[key]
+            kept = deque(e for e in q if e[0] not in taken)
+            if kept:
+                self._buckets[key] = kept
+            else:
+                del self._buckets[key]
+        self._depth -= len(take)
+        return PackPlan(
+            items=tuple(e[2] for e in take),
+            lengths=tuple(length_of(e[2]) for e in take),
+            total=used,
+            budget=int(budget),
+            waited_s=max(0.0, now - take[0][1]),
+        )
 
     def _pad_to(self, n: int) -> int:
         """Smallest ladder size that fits n (n never exceeds max_batch)."""

@@ -288,6 +288,12 @@ class VisionEngine:
             self._inflight.append(_InFlight(reqs, batch.pad_to, out, t0))
             self.metrics.inc("batches")
             self.metrics.inc("padded_frames", batch.pad_to - len(reqs))
+            # padding-waste observability in *token* units, comparable with
+            # the LM engine's pack buffer counters (DESIGN.md section 10):
+            # every row carries n_patches patch tokens, pad rows included
+            self.metrics.inc("pack_real_tokens", len(reqs) * self.n_patches)
+            self.metrics.inc("pack_pad_tokens",
+                             (batch.pad_to - len(reqs)) * self.n_patches)
             self.metrics.observe_queue_depth(self.scheduler.depth)
 
     def _retire_one(self) -> None:

@@ -128,6 +128,33 @@ def test_attention_mixed_slot_offsets_and_fill_levels(rng):
         np.testing.assert_allclose(out_k[i:i+1], solo, atol=2e-5)
 
 
+@pytest.mark.parametrize("qb", [0, 4])
+def test_attention_segment_ids_packed_prefill(rng, qb):
+    """Packed prefill (DESIGN.md section 10): several prompts concatenated
+    into one batch row, attention confined to equal segment ids. Every
+    segment of the packed output must equal its own solo causal run —
+    contiguous segments make buffer-index causality equal within-segment
+    causality, so no cross-prompt leakage and no position skew."""
+    lens = [24, 40, 32]
+    S, H, KVH, hd = sum(lens), 4, 2, 32
+    q, k, v = _t(rng, 1, S, H, hd), _t(rng, 1, S, KVH, hd), _t(rng, 1, S, KVH, hd)
+    seg = jnp.asarray(np.repeat(np.arange(len(lens)), lens)[None], jnp.int32)
+    kw = dict(causal=True, quant_bits=qb,
+              q_segment_ids=seg, kv_segment_ids=seg)
+    out_k = streaming_attention(q, k, v, block_q=16, block_k=32,
+                                interpret=True, **kw)
+    out_r = ref.flash_attention_ref(q, k, v, **kw)
+    np.testing.assert_allclose(out_k, out_r, atol=2e-5, rtol=2e-5)
+    o = 0
+    for L in lens:
+        solo = ref.flash_attention_ref(
+            q[:, o:o+L], k[:, o:o+L], v[:, o:o+L],
+            causal=True, quant_bits=qb)
+        np.testing.assert_allclose(out_k[:, o:o+L], solo, atol=2e-5,
+                                   err_msg=f"segment at offset {o}")
+        o += L
+
+
 # ---------------------------------------------------------------------------
 # Unified sparse/dense grouped matmul
 # ---------------------------------------------------------------------------

@@ -110,6 +110,72 @@ def test_pad_ladder_and_limit():
     assert mb.poll() is None
 
 
+def test_pack_fills_fifo_prefix_to_budget():
+    """poll_pack takes the maximal FIFO prefix whose lengths fit the
+    budget — and stops at the first non-fitting request (strict prefix)."""
+    clk = FakeClock()
+    mb = MicroBatcher(batch_sizes=(8,), max_wait_s=100.0, clock=clk)
+    for L in (10, 20, 30, 5):
+        mb.submit(L)
+    plan = mb.poll_pack(budget=64, length_of=lambda x: x)
+    # 10+20+30 = 60 fits; 5 would too, but the pack is ready the moment it
+    # cannot grow with the NEXT item... here 60+5=65 > 64: blocked -> ready
+    assert plan is not None
+    assert plan.items == (10, 20, 30)
+    assert plan.total == 60 and plan.budget == 64
+    assert mb.depth == 1 and mb.pending_items() == [5]
+
+
+def test_pack_waits_for_deadline_then_flushes():
+    """An unblocked partial pack coalesces until max_wait, then releases
+    (deadline flush); drain releases it immediately."""
+    clk = FakeClock()
+    mb = MicroBatcher(batch_sizes=(8,), max_wait_s=1.0, clock=clk)
+    mb.submit(4)
+    mb.submit(4)
+    assert mb.poll_pack(budget=64, length_of=lambda x: x) is None, \
+        "pack can still grow and the deadline has not passed"
+    clk.advance(1.5)
+    plan = mb.poll_pack(budget=64, length_of=lambda x: x)
+    assert plan is not None and plan.items == (4, 4)
+    assert plan.waited_s == pytest.approx(1.5)
+    mb.submit(7)
+    mb.drain()
+    plan = mb.poll_pack(budget=64, length_of=lambda x: x)
+    assert plan is not None and plan.items == (7,)
+    mb.drain(False)
+
+
+def test_pack_long_prompt_never_starved():
+    """Strict-prefix formation: a long prompt at the head is next no matter
+    how many smaller prompts queue behind it (no skip-ahead starvation)."""
+    clk = FakeClock()
+    mb = MicroBatcher(batch_sizes=(8,), max_wait_s=0.0, clock=clk)
+    mb.submit(50)  # long head: fills most of the budget alone
+    for _ in range(6):
+        mb.submit(8)
+    plan = mb.poll_pack(budget=64, length_of=lambda x: x)
+    assert plan.items[0] == 50, "head must lead the pack"
+    assert plan.items == (50, 8)  # 50+8=58; +8 more would exceed 64
+    plan = mb.poll_pack(budget=64, length_of=lambda x: x)
+    assert plan.items == (8,) * 5
+
+
+def test_pack_item_limit_and_oversized_head():
+    clk = FakeClock()
+    mb = MicroBatcher(batch_sizes=(8,), max_wait_s=0.0, clock=clk)
+    for _ in range(5):
+        mb.submit(4)
+    plan = mb.poll_pack(budget=64, length_of=lambda x: x, limit=2)
+    assert plan is not None and plan.items == (4, 4), \
+        "limit caps pack size (engine passes its free decode slots)"
+    mb.submit(100)
+    for _ in range(3):  # clear the short ones first
+        mb.poll_pack(budget=64, length_of=lambda x: x, limit=1)
+    with pytest.raises(ValueError, match="exceeds the pack budget"):
+        mb.poll_pack(budget=64, length_of=lambda x: x)
+
+
 def test_oldest_wait_and_depth_tracking():
     clk = FakeClock()
     mb = MicroBatcher(batch_sizes=(4,), max_wait_s=100.0, clock=clk)

@@ -83,9 +83,11 @@ def test_continuous_batching_ragged_slots():
 
 
 def test_batched_prefill_single_dispatch_and_parity():
-    """Same-length prompts admitted together prefill as ONE batched
-    forward (not n sequential single-prompt runs) and still reproduce the
-    solo-run generations exactly."""
+    """Prompts admitted together prefill as ONE packed dispatch (not n
+    sequential single-prompt runs) and still reproduce the solo-run
+    generations exactly. The packed path must be in use (the grouped
+    per-length ``prefill`` entry is never called) and the padding-waste
+    counters must account for every buffer slot."""
     cfg = smoke_config("llama3-8b").replace(remat=False)
     params = M.init_model_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(11)
@@ -107,11 +109,16 @@ def test_batched_prefill_single_dispatch_and_parity():
             return self._mod.prefill(params_, cfg_, toks, **kw)
 
     eng.mod = SpyMod(eng.mod)
+    assert eng._packed, "transformer family must take the packed path"
     for i, p in enumerate(prompts):
         eng.submit(Request(uid=i, prompt=p, max_new_tokens=3))
     eng.run_until_drained()
-    assert calls == [(4, 6)], calls  # one batched prefill, all four rows
+    assert calls == [], "grouped prefill must not run in packed mode"
     assert eng.metrics.counters["prefill_batches"] == 1
+    c = eng.metrics.counters
+    assert c["pack_real_tokens"] == 24  # 4 prompts x 6 tokens, one dispatch
+    total = c["pack_real_tokens"] + c["pack_pad_tokens"]
+    assert total in eng._buckets, (total, eng._buckets)
     for i in range(4):
         assert _last_generated(eng, i)[:3] == solo[i], f"request {i}"
 
