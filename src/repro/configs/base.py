@@ -164,6 +164,7 @@ class ContinuousBatchingConfig:
 
     packed_prefill: bool = True
     # token budget of one packed prefill dispatch; 0 = the engine max_len
+    # (must not exceed max_len — ServeEngine validates at construction)
     max_prefill: int = 0
     # smallest pack-buffer bucket (ladder doubles from here to max_prefill)
     min_bucket: int = 32

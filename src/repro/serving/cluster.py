@@ -318,7 +318,13 @@ class ServingCluster:
             if batch is None:
                 break
             target = min(open_engines, key=lambda e: e.load)
-            target.submit(batch.items[0])
+            try:
+                target.submit(batch.items[0])
+            except ValueError:
+                # unservable request (e.g. prompt longer than the engine's
+                # cache): the replica counted it in `rejected`; drop it
+                # instead of letting one bad request crash the route pump
+                self.metrics.inc("cluster_rejected")
         self.metrics.observe_queue_depth(self._front.depth)
 
     def step(self) -> None:

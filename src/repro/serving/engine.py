@@ -266,6 +266,18 @@ class ServeEngine:
             and hasattr(self.mod, "prefill_packed")
         )
         self.max_prefill = int(self.serve.max_prefill or max_len)
+        if self.max_prefill > max_len:
+            raise ValueError(
+                f"serve.max_prefill={self.max_prefill} exceeds the K/V "
+                f"cache length (max_len={max_len}): pack buckets beyond "
+                "the cache would silently truncate merged rows")
+        # longest admissible prompt: it must fit one pack dispatch AND
+        # leave a free cache row for its first decode tick — a prompt
+        # filling the whole cache would decode at index max_len, clamping
+        # onto (and corrupting) its last prompt row before the post-tick
+        # bound check retires it
+        self._prompt_limit = (min(self.max_prefill, max_len - 1)
+                              if self._packed else max_len - 1)
         self._buckets = _pow2_ladder(
             min(self.serve.min_bucket, self.max_prefill), self.max_prefill)
         self._nb_ladder = _pow2_ladder(1, batch_slots)
@@ -480,6 +492,12 @@ class ServeEngine:
             ev = self._rq.get()
             try:
                 self._consume(ev)
+            except Exception:
+                # a poisoned event must not kill the retirement thread —
+                # its death would strand every later event's tokens and
+                # completion metrics; this event's own payload is lost,
+                # which the counter makes visible
+                self.metrics.inc("retire_errors")
             finally:
                 self._rq.task_done()
 
@@ -615,6 +633,15 @@ class ServeEngine:
         jax.block_until_ready(jax.tree.leaves(self.cache)[0])
 
     def submit(self, req: Request) -> None:
+        if len(req.prompt) > self._prompt_limit:
+            # reject unservable prompts HERE: an oversized request that
+            # reached the queue head would raise from poll_pack on every
+            # tick without ever being dequeued, wedging the replica
+            self.metrics.inc("rejected")
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens exceeds this engine's "
+                f"limit of {self._prompt_limit} (max_prefill="
+                f"{self.max_prefill}, max_len={self.max_len})")
         req.generated = []
         if req.submitted_at is None:  # cluster front-end may have stamped it
             req.submitted_at = self._clock()

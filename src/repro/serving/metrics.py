@@ -17,6 +17,7 @@ mean of the p99s).
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence
@@ -55,10 +56,16 @@ class LatencyTracker:
     the complete population and percentiles are exact. Beyond that the
     fixed log-bin histogram (which never evicts) answers percentile
     queries, so long-running and *merged* trackers stay correct.
+
+    Thread-safe: the engine's retirement thread records completions while
+    the main thread records queue waits and the cluster reads snapshots.
+    ``lock`` lets ``EngineMetrics`` share ONE reentrant lock across its
+    trackers and counters so a snapshot never tears across fields.
     """
 
-    def __init__(self, maxlen: int = 8192) -> None:
+    def __init__(self, maxlen: int = 8192, lock=None) -> None:
         self._maxlen = maxlen
+        self._lock = lock if lock is not None else threading.RLock()
         self._samples: deque = deque(maxlen=maxlen)
         self._hist = np.zeros(_BIN_EDGES.size + 1, np.int64)
         self._total = 0
@@ -67,11 +74,12 @@ class LatencyTracker:
 
     def record(self, seconds: float) -> None:
         s = float(seconds)
-        self._samples.append(s)
-        self._hist[np.searchsorted(_BIN_EDGES, s, side="right")] += 1
-        self._total += 1
-        self._sum += s
-        self._max = max(self._max, s)
+        with self._lock:
+            self._samples.append(s)
+            self._hist[np.searchsorted(_BIN_EDGES, s, side="right")] += 1
+            self._total += 1
+            self._sum += s
+            self._max = max(self._max, s)
 
     def __len__(self) -> int:
         return self._total
@@ -84,13 +92,21 @@ class LatencyTracker:
     def merge(self, other: "LatencyTracker") -> None:
         """Fold another tracker's distribution into this one (cluster
         roll-up). Histograms add; samples pool while both sides are
-        complete, after which the histogram carries the percentiles."""
-        self._hist += other._hist
-        self._total += other._total
-        self._sum += other._sum
-        self._max = max(self._max, other._max)
-        for s in other._samples:
-            self._samples.append(s)
+        complete, after which the histogram carries the percentiles.
+        The source is copied under its own lock (a live replica keeps
+        recording during a roll-up), then folded in under ours —
+        sequential, never nested, so two-way merges cannot deadlock."""
+        with other._lock:
+            hist = other._hist.copy()
+            total, ssum, smax = other._total, other._sum, other._max
+            samples = list(other._samples)
+        with self._lock:
+            self._hist += hist
+            self._total += total
+            self._sum += ssum
+            self._max = max(self._max, smax)
+            for s in samples:
+                self._samples.append(s)
 
     @classmethod
     def merged(cls, trackers: Sequence["LatencyTracker"],
@@ -107,26 +123,28 @@ class LatencyTracker:
     def percentile(self, p: float) -> float:
         """p-th percentile in seconds (nan when empty). Exact while the
         sample reservoir is complete; histogram-interpolated after."""
-        if self._total == 0:
-            return float("nan")
-        if self.exact and len(self._samples) == self._total:
-            return float(np.percentile(np.asarray(self._samples), p))
-        return self._hist_percentile(p)
+        with self._lock:
+            if self._total == 0:
+                return float("nan")
+            if self.exact and len(self._samples) == self._total:
+                return float(np.percentile(np.asarray(self._samples), p))
+            return self._hist_percentile(p)
 
     def snapshot(self) -> Dict[str, float]:
         """Milliseconds, the unit the paper's latency tables use."""
-        if self._total == 0:
-            return {"n": 0, "p50": float("nan"), "p95": float("nan"),
-                    "p99": float("nan"), "mean": float("nan"),
-                    "max": float("nan")}
-        return {
-            "n": int(self._total),
-            "p50": self.percentile(50) * 1e3,
-            "p95": self.percentile(95) * 1e3,
-            "p99": self.percentile(99) * 1e3,
-            "mean": (self._sum / self._total) * 1e3,
-            "max": self._max * 1e3,
-        }
+        with self._lock:
+            if self._total == 0:
+                return {"n": 0, "p50": float("nan"), "p95": float("nan"),
+                        "p99": float("nan"), "mean": float("nan"),
+                        "max": float("nan")}
+            return {
+                "n": int(self._total),
+                "p50": self.percentile(50) * 1e3,
+                "p95": self.percentile(95) * 1e3,
+                "p99": self.percentile(99) * 1e3,
+                "mean": (self._sum / self._total) * 1e3,
+                "max": self._max * 1e3,
+            }
 
 
 class EngineMetrics:
@@ -149,17 +167,26 @@ class EngineMetrics:
                                         construction; must stay 0 once
                                         ``warmup()`` has run (DESIGN.md §10)
       callback_errors                 — Request.on_done raised
+      retire_errors                   — retirement events whose processing
+                                        raised (event payload lost; the
+                                        retirement thread itself survives)
+
+    Thread-safe: async retirement mutates completion counters and latency
+    trackers from the retirement thread while the decode loop writes
+    dispatch counters and the cluster reads ``snapshot()``; one shared
+    reentrant lock covers the counters and all three trackers.
     """
 
     def __init__(self, num_experts: int = 0,
                  clock: Callable[[], float] = time.monotonic) -> None:
         self._clock = clock
+        self._lock = threading.RLock()
         self.counters: Dict[str, int] = {}
-        self.request_latency = LatencyTracker()
-        self.batch_latency = LatencyTracker()
+        self.request_latency = LatencyTracker(lock=self._lock)
+        self.batch_latency = LatencyTracker(lock=self._lock)
         # admission-queue wait, stamped when a request leaves the queue
         # (LM: before its prefill starts; vision: at batch dispatch)
-        self.queue_wait = LatencyTracker()
+        self.queue_wait = LatencyTracker(lock=self._lock)
         self.expert_tokens = np.zeros(max(0, num_experts), np.int64)
         self._depth_sum = 0
         self._depth_max = 0
@@ -171,29 +198,34 @@ class EngineMetrics:
     # -- feeding ------------------------------------------------------------
 
     def inc(self, name: str, n: int = 1) -> None:
-        self.counters[name] = self.counters.get(name, 0) + n
-        if name == "submitted" and self._first_t is None:
-            self._first_t = self._clock()  # FPS window opens at first arrival
+        with self._lock:
+            self.counters[name] = self.counters.get(name, 0) + n
+            if name == "submitted" and self._first_t is None:
+                # FPS window opens at first arrival
+                self._first_t = self._clock()
 
     def observe_queue_depth(self, depth: int) -> None:
-        self._depth_sum += depth
-        self._depth_max = max(self._depth_max, depth)
-        self._depth_last = depth
-        self._depth_n += 1
+        with self._lock:
+            self._depth_sum += depth
+            self._depth_max = max(self._depth_max, depth)
+            self._depth_last = depth
+            self._depth_n += 1
 
     def add_expert_tokens(self, counts) -> None:
         """Accumulate a routed-token histogram (host array, [num_experts])."""
         a = np.asarray(counts, np.int64)
-        if a.size and self.expert_tokens.size == a.size:
-            self.expert_tokens += a
+        with self._lock:
+            if a.size and self.expert_tokens.size == a.size:
+                self.expert_tokens += a
 
     def work_done(self, n: int, unit: str = "frames") -> None:
         """Mark n units (frames/tokens) complete; drives the FPS window."""
-        self.inc(unit, n)
-        now = self._clock()
-        if self._first_t is None:
-            self._first_t = now
-        self._last_t = now
+        with self._lock:
+            self.inc(unit, n)
+            now = self._clock()
+            if self._first_t is None:
+                self._first_t = now
+            self._last_t = now
 
     # -- readout ------------------------------------------------------------
 
@@ -222,6 +254,10 @@ class EngineMetrics:
 
     def snapshot(self) -> dict:
         """The metrics schema (DESIGN.md section 6)."""
+        with self._lock:
+            return self._snapshot_locked()
+
+    def _snapshot_locked(self) -> dict:
         return {
             "counters": dict(self.counters),
             "fps": self.fps,
@@ -393,7 +429,8 @@ class ClusterMetrics:
         autoscaler difference two snapshots into a *windowed* percentile."""
         h = self._ret_request._hist.copy()
         for m in self._replicas:
-            h = h + m.request_latency._hist
+            with m.request_latency._lock:
+                h = h + m.request_latency._hist
         return h
 
     def snapshot(self) -> dict:

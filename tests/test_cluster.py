@@ -252,6 +252,31 @@ def test_lm_engine_free_room_counts_decode_slots(moe_lm_trees):
     assert eng.idle and eng.free_room == 5
 
 
+def test_lm_cluster_drops_unservable_prompt(moe_lm_trees):
+    """A prompt no replica can ever serve (here == the replica cache
+    length) is rejected at the replica's submit and dropped by the route
+    pump — counted in both rejection counters — instead of crashing
+    ``step()`` or wedging the front queue; admissible traffic behind it
+    still completes."""
+    cfg, params, _ = moe_lm_trees
+    cluster = ServingCluster(cfg, params, replicas=1, engine="lm",
+                             batch_slots=2, max_len=16)
+    rng = np.random.default_rng(21)
+    bad = Request(uid=0, prompt=rng.integers(0, cfg.vocab_size, 16)
+                  .astype(np.int32), max_new_tokens=2)
+    ok = Request(uid=1, prompt=rng.integers(0, cfg.vocab_size, 5)
+                 .astype(np.int32), max_new_tokens=2)
+    cluster.submit(bad)
+    cluster.submit(ok)
+    cluster.flush()
+    assert ok.generated is not None and len(ok.generated) == 2
+    assert bad.generated is None, "unservable prompt must never prefill"
+    counters = cluster.metrics.snapshot()["aggregate"]["counters"]
+    assert counters["rejected"] == 1
+    assert counters["cluster_rejected"] == 1
+    assert counters["completed"] == 1
+
+
 @requires_devices(8)
 def test_lm_cluster_ep_replica_end_to_end(moe_lm_trees):
     """DP x EP for the LM family: one ServeEngine replica spanning all

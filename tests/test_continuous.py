@@ -1,7 +1,9 @@
 """Continuous-batching serving path (DESIGN.md section 10): packed-prefill
 parity with solo runs (fp32, int8 fake-quant, EP on 8 fake devices), AOT
-warmup (zero retraces in steady state), and QoS deadline cancellation."""
+warmup (zero retraces in steady state), QoS deadline cancellation, and the
+admission-safety contract (unservable prompts rejected at submit)."""
 import dataclasses
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +14,7 @@ import repro.models as M
 from repro.configs import smoke_config
 from repro.serving.cluster import replica_meshes
 from repro.serving.engine import Request, ServeEngine
+from repro.serving.metrics import EngineMetrics
 
 from conftest import requires_devices
 
@@ -208,3 +211,84 @@ def test_eos_frees_slot_early():
     assert req.generated == ref[:3], "stream must end AT the eos token"
     assert eng.metrics.counters["completed"] == 1
     assert eng.metrics.counters.get("cancelled", 0) == 0
+
+
+def test_submit_rejects_unservable_prompts():
+    """A prompt that can never be served — here exactly max_len tokens,
+    which would leave no cache row for its first decode tick — is rejected
+    AT SUBMIT (counted in ``rejected``) instead of reaching the queue head
+    and wedging the pack planner; the engine keeps serving admissible
+    requests, including one of the maximal length max_len - 1."""
+    cfg = smoke_config("llama3-8b").replace(remat=False)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=32)
+    rng = np.random.default_rng(0)
+    bad = Request(uid=0, prompt=rng.integers(0, cfg.vocab_size, 32)
+                  .astype(np.int32), max_new_tokens=2)
+    with pytest.raises(ValueError, match="exceeds this engine's limit"):
+        eng.submit(bad)
+    assert eng.metrics.counters["rejected"] == 1
+    assert eng.scheduler.depth == 0, "rejected request must never queue"
+    ok = Request(uid=1, prompt=rng.integers(0, cfg.vocab_size, 31)
+                 .astype(np.int32), max_new_tokens=2)
+    eng.submit(ok)
+    eng.run_until_drained()
+    assert ok.generated is not None and len(ok.generated) == 2
+    assert eng.metrics.counters["completed"] == 1
+
+
+def test_max_prefill_beyond_cache_is_a_config_error():
+    """serve.max_prefill larger than the K/V cache would silently truncate
+    merged rows; the engine must refuse the configuration loudly."""
+    cfg = smoke_config("llama3-8b").replace(remat=False)
+    cfg = cfg.replace(serve=dataclasses.replace(cfg.serve, max_prefill=64))
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="max_prefill"):
+        ServeEngine(cfg, params, batch_slots=2, max_len=32)
+
+
+def test_retirement_thread_survives_poisoned_event():
+    """One malformed retirement event must not kill the retirement daemon:
+    the error is counted in ``retire_errors`` and every later stream still
+    retires normally."""
+    cfg = smoke_config("llama3-8b").replace(remat=False)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=32)
+    assert eng._async, "async retirement must engage for this family"
+    eng._emit({"tok": None, "append": [(object(), 0)]})  # poisoned payload
+    rng = np.random.default_rng(2)
+    req = Request(uid=0, prompt=rng.integers(0, cfg.vocab_size, 5)
+                  .astype(np.int32), max_new_tokens=3)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert req.generated is not None and len(req.generated) == 3
+    assert eng.metrics.counters["retire_errors"] == 1
+    assert eng.metrics.counters["completed"] == 1
+
+
+def test_engine_metrics_concurrent_mutation_is_exact():
+    """Retirement-thread metric writes race the decode loop's: counter
+    increments and latency records from N threads must all land (the shared
+    lock closes the read-modify-write races) and snapshot() must not tear."""
+    m = EngineMetrics(num_experts=4)
+    errs = []
+
+    def hammer():
+        try:
+            for _ in range(500):
+                m.inc("completed")
+                m.request_latency.record(1e-3)
+                m.add_expert_tokens([1, 0, 1, 0])
+                m.snapshot()
+        except Exception as e:  # pragma: no cover - failure path
+            errs.append(e)
+
+    threads = [threading.Thread(target=hammer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert m.counters["completed"] == 8 * 500
+    assert m.request_latency.snapshot()["n"] == 8 * 500
+    assert m.expert_tokens.tolist() == [4000, 0, 4000, 0]
