@@ -1,0 +1,263 @@
+"""Tracing-overhead benchmark for the serving observability layer
+(DESIGN.md section 11) — writes ``BENCH_trace.json``.
+
+Measures the closed-loop packed continuous-batching workload three ways on
+the SAME engine configuration, best-of-``--repeats`` each:
+
+  off    — ``TraceConfig.enable = False`` (the default): every
+           instrumentation site is one ``tracer.enabled`` attribute read.
+  on     — full tracing: per-request span timelines into the flight
+           recorder + per-program step-time histograms.
+  off2   — tracing disabled again. The off/off2 spread is the measurement
+           noise floor, which is what "~zero overhead compiled out" means
+           operationally: the disabled path is indistinguishable from not
+           having the layer at all.
+
+The acceptance bound (``--bound``, default 2%) applies to the traced run
+against the best disabled run. The traced engine's artifacts are then
+checked structurally — the exported Chrome trace validates, every completed
+request's timeline is non-overlapping/ordered and its service phases sum to
+the recorded end-to-end latency, per-bucket step histograms appear in the
+snapshot — and a deadline + reject pass exercises the event log so the
+JSONL artifact is non-trivial.
+
+  PYTHONPATH=src python benchmarks/serve_trace_overhead.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def _mixed_lengths(n: int, lo: int, hi: int) -> list:
+    return [int(x) for x in np.linspace(lo, hi, n).round()]
+
+
+def _requests(cfg, lengths, new_tokens, seed=0, uid0=0):
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(seed)
+    return [
+        Request(uid=uid0 + i,
+                prompt=rng.integers(0, cfg.vocab_size, L).astype(np.int32),
+                max_new_tokens=new_tokens)
+        for i, L in enumerate(lengths)
+    ]
+
+
+def _serve_once(engine, reqs) -> float:
+    """One timed closed-loop pass; returns wall seconds."""
+    t0 = time.perf_counter()
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_drained()
+    dt = time.perf_counter() - t0
+    assert all(len(r.generated) == r.max_new_tokens for r in reqs)
+    return dt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_trace.json")
+    ap.add_argument("--trace-out", default="serve_trace.json",
+                    help="Perfetto/Chrome trace artifact from the traced run")
+    ap.add_argument("--events-out", default="serve_events.jsonl",
+                    help="structured event-log artifact (JSONL)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="closed-loop requests (0 = batch_slots x 6)")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=12,
+                    help="interleaved rounds; best-of per variant")
+    ap.add_argument("--bound", type=float, default=0.02,
+                    help="max tolerated traced-run throughput overhead")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+
+    import repro.models as M
+    from repro.configs import get_config, smoke_config
+    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.events import EventLog, read_jsonl
+    from repro.serving.trace import (
+        request_timelines,
+        validate_chrome_trace,
+        validate_request_timelines,
+        write_chrome_trace,
+    )
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = cfg.replace(remat=False)
+    if cfg.attn is None:
+        raise SystemExit(f"{args.arch}: the packed workload needs an "
+                         "attention family")
+    traced_cfg = cfg.replace(trace=dataclasses.replace(cfg.trace,
+                                                       enable=True))
+    params = M.init_model_params(cfg, jax.random.PRNGKey(args.seed))
+    n = args.requests or args.slots * 6
+    lo, hi = 8, max(10, args.max_len // 4)
+    lengths = _mixed_lengths(n, lo, hi)
+    uid0 = [0]
+
+    def make():
+        # fresh uids per pass: uid doubles as the trace id, and a reused id
+        # would splice two requests into one (invalid) timeline
+        reqs = _requests(cfg, lengths, args.new_tokens, seed=args.seed,
+                         uid0=uid0[0])
+        uid0[0] += len(lengths)
+        return reqs
+
+    print(f"arch={cfg.name} devices={jax.device_count()} requests={n} "
+          f"new_tokens={args.new_tokens} repeats={args.repeats}")
+
+    # all three engines up front; the timed passes are then interleaved
+    # round-robin so machine drift lands on every variant equally and
+    # best-of-``repeats`` compares like with like
+    engines = {name: ServeEngine(rcfg, params, batch_slots=args.slots,
+                                 max_len=args.max_len)
+               for name, rcfg in (("off", cfg), ("on", traced_cfg),
+                                  ("off2", cfg))}
+    for name, eng in engines.items():
+        assert eng._packed, "packed path must engage for this family"
+        assert eng.tracer.enabled == (name == "on")
+        eng.warmup()
+        for r in make():  # untimed pass: residual compiles land here
+            eng.submit(r)
+        eng.run_until_drained()
+
+    toks = n * args.new_tokens
+    dts = {name: [] for name in engines}
+    order = list(engines)
+    for r in range(args.repeats):
+        # rotate the in-round order so systematic position effects (cache
+        # warmth, thermal ramp) spread over all variants equally
+        for name in order[r % 3:] + order[:r % 3]:
+            dts[name].append(_serve_once(engines[name], make()))
+    runs = {name: {"tok_s": toks / min(ds), "wall_s": min(ds),
+                   "tokens": toks}
+            for name, ds in dts.items()}
+    for name, r in runs.items():
+        print(f"  {name:>5s}: {r['tok_s']:8.1f} tok/s "
+              f"({r['wall_s'] * 1e3:.0f} ms)")
+    traced_engine = engines["on"]
+
+    # round-paired ratios: within one round the three passes run
+    # back-to-back, so machine drift cancels; the median across rounds
+    # rejects outlier rounds. The off/off2 ratio is the noise floor — the
+    # spread between two IDENTICAL configurations — which is what "~zero
+    # overhead compiled out" means operationally for the disabled path.
+    overhead_on = float(np.median(
+        [on / (0.5 * (a + b)) for on, a, b
+         in zip(dts["on"], dts["off"], dts["off2"])])) - 1.0
+    overhead_off = abs(float(np.median(
+        [a / b for a, b in zip(dts["off"], dts["off2"])])) - 1.0)
+    # the noise floor is what this environment can resolve: the traced run
+    # must sit within `bound` of the baseline BEYOND that floor, so a
+    # thrashing shared runner widens the tolerance instead of flaking
+    effective_bound = args.bound + overhead_off
+    print(f"  overhead: traced {100 * overhead_on:+.2f}% "
+          f"(noise floor {100 * overhead_off:.2f}%, bound "
+          f"{100 * args.bound:.0f}% + floor)")
+
+    # -- artifact + structural checks on the traced engine -------------------
+    # a small extra pass exercises the event paths (deadline cancellation,
+    # unservable reject) so the JSONL artifact carries real decisions
+    events = EventLog(path=args.events_out)
+    traced_engine.events = events
+    extra = _requests(cfg, lengths[:4], args.new_tokens, seed=args.seed + 1,
+                      uid0=10_000)
+    extra[0].deadline = 0.0  # expires in queue -> cancel event
+    for r in extra:
+        traced_engine.submit(r)
+    try:
+        traced_engine.submit(Request(
+            uid=99_999,
+            prompt=np.zeros(args.max_len + 64, np.int32),
+            max_new_tokens=1))
+    except ValueError:
+        pass  # expected: unservable -> reject event
+    traced_engine.run_until_drained()
+    events.close()
+
+    spans = traced_engine.tracer.recorder.spans()
+    doc = write_chrome_trace(args.trace_out, traced_engine.tracer)
+    n_events = validate_chrome_trace(doc)
+    n_timelines = validate_request_timelines(spans)
+    # service phases (everything but retire) must sum to the recorded
+    # end-to-end latency — the retire span carries it as an attribute
+    sums_ok, checked = True, 0
+    for tid, tl in request_timelines(spans).items():
+        ret = [s for s in tl if s.name == "retire"]
+        if not ret or ret[0].attrs is None \
+                or "latency_s" not in ret[0].attrs:
+            continue  # still open / cancelled before admission
+        service = sum(s.dur for s in tl if s.name != "retire")
+        if abs(service - ret[0].attrs["latency_s"]) > 1e-6:
+            sums_ok = False
+        checked += 1
+    snap = traced_engine.metrics.snapshot()
+    step_keys = list(snap["step_latency_ms"])
+    ev_rows = read_jsonl(args.events_out)
+    ev_types = {e["type"] for e in ev_rows}
+
+    checks = {
+        "overhead_within_bound": overhead_on <= effective_bound,
+        "trace_valid": n_events > 0,
+        "timelines_valid": n_timelines > 0,
+        "spans_sum_to_latency": sums_ok and checked > 0,
+        "step_hists_present": any("decode" in k for k in step_keys)
+        and any("packed_prefill" in k for k in step_keys),
+        "events_recorded": {"cancel", "reject"} <= ev_types,
+        "open_spans_drained": traced_engine.tracer.open_count() == 0,
+    }
+    for name, ok in checks.items():
+        print(f"  [{'ok' if ok else 'MISS'}] {name}")
+    print(f"  trace: {args.trace_out} ({n_events} events, "
+          f"{n_timelines} request timelines, {checked} latency-checked); "
+          f"events: {args.events_out} ({len(ev_rows)} rows: "
+          f"{sorted(ev_types)})")
+
+    report = {
+        "meta": {
+            "bench": "serve_trace_overhead",
+            "mode": "smoke" if args.smoke else "full",
+            "arch": cfg.name,
+            "devices": jax.device_count(),
+            "requests": n,
+            "new_tokens": args.new_tokens,
+            "repeats": args.repeats,
+            "bound": args.bound,
+        },
+        "runs": runs,
+        "overhead": {"traced": overhead_on, "noise_floor": overhead_off,
+                     "effective_bound": effective_bound},
+        "trace": {
+            "chrome_events": n_events,
+            "request_timelines": n_timelines,
+            "latency_checked": checked,
+            "spans_recorded": traced_engine.tracer.recorder.total,
+            "spans_dropped": traced_engine.tracer.recorder.dropped,
+            "step_keys": step_keys,
+        },
+        "events": {"rows": len(ev_rows), "types": sorted(ev_types)},
+        "checks": checks,
+        "fps": runs["on"]["tok_s"],
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+    if not all(checks.values()):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -151,6 +151,32 @@ class AutoscaleConfig:
 
 
 @dataclass(frozen=True)
+class TraceConfig:
+    """Serving-stack tracing/profiling knobs (serving/trace.py,
+    DESIGN.md section 11).
+
+    With ``enable`` off (the default) engines hold the no-op
+    ``NULL_TRACER`` and every instrumentation site reduces to one boolean
+    attribute read — the disabled-path overhead contract the trace-overhead
+    benchmark measures. With it on, every request gets a typed span
+    timeline (queue/pack/prefill/decode/retire) in a bounded flight
+    recorder, and the engines record per-program step wall times keyed by
+    the section-10 AOT program key into ``EngineMetrics`` histograms."""
+
+    enable: bool = False
+    # flight-recorder ring capacity in spans; the oldest spans evict first
+    # (recorder.dropped counts them)
+    capacity: int = 65536
+    # per-program step-latency histograms (decode tick + packed-prefill
+    # dispatch, keyed serve/<prog>|B=..|S=..|... — the per-bucket step
+    # latency signal the ROADMAP autotuner-drift item reads)
+    step_times: bool = True
+    # wrap kernels/ops.py grouped_matmul/attention in jax.named_scope so
+    # device profiles (jax.profiler) carry kernel-level names
+    annotate_kernels: bool = False
+
+
+@dataclass(frozen=True)
 class ContinuousBatchingConfig:
     """Continuous-batching knobs for ``ServeEngine`` (DESIGN.md section 10).
 
@@ -211,6 +237,8 @@ class ModelConfig:
     # continuous-batching serving path (serving/engine.py; DESIGN.md §10)
     serve: ContinuousBatchingConfig = field(
         default_factory=ContinuousBatchingConfig)
+    # serving tracing/profiling (serving/trace.py; DESIGN.md §11)
+    trace: TraceConfig = field(default_factory=TraceConfig)
     dtype: str = "bfloat16"
     # training knobs
     remat: bool = True

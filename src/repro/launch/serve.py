@@ -9,10 +9,19 @@ Multi-replica LM cluster (engine-agnostic front-end, DESIGN.md section 8):
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
       --requests 16 --replicas 2
+
+Observability (DESIGN.md section 11): ``--trace-out`` writes a Chrome-trace
+/Perfetto JSON of the run's span timelines (and enables tracing),
+``--events-out`` streams the structured decision/event JSONL, and
+``--metrics-out`` writes the Prometheus text rendering of the final
+cluster snapshot. Both serving paths report through the same
+``ClusterMetrics.snapshot()`` so every tracked counter appears in one
+consistent summary.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -22,6 +31,46 @@ from repro import models
 from repro.configs import get_config, smoke_config
 from repro.serving.cluster import ServingCluster
 from repro.serving.engine import Request, ServeEngine
+from repro.serving.events import EventLog
+from repro.serving.metrics import ClusterMetrics
+from repro.serving.trace import write_chrome_trace
+
+
+def _fmt_ms(d: dict) -> str:
+    if d["n"] == 0:
+        return "n=0"
+    return (f"n={d['n']} p50={d['p50']:.2f}ms p95={d['p95']:.2f}ms "
+            f"p99={d['p99']:.2f}ms max={d['max']:.2f}ms")
+
+
+def _print_report(snap: dict) -> None:
+    """One consistent final summary off a ``ClusterMetrics.snapshot()`` —
+    every counter the engines track is surfaced here, nothing hand-picked."""
+    agg = snap["aggregate"]
+    print(f"aggregate: fps={agg['fps']:.1f} "
+          f"replicas_active={snap['replicas_active']}")
+    print("  latency: " + _fmt_ms(agg["latency_ms"]))
+    print("  queue_wait: " + _fmt_ms(agg["queue_wait_ms"]))
+    if agg["batch_latency_ms"]["n"]:
+        print("  batch_latency: " + _fmt_ms(agg["batch_latency_ms"]))
+    counters = agg["counters"]
+    if counters:
+        body = " ".join(f"{k}={v}" for k, v in sorted(counters.items()))
+        print(f"  counters: {body}")
+    for key, d in agg["step_latency_ms"].items():
+        print(f"  step {key}: " + _fmt_ms(d))
+    depth = agg["front_queue_depth"]
+    if depth["max"]:
+        print(f"  front_queue_depth: mean={depth['mean']:.2f} "
+              f"max={depth['max']}")
+    if agg["expert_tokens"]:
+        occ = ", ".join(f"{x:.3f}" for x in agg["expert_occupancy"])
+        print(f"  expert occupancy: [{occ}]")
+    _print_padding_summary(counters)
+    for i, rep in enumerate(snap["replicas"]):
+        print(f"  replica {i}: tokens={rep['counters'].get('tokens', 0)} "
+              f"completed={rep['counters'].get('completed', 0)} "
+              f"p50={rep['latency_ms']['p50']:.0f}ms")
 
 
 def _print_padding_summary(counters: dict) -> None:
@@ -32,12 +81,12 @@ def _print_padding_summary(counters: dict) -> None:
     pad = counters.get("pack_pad_tokens", 0)
     if real + pad:
         util = 100.0 * real / (real + pad)
-        print(f"prefill padding: real={real} pad={pad} "
+        print(f"  prefill padding: real={real} pad={pad} "
               f"({util:.1f}% buffer utilization, "
               f"{counters.get('prefill_batches', 0)} dispatches)")
     retr = counters.get("retraces", 0)
     cxl = counters.get("cancelled", 0)
-    print(f"retraces after warmup: {retr}"
+    print(f"  retraces after warmup: {retr}"
           + (f", cancelled (deadline): {cxl}" if cxl else ""))
 
 
@@ -62,19 +111,27 @@ def main() -> None:
     ap.add_argument("--autotune-cache", default=None,
                     help="tuning-table cache dir (default .repro_autotune "
                          "or $REPRO_AUTOTUNE_CACHE)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace/Perfetto JSON of the run's "
+                         "span timelines here (implies tracing on)")
+    ap.add_argument("--events-out", default=None,
+                    help="stream structured serving events (rejections, "
+                         "cancellations, retirement faults) as JSONL here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final cluster snapshot as Prometheus "
+                         "text exposition here")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.quantized:
-        import dataclasses
-
         cfg = cfg.replace(quant=dataclasses.replace(cfg.quant, enable=True))
     if args.autotune:
-        import dataclasses
-
         cfg = cfg.replace(autotune=dataclasses.replace(
             cfg.autotune, enable=True, cache_dir=args.autotune_cache))
+    if args.trace_out:
+        cfg = cfg.replace(trace=dataclasses.replace(cfg.trace, enable=True))
+    events = EventLog(path=args.events_out) if args.events_out else None
     params = models.init_model_params(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
     reqs = [
@@ -90,7 +147,7 @@ def main() -> None:
     if args.replicas >= 2:
         cluster = ServingCluster(cfg, params, replicas=args.replicas,
                                  engine="lm", batch_slots=args.slots,
-                                 max_len=args.max_len)
+                                 max_len=args.max_len, events=events)
         cluster.warmup()
         if args.autotune:
             from repro.kernels import autotune
@@ -106,46 +163,43 @@ def main() -> None:
         print(f"generated {total} tokens in {dt:.2f}s "
               f"({total / dt:.1f} tok/s, replicas={cluster.num_replicas}, "
               f"quantized={args.quantized})")
-        snap = cluster.metrics.snapshot()
-        agg = snap["aggregate"]
-        print(f"aggregate: tokens/s={agg['fps']:.1f} "
-              f"latency p50={agg['latency_ms']['p50']:.0f}ms "
-              f"p99={agg['latency_ms']['p99']:.0f}ms "
-              f"queue_wait p95={agg['queue_wait_ms']['p95']:.1f}ms")
-        for i, rep in enumerate(snap["replicas"]):
-            print(f"  replica {i}: tokens={rep['counters'].get('tokens', 0)} "
-                  f"completed={rep['counters'].get('completed', 0)} "
-                  f"p50={rep['latency_ms']['p50']:.0f}ms")
-        if agg["expert_tokens"]:
-            occ = ", ".join(f"{x:.3f}" for x in agg["expert_occupancy"])
-            print(f"expert occupancy (summed over replicas): [{occ}]")
-        _print_padding_summary(agg["counters"])
-        return
+        cm = cluster.metrics
+        recorders = cluster.flight_recorders()
+    else:
+        engine = ServeEngine(cfg, params, batch_slots=args.slots,
+                             max_len=args.max_len, events=events)
+        engine.warmup()
+        if args.autotune:
+            from repro.kernels import autotune
 
-    engine = ServeEngine(cfg, params, batch_slots=args.slots,
-                         max_len=args.max_len)
-    engine.warmup()
-    if args.autotune:
-        from repro.kernels import autotune
+            print(autotune.summary())
+        for r in reqs:
+            engine.submit(r)
+        t0 = time.perf_counter()
+        engine.run_until_drained()
+        dt = time.perf_counter() - t0
+        total = args.requests * args.new_tokens
+        print(f"generated {total} tokens in {dt:.2f}s "
+              f"({total / dt:.1f} tok/s, quantized={args.quantized})")
+        # the single-engine path reports through the same ClusterMetrics
+        # roll-up as the cluster path: one summary schema, every counter
+        cm = ClusterMetrics([engine.metrics])
+        recorders = ({engine.tracer.label: engine.tracer.recorder}
+                     if engine.tracer.enabled else {})
 
-        print(autotune.summary())
-    for r in reqs:
-        engine.submit(r)
-    t0 = time.perf_counter()
-    engine.run_until_drained()
-    dt = time.perf_counter() - t0
-    total = args.requests * args.new_tokens
-    print(f"generated {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s, quantized={args.quantized})")
-    snap = engine.metrics.snapshot()
-    print(f"metrics: tokens/s={snap['fps']:.1f} "
-          f"latency p50={snap['latency_ms']['p50']:.0f}ms "
-          f"p99={snap['latency_ms']['p99']:.0f}ms "
-          f"queue_depth max={snap['queue_depth']['max']}")
-    if snap["expert_tokens"]:
-        occ = ", ".join(f"{x:.3f}" for x in snap["expert_occupancy"])
-        print(f"expert occupancy: [{occ}]")
-    _print_padding_summary(snap["counters"])
+    _print_report(cm.snapshot())
+    if args.trace_out:
+        doc = write_chrome_trace(args.trace_out, recorders)
+        print(f"trace: {args.trace_out} "
+              f"({sum(1 for e in doc['traceEvents'] if e['ph'] == 'X')} "
+              f"spans)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(cm.export_prometheus())
+        print(f"metrics: {args.metrics_out}")
+    if events is not None:
+        events.close()
+        print(f"events: {args.events_out} ({events.total} events)")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 from repro.serving.autoscaler import Autoscaler
 from repro.serving.cluster import ServingCluster, replica_meshes
 from repro.serving.engine import Request, ServeEngine, build_serve_step
+from repro.serving.events import EventLog, read_jsonl
 from repro.serving.metrics import (
     ClusterMetrics,
     EngineMetrics,
@@ -9,6 +10,16 @@ from repro.serving.metrics import (
 )
 from repro.serving.replica import EngineReplica
 from repro.serving.scheduler import Backpressure, MicroBatch, MicroBatcher
+from repro.serving.trace import (
+    FlightRecorder,
+    Span,
+    Tracer,
+    chrome_trace,
+    make_tracer,
+    validate_chrome_trace,
+    validate_request_timelines,
+    write_chrome_trace,
+)
 from repro.serving.vision import VisionEngine, VisionRequest, synth_requests
 
 __all__ = [
@@ -17,16 +28,26 @@ __all__ = [
     "ClusterMetrics",
     "EngineMetrics",
     "EngineReplica",
+    "EventLog",
+    "FlightRecorder",
     "LatencyTracker",
     "MicroBatch",
     "MicroBatcher",
     "Request",
     "ServeEngine",
     "ServingCluster",
+    "Span",
+    "Tracer",
     "VisionEngine",
     "VisionRequest",
     "build_serve_step",
+    "chrome_trace",
     "hist_percentile",
+    "make_tracer",
+    "read_jsonl",
     "replica_meshes",
     "synth_requests",
+    "validate_chrome_trace",
+    "validate_request_timelines",
+    "write_chrome_trace",
 ]

@@ -47,16 +47,26 @@ import numpy as np
 
 from repro.configs.base import AutoscaleConfig
 from repro.serving.cluster import ServingCluster
+from repro.serving.events import EventLog
 from repro.serving.metrics import hist_percentile
 
 
 class Autoscaler:
-    """Hysteretic target-range controller over a ``ServingCluster``."""
+    """Hysteretic target-range controller over a ``ServingCluster``.
+
+    ``event_log`` (defaults to the cluster's ``EventLog``, when it has one)
+    receives one ``scale_up`` / ``scale_down`` record per decision carrying
+    the controller inputs that triggered it — the decision journal DESIGN.md
+    section 11 specifies, answering "why did the cluster scale here" from
+    the artifact alone."""
 
     def __init__(self, cluster: ServingCluster,
-                 policy: Optional[AutoscaleConfig] = None) -> None:
+                 policy: Optional[AutoscaleConfig] = None,
+                 event_log: Optional[EventLog] = None) -> None:
         self.cluster = cluster
         self.policy = policy or AutoscaleConfig()
+        self.event_log = (event_log if event_log is not None
+                          else getattr(cluster, "events", None))
         self._up_streak = 0
         self._down_streak = 0
         self._cooldown = 0
@@ -123,17 +133,34 @@ class Autoscaler:
             return None
         if (self._up_streak >= p.up_patience and n < p.max_replicas
                 and c.scale_up()):
+            self._log_decision("scale_up", n, depth, p95, slo_breach)
             self._up_streak = 0
             self._cooldown = p.cooldown
             self.events.append((c.clock(), "up", c.num_replicas))
             return "up"
         if (self._down_streak >= p.down_patience and n > p.min_replicas
                 and c.scale_down()):
+            self._log_decision("scale_down", n, depth, p95, slo_breach)
             self._down_streak = 0
             self._cooldown = p.cooldown
             self.events.append((c.clock(), "down", c.num_replicas))
             return "down"
         return None
+
+    def _log_decision(self, action: str, n_before: int, depth: int,
+                      p95: float, slo_breach: bool) -> None:
+        """Journal one scale decision with the controller inputs that
+        produced it (streaks still hold their pre-reset values here)."""
+        if self.event_log is None:
+            return
+        c, p = self.cluster, self.policy
+        self.event_log.emit(
+            action, t=c.clock(),
+            replicas_before=n_before, replicas_after=c.num_replicas,
+            depth=depth, total_load=c.total_load,
+            p95_ms=None if math.isnan(p95) else p95,
+            slo_p95_ms=p.slo_p95_ms, slo_breach=slo_breach,
+            up_streak=self._up_streak, down_streak=self._down_streak)
 
     def state(self) -> dict:
         """Controller observability snapshot (the benchmark's trace rows)."""

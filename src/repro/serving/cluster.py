@@ -44,15 +44,17 @@ averaged), per-expert occupancy summed across replicas.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, List, Optional, Sequence, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.serving.events import EventLog
 from repro.serving.metrics import ClusterMetrics
 from repro.serving.replica import EngineReplica
 from repro.serving.scheduler import MicroBatcher
+from repro.serving.trace import FlightRecorder, write_chrome_trace
 
 EngineFactory = Callable[[Any], EngineReplica]  # mesh -> replica
 
@@ -99,6 +101,7 @@ class ServingCluster:
         # shared admission bounds
         max_pending: int = 4096,
         max_pending_per_replica: int = 64,
+        events: Optional[EventLog] = None,
         clock: Callable[[], float] = time.monotonic,
     ) -> None:
         devices = list(devices if devices is not None else jax.devices())
@@ -111,6 +114,15 @@ class ServingCluster:
             # single replica spanning every device
             replicas = 1 if ep else len(devices)
         self._clock = clock
+        # observability: the shared event log (autoscaler decisions land
+        # here too) and the cluster-global trace-id counter — uids are
+        # caller-chosen and may collide across clients, trace ids may not
+        self.events = events
+        self._next_trace_id = 0
+        self._replica_seq = 0
+        # id(engine) -> stable "replicaN" name; kept cluster-side so event
+        # records name untraced replicas too (a tracer only mirrors it)
+        self._labels: Dict[int, str] = {}
         self._factory = self._resolve_factory(
             cfg, params, engine,
             batch_buckets=batch_buckets, max_wait_s=max_wait_s,
@@ -121,8 +133,13 @@ class ServingCluster:
         self.meshes = self._build_meshes(replicas + standby)
         self._next_mesh_i = replicas + standby
         built = [self._factory(mesh) for mesh in self.meshes]
+        for e in built:
+            self._label_replica(e)
         self.engines: List[EngineReplica] = built[:replicas]  # routable
         self._standby: List[EngineReplica] = built[replicas:]  # warm pool
+        self._tracing = any(
+            getattr(e, "tracer", None) is not None
+            and e.tracer.enabled for e in built)
         self._draining: List[EngineReplica] = []  # no admission, still ticked
         # admission front-end: FIFO + global backpressure + drain; routing
         # pulls single requests (batch formation happens per replica, where
@@ -147,6 +164,7 @@ class ServingCluster:
                 raise ValueError("engine factory required when cfg is None")
             engine = "vision" if cfg.family in ("vit", "vit_moe") else "lm"
         clock = self._clock
+        events = self.events
         if engine == "vision":
             from repro.serving.vision import VisionEngine
 
@@ -154,17 +172,31 @@ class ServingCluster:
                 cfg, params,
                 batch_buckets=batch_buckets, max_wait_s=max_wait_s,
                 max_pending=max_pending_per_replica, top_k=top_k,
-                max_inflight=max_inflight, mesh=mesh, clock=clock,
+                max_inflight=max_inflight, mesh=mesh, events=events,
+                clock=clock,
             )
         if engine == "lm":
             from repro.serving.engine import ServeEngine
 
             return lambda mesh: ServeEngine(
                 cfg, params, batch_slots=batch_slots, max_len=max_len,
-                max_pending=max_pending_per_replica, mesh=mesh, clock=clock,
+                max_pending=max_pending_per_replica, mesh=mesh,
+                events=events, clock=clock,
             )
         raise ValueError(
             f"engine must be 'vision', 'lm', or a factory: {engine!r}")
+
+    def _label_replica(self, eng) -> None:
+        """Stable replica name, mirrored onto the engine's tracer when it
+        has one — the process track in the Perfetto export. Custom factories
+        without a tracer attr are fine (EngineReplica does not require
+        one); event records still carry the cluster-side name."""
+        label = f"replica{self._replica_seq}"
+        self._replica_seq += 1
+        self._labels[id(eng)] = label
+        tr = getattr(eng, "tracer", None)
+        if tr is not None and tr.enabled:
+            tr.label = label
 
     def _build_meshes(self, n: int) -> List[jax.sharding.Mesh]:
         meshes = replica_meshes(n, self._devices)
@@ -254,6 +286,7 @@ class ServingCluster:
             eng = self._standby.pop(0)
         else:
             eng = self._factory(self._next_mesh())
+            self._label_replica(eng)
             eng.warmup()
         self.engines.append(eng)
         self.metrics.add_replica(eng.metrics)
@@ -285,6 +318,12 @@ class ServingCluster:
                 self.metrics.remove_replica(e.metrics)
                 e.reset_metrics()
                 self._standby.append(e)
+                if self.events is not None:
+                    self.events.emit(
+                        "replica_drained",
+                        replica=self._labels.get(id(e)),
+                        active=len(self.engines),
+                        standby=len(self._standby))
             else:
                 still.append(e)
         self._draining = still
@@ -297,10 +336,18 @@ class ServingCluster:
         client-observed percentiles include front-end queue wait, not just
         time on the replica that eventually served the request."""
         req.submitted_at = self._clock()
+        if self._tracing and getattr(req, "trace_id", None) is None:
+            req.trace_id = self._next_trace_id
+            self._next_trace_id += 1
         try:
             self._front.submit(req)
         except Exception:
             self.metrics.inc("cluster_rejected")
+            if self.events is not None:
+                self.events.emit("cluster_reject",
+                                 uid=getattr(req, "uid", None),
+                                 reason="backpressure",
+                                 depth=self._front.depth)
             raise
         self.metrics.inc("cluster_submitted")
 
@@ -325,6 +372,11 @@ class ServingCluster:
                 # cache): the replica counted it in `rejected`; drop it
                 # instead of letting one bad request crash the route pump
                 self.metrics.inc("cluster_rejected")
+                if self.events is not None:
+                    self.events.emit(
+                        "cluster_reject",
+                        uid=getattr(batch.items[0], "uid", None),
+                        reason="unservable")
         self.metrics.observe_queue_depth(self._front.depth)
 
     def step(self) -> None:
@@ -337,6 +389,25 @@ class ServingCluster:
             e.step()
         if self._draining:
             self._reap_drained()
+
+    # -- observability export (DESIGN.md section 11) -------------------------
+
+    def flight_recorders(self) -> Dict[str, FlightRecorder]:
+        """Every tracing replica's flight recorder keyed by its stable
+        label — active, draining, and standby alike (a drained replica's
+        recorder still holds the spans it served)."""
+        out: Dict[str, FlightRecorder] = {}
+        for e in self.engines + self._draining + self._standby:
+            tr = getattr(e, "tracer", None)
+            if tr is not None and tr.enabled:
+                out[tr.label] = tr.recorder
+        return out
+
+    def export_trace(self, path: str, t0: Optional[float] = None,
+                     t1: Optional[float] = None) -> dict:
+        """Write the cluster-wide Chrome-trace/Perfetto JSON (one process
+        track per replica) and return the document."""
+        return write_chrome_trace(path, self.flight_recorders(), t0, t1)
 
     def warmup(self) -> None:
         """Compile every program on every replica — active and standby (a

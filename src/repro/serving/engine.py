@@ -38,8 +38,10 @@ from repro.distributed.sharding_rules import (
     param_specs,
 )
 from repro.launch.mesh import make_host_mesh
+from repro.serving.events import EventLog
 from repro.serving.metrics import EngineMetrics
 from repro.serving.scheduler import MicroBatcher
+from repro.serving.trace import make_tracer
 
 
 def serving_config(cfg: ModelConfig) -> ModelConfig:
@@ -163,6 +165,10 @@ class Request:
     # set by the retirement path when eos_id is produced; the decode loop
     # observes it and frees the slot on its next tick
     eos_seen: bool = dataclasses.field(default=False, repr=False)
+    # span-timeline identity (serving/trace.py). The cluster front-end
+    # assigns a globally unique id at submit; a standalone engine falls
+    # back to ``uid``. None with tracing off — requests pay nothing.
+    trace_id: Optional[int] = None
 
 
 class ServeEngine:
@@ -195,11 +201,18 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  max_len: int = 512, max_pending: int = 0,
                  mesh: Optional[Mesh] = None, eos_id: Optional[int] = None,
+                 events: Optional[EventLog] = None,
                  clock: Callable[[], float] = time.monotonic) -> None:
         assert cfg.family not in ("vit", "vit_moe"), "decoder families only"
         self.cfg = serving_config(cfg)
         cfg = self.cfg
         self.params = params
+        # observability (DESIGN.md section 11): NULL_TRACER when
+        # cfg.trace.enable is off — every site below guards on
+        # ``self.tracer.enabled`` so the disabled path is one attr read
+        self.tracer = make_tracer(cfg.trace, clock=clock)
+        self.events = events
+        self._step_times = self.tracer.enabled and cfg.trace.step_times
         self.mod = models.module_for(cfg)
         self.B = batch_slots
         self.max_len = max_len
@@ -492,12 +505,14 @@ class ServeEngine:
             ev = self._rq.get()
             try:
                 self._consume(ev)
-            except Exception:
+            except Exception as e:
                 # a poisoned event must not kill the retirement thread —
                 # its death would strand every later event's tokens and
                 # completion metrics; this event's own payload is lost,
                 # which the counter makes visible
                 self.metrics.inc("retire_errors")
+                if self.events is not None:
+                    self.events.emit("retire_error", error=repr(e))
             finally:
                 self._rq.task_done()
 
@@ -536,8 +551,18 @@ class ServeEngine:
                 if req.on_done is not None:
                     try:
                         req.on_done(req)
-                    except Exception:
+                    except Exception as e:
                         self.metrics.inc("callback_errors")
+                        if self.events is not None:
+                            self.events.emit("callback_error",
+                                             uid=getattr(req, "uid", None),
+                                             error=repr(e))
+                if self.tracer.enabled:
+                    # close the retire span the decode loop opened; it
+                    # extends past the recorded latency by design (token
+                    # materialization + callbacks are off the latency path)
+                    self.tracer.end(getattr(req, "trace_id", None), "retire",
+                                    latency_s=latency, cancelled=cancelled)
 
     def _pending_retire(self) -> int:
         return self._rq.unfinished_tasks if self._async else 0
@@ -555,9 +580,17 @@ class ServeEngine:
                        and now - req.submitted_at > req.deadline)
             if expired or req.eos_seen:
                 self.active.pop(slot)
+                cancelled = bool(expired and not req.eos_seen)
+                if self.tracer.enabled:
+                    self.tracer.transition(req.trace_id, "decode", "retire",
+                                           t=now)
+                if self.events is not None and cancelled:
+                    self.events.emit("cancel", t=now, uid=req.uid,
+                                     where="mid_generation",
+                                     waited_s=now - req.submitted_at,
+                                     deadline_s=req.deadline)
                 self._emit({"now": now, "retired": [
-                    (req, now - req.submitted_at,
-                     bool(expired and not req.eos_seen))]})
+                    (req, now - req.submitted_at, cancelled)]})
 
     def _tune_trace(self) -> None:
         """Abstract (eval_shape — no compile, no device work) trace of the
@@ -638,6 +671,10 @@ class ServeEngine:
             # reached the queue head would raise from poll_pack on every
             # tick without ever being dequeued, wedging the replica
             self.metrics.inc("rejected")
+            if self.events is not None:
+                self.events.emit("reject", uid=req.uid, reason="unservable",
+                                 prompt_len=len(req.prompt),
+                                 limit=self._prompt_limit)
             raise ValueError(
                 f"prompt of {len(req.prompt)} tokens exceeds this engine's "
                 f"limit of {self._prompt_limit} (max_prefill="
@@ -654,8 +691,16 @@ class ServeEngine:
             self.scheduler.submit(req)  # raises Backpressure when full
         except Exception:
             self.metrics.inc("rejected")
+            if self.events is not None:
+                self.events.emit("reject", uid=req.uid,
+                                 reason="backpressure",
+                                 depth=self.scheduler.depth)
             raise
         self.metrics.inc("submitted")
+        if self.tracer.enabled:
+            if req.trace_id is None:  # cluster assigns; standalone uses uid
+                req.trace_id = req.uid
+            self.tracer.begin(req.trace_id, "queue", t=req.submitted_at)
         self.metrics.observe_queue_depth(self.scheduler.depth)
 
     def _drop_expired(self, items, now: float) -> List[Request]:
@@ -665,6 +710,15 @@ class ServeEngine:
         for req in items:
             if req.deadline is not None and \
                     now - req.submitted_at > req.deadline:
+                if self.tracer.enabled:
+                    # never dispatched: the timeline is queue -> retire
+                    self.tracer.transition(req.trace_id, "queue", "retire",
+                                           t=now)
+                if self.events is not None:
+                    self.events.emit("cancel", t=now, uid=req.uid,
+                                     where="queued",
+                                     waited_s=now - req.submitted_at,
+                                     deadline_s=req.deadline)
                 self._emit({"now": now,
                             "retired": [(req, now - req.submitted_at, True)]})
             else:
@@ -694,7 +748,9 @@ class ServeEngine:
                 self.max_prefill, lambda r: len(r.prompt), limit=len(free))
             if plan is None:
                 return
-            now = self._clock()
+            # the planner-selection timestamp is the queue->pack boundary
+            # every request in this plan shares (serving/trace.py)
+            now = plan.formed_at
             reqs = self._drop_expired(plan.items, now)
             if not reqs:
                 continue
@@ -722,17 +778,41 @@ class ServeEngine:
                 taken.append((slot, req))
                 self.metrics.queue_wait.record(
                     max(0.0, now - req.submitted_at))
+                if self.tracer.enabled:
+                    # planner selected the request at `now`: queue ends and
+                    # the host-side pack/buffer-build phase begins
+                    self.tracer.transition(req.trace_id, "queue", "pack",
+                                           t=now, waited_s=now
+                                           - req.submitted_at)
             self.metrics.inc("prefill_batches")
             self.metrics.inc("pack_real_tokens", total)
             self.metrics.inc("pack_pad_tokens", bucket - total)
+            key = self._program_key("packed_prefill", bucket=bucket, n=nb)
             exe = self._compiled(
-                self._program_key("packed_prefill", bucket=bucket, n=nb),
-                lambda b=bucket, n=nb: self._build_admit(b, n))
+                key, lambda b=bucket, n=nb: self._build_admit(b, n))
+            trace = self.tracer.enabled
+            if trace or self._step_times:
+                t_d = self._clock()  # pack ends, prefill dispatch begins
+                if trace:
+                    for _, req in taken:
+                        self.tracer.transition(req.trace_id, "pack",
+                                               "prefill", t=t_d,
+                                               bucket=bucket, n=len(taken))
             put = lambda a: jax.device_put(jnp.asarray(a), self._repl_sh)
             first, self.cache, self._tok = exe(
                 self.params, put(tokens), put(positions), put(seg),
                 put(last_idx), put(starts), put(lens), put(slots),
                 self.cache, self._tok)
+            if trace or self._step_times:
+                t_e = self._clock()
+                if self._step_times:
+                    self.metrics.record_step(key, t_e - t_d)
+                if trace:
+                    self.tracer.record_span(key, t_d, t_e, n=len(taken),
+                                            real_tokens=total)
+                    for _, req in taken:
+                        self.tracer.transition(req.trace_id, "prefill",
+                                               "decode", t=t_e)
             append = []
             for i, (slot, req) in enumerate(taken):
                 self.pos[slot] = lens[i]
@@ -756,23 +836,42 @@ class ServeEngine:
             batch = self.scheduler.poll(limit=len(free))
             if batch is None:
                 return
-            now = self._clock()
+            now = batch.formed_at  # the shared queue-phase end boundary
             groups: Dict[int, List[Request]] = {}
             for req in self._drop_expired(batch.items, now):
                 groups.setdefault(len(req.prompt), []).append(req)
-            for _, reqs in sorted(groups.items()):
+            for L, reqs in sorted(groups.items()):
                 slots = [free.pop(0) for _ in reqs]
                 for req in reqs:
                     self.metrics.queue_wait.record(
                         max(0.0, now - req.submitted_at))
+                    if self.tracer.enabled:
+                        # no pack phase on this path: queue -> prefill (the
+                        # group's batched forward, incl. host grouping time)
+                        self.tracer.transition(req.trace_id, "queue",
+                                               "prefill", t=now)
                 toks = jnp.asarray(np.stack([r.prompt for r in reqs]),
                                    jnp.int32)
+                trace = self.tracer.enabled
+                if trace or self._step_times:
+                    t_d = self._clock()
                 with self._scope():
                     logits, part_cache = self.mod.prefill(
                         self.params, self.cfg, toks, max_len=self.max_len,
                     )
                 self.metrics.inc("prefill_batches")
                 first = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+                if trace or self._step_times:
+                    t_e = self._clock()
+                    key = self._program_key("grouped_prefill", L=L,
+                                            n=len(reqs))
+                    if self._step_times:
+                        self.metrics.record_step(key, t_e - t_d)
+                    if trace:
+                        self.tracer.record_span(key, t_d, t_e, n=len(reqs))
+                        for req in reqs:
+                            self.tracer.transition(req.trace_id, "prefill",
+                                                   "decode", t=t_e)
                 for i, (slot, req) in enumerate(zip(slots, reqs)):
                     # merge row i of the group's prefilled cache into this
                     # slot's rows of the engine cache
@@ -806,7 +905,11 @@ class ServeEngine:
         counts), so slots free without reading token values."""
         if not self.active:
             return
-        exe = self._compiled(self._program_key("decode"), self._build_tick)
+        key = self._program_key("decode")
+        exe = self._compiled(key, self._build_tick)
+        trace = self.tracer.enabled
+        if trace or self._step_times:
+            t_d = self._clock()
         index = jax.device_put(jnp.asarray(self.pos, jnp.int32),
                                self._repl_sh)
         out = exe(self.params, self._tok, self.cache, index)
@@ -815,9 +918,13 @@ class ServeEngine:
         else:
             (nxt, self.cache), stats = out, None
         self._tok = nxt
+        now = self._clock()
+        if self._step_times:
+            self.metrics.record_step(key, now - t_d)
+        if trace:
+            self.tracer.record_span(key, t_d, now, n=len(self.active))
         self.metrics.work_done(len(self.active), "tokens")
         self.metrics.observe_queue_depth(self.scheduler.depth)
-        now = self._clock()
         append, retired = [], []
         for slot in list(self.active):
             req = self.active[slot]
@@ -828,6 +935,13 @@ class ServeEngine:
                     self.pos[slot] >= self.max_len - 1:
                 self.active.pop(slot)
                 retired.append((req, now - req.submitted_at, False))
+                if trace:
+                    # decode ends at the SAME timestamp the latency record
+                    # uses, so queue+pack+prefill+decode sums exactly to
+                    # the recorded end-to-end latency (the section 11
+                    # acceptance invariant); retire closes in _consume
+                    self.tracer.transition(req.trace_id, "decode", "retire",
+                                           t=now)
         self._emit({"tok": nxt, "now": now, "append": append,
                     "retired": retired, "stats": stats})
 
@@ -839,6 +953,9 @@ class ServeEngine:
             tokens[slot, 0] = req.generated[-1]
         # per-slot cache positions: slots decode at their own fill level
         index = jnp.asarray(self.pos, jnp.int32)
+        trace = self.tracer.enabled
+        if trace or self._step_times:
+            t_d = self._clock()
         with self._scope():
             out = self._decode(self.params, jnp.asarray(tokens), self.cache,
                                index)
@@ -848,10 +965,15 @@ class ServeEngine:
         else:
             logits, self.cache = out
         nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        now = self._clock()
+        if self._step_times:
+            self.metrics.record_step(self._program_key("decode"), now - t_d)
+        if trace:
+            self.tracer.record_span(self._program_key("decode"), t_d, now,
+                                    n=len(self.active))
         self.metrics.work_done(len(self.active), "tokens")
         self.metrics.observe_queue_depth(self.scheduler.depth)
         done = []
-        now = self._clock()
         for slot, req in self.active.items():
             tok = int(nxt[slot])
             req.generated.append(tok)
@@ -862,6 +984,9 @@ class ServeEngine:
                 done.append(slot)
         for slot in done:
             req = self.active.pop(slot)
+            if trace:
+                self.tracer.transition(req.trace_id, "decode", "retire",
+                                       t=now)
             self._emit({"now": now,
                         "retired": [(req, now - req.submitted_at, False)]})
 

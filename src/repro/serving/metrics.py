@@ -34,10 +34,19 @@ def hist_percentile(hist: np.ndarray, p: float,
     """p-th percentile of a ``_BIN_EDGES`` histogram (geometric bin
     midpoint). One formula shared by ``LatencyTracker`` and the
     autoscaler's *windowed* p95 (which differences two pooled histograms —
-    a deque of raw samples could not be windowed across replica churn)."""
+    a deque of raw samples could not be windowed across replica churn).
+
+    Edge cases: an **empty** histogram answers 0.0 — there is nothing to
+    interpolate across, and callers that need "no data" semantics check
+    the count before asking (``LatencyTracker.snapshot`` keeps its NaN
+    fields; the autoscaler only closes a window at ``min_window_samples``).
+    A **single-sample** histogram answers ``max_value`` when the caller
+    supplies it (the sample itself) instead of the bin midpoint."""
     total = int(hist.sum())
     if total == 0:
-        return float("nan")
+        return 0.0
+    if total == 1 and max_value is not None:
+        return float(max_value)
     target = (p / 100.0) * total
     cum = np.cumsum(hist)
     b = int(np.searchsorted(cum, max(target, 1), side="left"))
@@ -121,14 +130,27 @@ class LatencyTracker:
         return hist_percentile(self._hist, p, max_value=self._max)
 
     def percentile(self, p: float) -> float:
-        """p-th percentile in seconds (nan when empty). Exact while the
-        sample reservoir is complete; histogram-interpolated after."""
+        """p-th percentile in seconds (0.0 when empty — nothing recorded
+        means no latency, and the NaN "no data" signal lives in
+        ``snapshot``'s fields). A single-sample tracker answers the sample
+        itself (``_max``), never a bin midpoint. Exact while the sample
+        reservoir is complete; histogram-interpolated after."""
         with self._lock:
             if self._total == 0:
-                return float("nan")
+                return 0.0
+            if self._total == 1:
+                return self._max
             if self.exact and len(self._samples) == self._total:
                 return float(np.percentile(np.asarray(self._samples), p))
             return self._hist_percentile(p)
+
+    def hist_data(self):
+        """(bin_edges, counts, total, sum, max) copied under the lock —
+        the raw material for ``ClusterMetrics.export_prometheus``'s
+        cumulative-bucket rendering."""
+        with self._lock:
+            return (_BIN_EDGES, self._hist.copy(), int(self._total),
+                    float(self._sum), float(self._max))
 
     def snapshot(self) -> Dict[str, float]:
         """Milliseconds, the unit the paper's latency tables use."""
@@ -187,6 +209,12 @@ class EngineMetrics:
         # admission-queue wait, stamped when a request leaves the queue
         # (LM: before its prefill starts; vision: at batch dispatch)
         self.queue_wait = LatencyTracker(lock=self._lock)
+        # per-program step wall times, keyed by the section-10 AOT program
+        # key (serve/decode|B=..|S=.., serve/packed_prefill|...|bucket=..,
+        # classify|b=..): the per-bucket step-latency signal the ROADMAP
+        # autotuner-drift item needs. Trackers share the metrics lock, so
+        # a snapshot never tears across programs.
+        self.step_latency: Dict[str, LatencyTracker] = {}
         self.expert_tokens = np.zeros(max(0, num_experts), np.int64)
         self._depth_sum = 0
         self._depth_max = 0
@@ -217,6 +245,16 @@ class EngineMetrics:
         with self._lock:
             if a.size and self.expert_tokens.size == a.size:
                 self.expert_tokens += a
+
+    def record_step(self, key: str, seconds: float) -> None:
+        """Record one program dispatch's wall time under its AOT program
+        key (decode tick, packed-prefill bucket, classify bucket)."""
+        with self._lock:
+            t = self.step_latency.get(key)
+            if t is None:
+                t = self.step_latency[key] = LatencyTracker(
+                    maxlen=4096, lock=self._lock)
+            t.record(seconds)
 
     def work_done(self, n: int, unit: str = "frames") -> None:
         """Mark n units (frames/tokens) complete; drives the FPS window."""
@@ -270,6 +308,8 @@ class EngineMetrics:
                 "max": self._depth_max,
                 "last": self._depth_last,
             },
+            "step_latency_ms": {k: t.snapshot()
+                                for k, t in sorted(self.step_latency.items())},
             "expert_tokens": self.expert_tokens.tolist(),
             "expert_occupancy": _occupancy_of(self.expert_tokens),
         }
@@ -325,6 +365,7 @@ class ClusterMetrics:
         self._ret_request = LatencyTracker(maxlen=65536)
         self._ret_batch = LatencyTracker(maxlen=65536)
         self._ret_queue_wait = LatencyTracker(maxlen=65536)
+        self._ret_steps: Dict[str, LatencyTracker] = {}
         self._ret_counters: Dict[str, int] = {}
         self._ret_tokens: Optional[np.ndarray] = None
         self._ret_first: Optional[float] = None
@@ -354,6 +395,16 @@ class ClusterMetrics:
         self._ret_request.merge(m.request_latency)
         self._ret_batch.merge(m.batch_latency)
         self._ret_queue_wait.merge(m.queue_wait)
+        # per-program step histograms fold key-by-key: a replica that
+        # rejoins after a drain starts fresh, the retired accumulator keeps
+        # its whole step-latency history per bucket
+        with m._lock:
+            step_items = list(m.step_latency.items())
+        for k, t in step_items:
+            acc = self._ret_steps.get(k)
+            if acc is None:
+                acc = self._ret_steps[k] = LatencyTracker(maxlen=65536)
+            acc.merge(t)
         for k, v in m.counters.items():
             self._ret_counters[k] = self._ret_counters.get(k, 0) + v
         if m.expert_tokens.size:
@@ -433,6 +484,22 @@ class ClusterMetrics:
                 h = h + m.request_latency._hist
         return h
 
+    def merged_step_latency(self) -> Dict[str, LatencyTracker]:
+        """Per-program step-latency trackers pooled over live replicas plus
+        the retired accumulator (same merge rule as request latency)."""
+        out: Dict[str, LatencyTracker] = {}
+        sources: List[Dict[str, LatencyTracker]] = [self._ret_steps]
+        for m in self._replicas:
+            with m._lock:
+                sources.append(dict(m.step_latency))
+        for src in sources:
+            for k, t in src.items():
+                acc = out.get(k)
+                if acc is None:
+                    acc = out[k] = LatencyTracker(maxlen=65536)
+                acc.merge(t)
+        return out
+
     def snapshot(self) -> dict:
         counters: Dict[str, int] = dict(self.counters)
         for k, v in self._ret_counters.items():
@@ -466,6 +533,9 @@ class ClusterMetrics:
                 "latency_ms": self.merged_request_latency().snapshot(),
                 "batch_latency_ms": batch_lat.snapshot(),
                 "queue_wait_ms": queue_wait.snapshot(),
+                "step_latency_ms": {
+                    k: t.snapshot()
+                    for k, t in sorted(self.merged_step_latency().items())},
                 "front_queue_depth": {
                     "mean": (self._depth_sum / self._depth_n)
                     if self._depth_n else 0.0,
@@ -479,3 +549,82 @@ class ClusterMetrics:
                                 else len(self._replicas)),
             "replica_timeline": [[t, n] for t, n in self._timeline],
         }
+
+    def export_prometheus(self) -> str:
+        """Prometheus text-exposition rendering of every aggregate counter,
+        gauge, and latency histogram (DESIGN.md section 11).
+
+        Counters land as one ``repro_serving_events_total`` family labeled
+        by counter name; latency distributions render as cumulative
+        histograms over the log-spaced ``_BIN_EDGES`` (``le`` in seconds,
+        +Inf closing bucket, ``_sum``/``_count`` series); per-program step
+        latencies carry a ``program`` label. The bucket boundaries are the
+        same merge-safe bins the autoscaler windows over, so a scrape and a
+        scale decision read one distribution."""
+        snap = self.snapshot()
+        agg = snap["aggregate"]
+        lines: List[str] = []
+
+        lines.append("# TYPE repro_serving_events_total counter")
+        for k, v in sorted(agg["counters"].items()):
+            lines.append(f'repro_serving_events_total{{event="{k}"}} {v}')
+
+        fps = agg["fps"]
+        lines.append("# TYPE repro_serving_fps gauge")
+        lines.append("repro_serving_fps "
+                     f"{0.0 if fps != fps else fps}")
+        lines.append("# TYPE repro_serving_replicas_active gauge")
+        lines.append(f"repro_serving_replicas_active "
+                     f"{snap['replicas_active']}")
+        depth = agg["front_queue_depth"]
+        lines.append("# TYPE repro_serving_front_queue_depth gauge")
+        for stat in ("mean", "max", "last"):
+            lines.append(f'repro_serving_front_queue_depth{{stat="{stat}"}} '
+                         f"{depth[stat]}")
+        if agg["expert_tokens"]:
+            lines.append("# TYPE repro_serving_expert_tokens_total counter")
+            for i, v in enumerate(agg["expert_tokens"]):
+                lines.append(
+                    f'repro_serving_expert_tokens_total{{expert="{i}"}} {v}')
+
+        batch_lat = LatencyTracker.merged(
+            [m.batch_latency for m in self._replicas])
+        batch_lat.merge(self._ret_batch)
+        queue_wait = LatencyTracker.merged(
+            [m.queue_wait for m in self._replicas])
+        queue_wait.merge(self._ret_queue_wait)
+        for name, tracker in (
+            ("repro_request_latency_seconds", self.merged_request_latency()),
+            ("repro_batch_latency_seconds", batch_lat),
+            ("repro_queue_wait_seconds", queue_wait),
+        ):
+            lines += _prom_histogram(name, tracker)
+        steps = self.merged_step_latency()
+        if steps:
+            lines.append("# TYPE repro_step_latency_seconds histogram")
+            for key, tracker in sorted(steps.items()):
+                lines += _prom_histogram(
+                    "repro_step_latency_seconds", tracker,
+                    labels=f'program="{key}"', typed=False)
+        return "\n".join(lines) + "\n"
+
+
+def _prom_histogram(name: str, tracker: LatencyTracker,
+                    labels: str = "", typed: bool = True) -> List[str]:
+    """Cumulative Prometheus histogram series from a ``LatencyTracker``'s
+    log-bin histogram (le= boundaries in seconds)."""
+    edges, counts, total, ssum, _ = tracker.hist_data()
+    sep = "," if labels else ""
+    out: List[str] = []
+    if typed:
+        out.append(f"# TYPE {name} histogram")
+    cum = 0
+    for i, edge in enumerate(edges):
+        cum += int(counts[i])
+        out.append(f'{name}_bucket{{{labels}{sep}le="{edge:g}"}} {cum}')
+    out.append(f'{name}_bucket{{{labels}{sep}le="+Inf"}} {total}')
+    out.append(f"{name}_sum{{{labels}}} {ssum}" if labels
+               else f"{name}_sum {ssum}")
+    out.append(f"{name}_count{{{labels}}} {total}" if labels
+               else f"{name}_count {total}")
+    return out

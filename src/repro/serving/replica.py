@@ -36,6 +36,12 @@ The contract, all host-side:
 ``isinstance(obj, EngineReplica)`` is a runtime structural check (method /
 attribute presence), used by the conformance tests and by ``ServingCluster``
 to validate custom engine factories.
+
+Observability attributes are deliberately **not** part of the protocol:
+``tracer`` (serving/trace.py) and ``events`` (serving/events.py) are
+optional — the cluster reads them with ``getattr(engine, "tracer", None)``
+so a minimal custom replica (or a test fake) conforms without carrying the
+tracing machinery (DESIGN.md section 11).
 """
 from __future__ import annotations
 

@@ -40,6 +40,10 @@ class MicroBatch(NamedTuple):
     items: tuple  # requests in FIFO order (len <= pad_to)
     pad_to: int  # ladder size the engine should pad the batch up to
     waited_s: float  # queue wait of the oldest item at formation time
+    # formation timestamp (scheduler clock) — the queue-phase end boundary
+    # the span timelines use (serving/trace.py); 0.0 only from legacy
+    # construction sites that predate the field
+    formed_at: float = 0.0
 
 
 class PackPlan(NamedTuple):
@@ -51,6 +55,9 @@ class PackPlan(NamedTuple):
     total: int  # sum(lengths) — real tokens in the pack buffer
     budget: int  # token budget the plan was formed against
     waited_s: float  # queue wait of the oldest item at formation time
+    # planner-selection timestamp — where each packed request's queue span
+    # ends and its pack span begins (serving/trace.py)
+    formed_at: float = 0.0
 
 
 class MicroBatcher:
@@ -175,7 +182,7 @@ class MicroBatcher:
             # not grow the dict (or poll's scan) without bound
             del self._buckets[best[1]]
         return MicroBatch(key=best[1], items=items, pad_to=self._pad_to(n),
-                          waited_s=waited)
+                          waited_s=waited, formed_at=now)
 
     def poll_pack(
         self,
@@ -242,6 +249,7 @@ class MicroBatcher:
             total=used,
             budget=int(budget),
             waited_s=max(0.0, now - take[0][1]),
+            formed_at=now,
         )
 
     def _pad_to(self, n: int) -> int:

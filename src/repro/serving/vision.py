@@ -38,8 +38,10 @@ from repro import models
 from repro.configs.base import ModelConfig
 from repro.models import vit
 from repro.serving.engine import serving_config
+from repro.serving.events import EventLog
 from repro.serving.metrics import EngineMetrics
 from repro.serving.scheduler import MicroBatcher
+from repro.serving.trace import make_tracer
 
 
 @dataclasses.dataclass
@@ -54,6 +56,9 @@ class VisionRequest:
     latency_s: Optional[float] = None
     # None = not yet admitted; a 0.0 stamp from a fake clock is a real stamp
     submitted_at: Optional[float] = None
+    # span-timeline identity (serving/trace.py); cluster-assigned, falls
+    # back to uid on a standalone engine. None with tracing off.
+    trace_id: Optional[int] = None
 
     @property
     def done(self) -> bool:
@@ -81,6 +86,7 @@ class VisionEngine:
         top_k: int = 5,
         max_inflight: int = 2,
         mesh: Optional[Mesh] = None,
+        events: Optional[EventLog] = None,
         clock: Callable[[], float] = time.monotonic,
     ) -> None:
         if cfg.family not in ("vit", "vit_moe"):
@@ -88,6 +94,11 @@ class VisionEngine:
         # dropless grouped MoE for serving, same rule as the LM engine
         self.cfg = serving_config(cfg)
         self.params = params
+        # observability (DESIGN.md section 11): vision timelines are
+        # queue -> infer -> retire (one batched forward is the service)
+        self.tracer = make_tracer(self.cfg.trace, clock=clock)
+        self.events = events
+        self._step_times = self.tracer.enabled and self.cfg.trace.step_times
         self.top_k = min(top_k, cfg.num_classes)
         self.n_patches = cfg.image_tokens - 1
         self._clock = clock
@@ -226,8 +237,16 @@ class VisionEngine:
             self.scheduler.submit(req)
         except Exception:
             self.metrics.inc("rejected")
+            if self.events is not None:
+                self.events.emit("reject", uid=req.uid,
+                                 reason="backpressure",
+                                 depth=self.scheduler.depth)
             raise
         self.metrics.inc("submitted")
+        if self.tracer.enabled:
+            if req.trace_id is None:
+                req.trace_id = req.uid
+            self.tracer.begin(req.trace_id, "queue", t=req.submitted_at)
         self.metrics.observe_queue_depth(self.scheduler.depth)
 
     def step(self) -> None:
@@ -283,6 +302,9 @@ class VisionEngine:
                 # the same semantics ServeEngine records before prefill, so
                 # queue_wait_ms compares across engine families
                 self.metrics.queue_wait.record(max(0.0, t0 - r.submitted_at))
+                if self.tracer.enabled:
+                    self.tracer.transition(r.trace_id, "queue", "infer",
+                                           t=t0, pad_to=batch.pad_to)
             # async dispatch: returns device futures; nothing blocks here
             out = self._classify(self.params, jnp.asarray(x))
             self._inflight.append(_InFlight(reqs, batch.pad_to, out, t0))
@@ -302,6 +324,16 @@ class VisionEngine:
         probs = np.asarray(ent.out["probs"])
         now = self._clock()
         self.metrics.batch_latency.record(now - ent.dispatched_at)
+        trace = self.tracer.enabled
+        if self._step_times:
+            # per-bucket step latency, keyed like the autotune/program-key
+            # namespace so cluster snapshots read as one schema
+            self.metrics.record_step(f"classify|b={ent.pad_to}",
+                                     now - ent.dispatched_at)
+        if trace:
+            self.tracer.record_span(f"classify|b={ent.pad_to}",
+                                    ent.dispatched_at, now,
+                                    n=len(ent.reqs), pad_to=ent.pad_to)
         et = ent.out.get("expert_tokens")
         if et is not None and et.size:
             # NB: includes the pad rows' routed tokens — interpret together
@@ -313,6 +345,13 @@ class VisionEngine:
             req.latency_s = now - req.submitted_at
             self.metrics.request_latency.record(req.latency_s)
             self.metrics.inc("completed")
+            if trace:
+                # infer ends at the SAME `now` the latency record uses —
+                # queue+infer sums to latency_s; retire is result fill-in
+                self.tracer.transition(req.trace_id, "infer", "retire",
+                                       t=now)
+                self.tracer.end(req.trace_id, "retire",
+                                latency_s=req.latency_s)
         self.metrics.work_done(len(ent.reqs), "frames")
 
 

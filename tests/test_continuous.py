@@ -268,22 +268,33 @@ def test_retirement_thread_survives_poisoned_event():
 
 def test_engine_metrics_concurrent_mutation_is_exact():
     """Retirement-thread metric writes race the decode loop's: counter
-    increments and latency records from N threads must all land (the shared
-    lock closes the read-modify-write races) and snapshot() must not tear."""
+    increments, latency records, step-time records, and tracer spans from N
+    threads must all land (the shared locks close the read-modify-write
+    races) and snapshot() must not tear."""
+    from repro.serving.trace import Tracer, validate_request_timelines
+
     m = EngineMetrics(num_experts=4)
+    tr = Tracer()
     errs = []
 
-    def hammer():
+    def hammer(k):
         try:
-            for _ in range(500):
+            for i in range(500):
                 m.inc("completed")
                 m.request_latency.record(1e-3)
                 m.add_expert_tokens([1, 0, 1, 0])
+                m.record_step("serve/decode|B=4|S=32", 1e-3)
+                tid = k * 500 + i
+                tr.begin(tid, "queue", t=float(i))
+                tr.transition(tid, "queue", "decode", t=float(i) + 0.5)
+                tr.end(tid, "decode", t=float(i) + 1.0)
+                tr.record_span("serve/decode|B=4|S=32", float(i),
+                               float(i) + 1e-3)
                 m.snapshot()
         except Exception as e:  # pragma: no cover - failure path
             errs.append(e)
 
-    threads = [threading.Thread(target=hammer) for _ in range(8)]
+    threads = [threading.Thread(target=hammer, args=(k,)) for k in range(8)]
     for t in threads:
         t.start()
     for t in threads:
@@ -292,3 +303,9 @@ def test_engine_metrics_concurrent_mutation_is_exact():
     assert m.counters["completed"] == 8 * 500
     assert m.request_latency.snapshot()["n"] == 8 * 500
     assert m.expert_tokens.tolist() == [4000, 0, 4000, 0]
+    assert m.snapshot()["step_latency_ms"]["serve/decode|B=4|S=32"]["n"] \
+        == 8 * 500
+    # 2 spans per iteration (queue+decode phases) + 1 step span, none lost
+    assert tr.recorder.total == 8 * 500 * 3
+    assert tr.open_count() == 0
+    assert validate_request_timelines(tr.recorder.spans()) > 0

@@ -1,0 +1,546 @@
+"""Serving-stack tracing layer (DESIGN.md section 11): span-timeline
+invariants (non-overlapping, phase-ordered, summing to the recorded
+end-to-end latency), flight-recorder bounds and thread safety, Chrome-trace
+export validity, the structured event log, step-latency histograms through
+the metrics roll-up and elasticity, and the autoscaler decision journal."""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs.base import AutoscaleConfig, TraceConfig
+from repro.serving.autoscaler import Autoscaler
+from repro.serving.cluster import ServingCluster
+from repro.serving.events import EventLog, read_jsonl
+from repro.serving.metrics import (
+    _BIN_EDGES,
+    ClusterMetrics,
+    EngineMetrics,
+    LatencyTracker,
+    hist_percentile,
+)
+from repro.serving.trace import (
+    NULL_TRACER,
+    FlightRecorder,
+    Span,
+    Tracer,
+    chrome_trace,
+    make_tracer,
+    request_timelines,
+    validate_chrome_trace,
+    validate_request_timelines,
+)
+
+from test_autoscaler import FakeClock, FakeReplica, FakeRequest
+
+
+# -- tracer + flight recorder ------------------------------------------------
+
+
+def test_timeline_partitions_recorded_latency():
+    """The acceptance invariant, deterministically: adjacent phases share
+    boundary timestamps, so queue+pack+prefill+decode sums EXACTLY to the
+    end-to-end latency, and retire extends past it (off the latency path)."""
+    clk = FakeClock()
+    tr = Tracer(clock=clk)
+    tr.begin(7, "queue", t=0.0)
+    tr.transition(7, "queue", "pack", t=1.5)
+    tr.transition(7, "pack", "prefill", t=2.0)
+    tr.transition(7, "prefill", "decode", t=3.25)
+    tr.transition(7, "decode", "retire", t=9.0)
+    tr.end(7, "retire", t=9.5, latency_s=9.0)
+    assert tr.open_count() == 0
+    spans = tr.recorder.spans()
+    assert validate_request_timelines(spans) == 1
+    tl = request_timelines(spans)[7]
+    assert [s.name for s in tl] == ["queue", "pack", "prefill", "decode",
+                                    "retire"]
+    service = sum(s.dur for s in tl if s.name != "retire")
+    assert service == pytest.approx(9.0, abs=1e-12)
+    assert tl[-1].attrs["latency_s"] == 9.0
+    assert tl[-1].t1 > 9.0, "retire extends past the latency window"
+
+
+def test_vision_phase_subsequence_validates():
+    """Vision requests skip pack/prefill/decode: queue -> infer -> retire is
+    a valid subsequence of the phase order."""
+    tr = Tracer()
+    tr.begin(0, "queue", t=0.0)
+    tr.transition(0, "queue", "infer", t=1.0)
+    tr.transition(0, "infer", "retire", t=2.0)
+    tr.end(0, "retire", t=2.5)
+    assert validate_request_timelines(tr.recorder.spans()) == 1
+
+
+def test_end_without_begin_is_silent_noop():
+    tr = Tracer()
+    tr.end(3, "decode", t=1.0)  # never begun: must not raise or record
+    assert tr.recorder.total == 0 and tr.open_count() == 0
+
+
+def test_flight_recorder_bounded_ring_counts_drops():
+    rec = FlightRecorder(capacity=4)
+    for i in range(10):
+        rec.record(Span(None, f"s{i}", "step", float(i), float(i) + 0.5))
+    assert len(rec) == 4
+    assert rec.total == 10 and rec.dropped == 6
+    assert [s.name for s in rec.spans()] == ["s6", "s7", "s8", "s9"], \
+        "the ring must keep the most recent window"
+    assert [s.name for s in rec.spans(t0=8.2)] == ["s8", "s9"]
+    assert [s.name for s in rec.spans(t1=6.9)] == ["s6"]
+    rec.clear()
+    assert len(rec) == 0 and rec.total == 0
+
+
+def test_flight_recorder_concurrent_records_all_land():
+    rec = FlightRecorder(capacity=100_000)
+    errs = []
+
+    def hammer(k):
+        try:
+            for i in range(1000):
+                rec.record(Span(k, "decode", "request", float(i),
+                                float(i) + 1))
+                if i % 100 == 0:
+                    rec.spans()  # concurrent snapshot must not tear
+        except Exception as e:  # pragma: no cover - failure path
+            errs.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(k,)) for k in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert rec.total == 8000 and rec.dropped == 0
+
+
+def test_disabled_tracer_records_nothing():
+    """make_tracer compiles the layer out when disabled: the shared
+    NULL_TRACER answers every site, records nothing, allocates nothing."""
+    assert make_tracer(None) is NULL_TRACER
+    assert make_tracer(TraceConfig(enable=False)) is NULL_TRACER
+    nt = make_tracer(TraceConfig(enable=False))
+    assert not nt.enabled
+    nt.begin(0, "queue")
+    nt.transition(0, "queue", "decode")
+    nt.record_span("serve/decode", 0.0, 1.0)
+    nt.end(0, "decode")
+    assert nt.recorder.total == 0 and nt.open_count() == 0
+    tr = make_tracer(TraceConfig(enable=True, capacity=16), label="r0")
+    assert tr.enabled and tr.label == "r0" and tr.recorder.capacity == 16
+
+
+# -- chrome-trace export -----------------------------------------------------
+
+
+def _two_replica_recorders():
+    a, b = Tracer(label="replica0"), Tracer(label="replica1")
+    for tr, tid in ((a, 0), (b, 1)):
+        tr.begin(tid, "queue", t=0.0)
+        tr.transition(tid, "queue", "decode", t=1.0)
+        tr.end(tid, "decode", t=2.0)
+        tr.record_span("serve/decode|B=4|S=32", 1.0, 2.0, n=1)
+    return {a.label: a.recorder, b.label: b.recorder}
+
+
+def test_chrome_trace_layout_and_validity():
+    doc = chrome_trace(_two_replica_recorders())
+    n = validate_chrome_trace(doc)
+    assert n == 6  # 3 spans per replica
+    evs = doc["traceEvents"]
+    pids = {e["pid"] for e in evs}
+    assert pids == {0, 1}, "one process per replica"
+    # step spans ride tid 0; request spans ride tid = trace_id + 1
+    steps = [e for e in evs if e["ph"] == "X" and e.get("cat") == "step"]
+    assert all(e["tid"] == 0 for e in steps)
+    reqs = [e for e in evs if e["ph"] == "X" and e.get("cat") == "request"]
+    assert {e["tid"] for e in reqs} == {1, 2}
+    names = [e for e in evs if e["ph"] == "M"
+             and e["name"] == "process_name"]
+    assert sorted(e["args"]["name"] for e in names) == \
+        ["replica0", "replica1"]
+    # timestamps are microseconds
+    q = next(e for e in reqs if e["name"] == "queue")
+    assert q["dur"] == pytest.approx(1e6)
+
+
+def test_chrome_trace_accepts_bare_tracer():
+    tr = Tracer(label="solo")
+    tr.record_span("classify|b=4", 0.0, 0.5, n=4)
+    doc = chrome_trace(tr)
+    assert validate_chrome_trace(doc) == 1
+
+
+def test_validate_chrome_trace_rejects_malformed():
+    with pytest.raises(ValueError, match="traceEvents"):
+        validate_chrome_trace({"events": []})
+    with pytest.raises(ValueError, match="missing"):
+        validate_chrome_trace(
+            {"traceEvents": [{"ph": "X", "name": "x", "ts": 0.0,
+                              "pid": 0, "tid": 0}]})
+    with pytest.raises(ValueError, match="negative"):
+        validate_chrome_trace(
+            {"traceEvents": [{"ph": "X", "name": "x", "ts": 0.0,
+                              "dur": -1.0, "pid": 0, "tid": 0}]})
+
+
+def test_validate_request_timelines_rejects_violations():
+    bad_order = [Span(0, "decode", "request", 0.0, 1.0),
+                 Span(0, "queue", "request", 1.0, 2.0)]
+    with pytest.raises(ValueError, match="out of order"):
+        validate_request_timelines(bad_order)
+    overlap = [Span(1, "queue", "request", 0.0, 2.0),
+               Span(1, "decode", "request", 1.0, 3.0)]
+    with pytest.raises(ValueError, match="overlaps"):
+        validate_request_timelines(overlap)
+    with pytest.raises(ValueError, match="unknown phase"):
+        validate_request_timelines([Span(2, "mystery", "request", 0, 1)])
+
+
+# -- event log ---------------------------------------------------------------
+
+
+def test_event_log_ring_counts_and_stream(tmp_path):
+    path = tmp_path / "events.jsonl"
+    log = EventLog(capacity=4, path=str(path))
+    for i in range(6):
+        log.emit("reject", t=float(i), reason="backpressure", depth=i)
+    log.emit("scale_up", t=9.0, replicas_before=1, replicas_after=2)
+    log.close()
+    assert log.total == 7 and log.dropped == 3
+    assert len(log.events()) == 4, "ring keeps the recent window"
+    assert [e["type"] for e in log.events("scale_up")] == ["scale_up"]
+    assert log.counts() == {"reject": 3, "scale_up": 1}
+    # the streaming sink saw EVERY event, including ring-evicted ones
+    rows = read_jsonl(str(path))
+    assert len(rows) == 7
+    assert rows[0] == {"t": 0.0, "type": "reject",
+                       "reason": "backpressure", "depth": 0}
+    assert rows[-1]["type"] == "scale_up"
+
+
+def test_event_log_jsonl_roundtrip_and_fallback(tmp_path):
+    log = EventLog()
+    log.emit("cancel", t=1.0, where="queued",
+             arr=np.int64(3))  # non-JSON type must not break export
+    path = tmp_path / "out.jsonl"
+    log.write_jsonl(str(path))
+    rows = read_jsonl(str(path))
+    assert rows[0]["type"] == "cancel" and rows[0]["arr"] == 3
+
+
+# -- percentile edge cases + merged accuracy (satellite 1) -------------------
+
+
+def test_hist_percentile_edge_cases():
+    empty = np.zeros(_BIN_EDGES.size + 1, np.int64)
+    assert hist_percentile(empty, 95) == 0.0
+    single = empty.copy()
+    single[np.searchsorted(_BIN_EDGES, 0.0123, side="right")] = 1
+    assert hist_percentile(single, 50, max_value=0.0123) == 0.0123
+    # without the caller-supplied sample the midpoint answers
+    assert hist_percentile(single, 50) == pytest.approx(0.0123, rel=0.1)
+
+
+def test_latency_tracker_percentile_edge_cases():
+    t = LatencyTracker()
+    assert t.percentile(50) == 0.0 and t.percentile(99) == 0.0
+    t.record(0.25)
+    assert t.percentile(1) == 0.25 and t.percentile(99) == 0.25, \
+        "a single-sample tracker answers the sample itself"
+    snap = t.snapshot()
+    assert snap["p50"] == snap["p99"] == pytest.approx(250.0)
+
+
+@pytest.mark.parametrize("p", [50, 90, 95, 99])
+def test_merged_tracker_percentile_within_one_log_bin(p):
+    """Merged-tracker percentiles come from the pooled histogram once the
+    reservoirs overflow; the log-spaced bins (8/decade) bound the error to
+    one bin ratio (10^(1/8)) of the exact pooled percentile."""
+    rng = np.random.default_rng(42)
+    trackers, pooled = [], []
+    for r in range(4):
+        t = LatencyTracker(maxlen=16)  # force the histogram path
+        samples = rng.lognormal(mean=-4.0 + 0.5 * r, sigma=0.8, size=400)
+        for s in samples:
+            t.record(float(s))
+        trackers.append(t)
+        pooled.extend(samples)
+    merged = LatencyTracker.merged(trackers)
+    assert merged.snapshot()["n"] == 1600
+    exact = float(np.percentile(np.asarray(pooled), p))
+    got = merged.percentile(p)
+    bin_ratio = 10 ** (1 / 8)
+    assert exact / bin_ratio <= got <= exact * bin_ratio, \
+        f"p{p}: pooled {got} vs exact {exact}"
+
+
+# -- step-latency histograms through the roll-up (satellite 3) ---------------
+
+
+def test_step_latency_in_engine_and_cluster_snapshots():
+    m = EngineMetrics()
+    for _ in range(8):
+        m.record_step("serve/decode|B=4|S=32", 1e-3)
+    m.record_step("serve/packed_prefill|B=4|S=32|bucket=64|n=4", 5e-3)
+    snap = m.snapshot()
+    assert snap["step_latency_ms"]["serve/decode|B=4|S=32"]["n"] == 8
+    cm = ClusterMetrics([m])
+    agg = cm.snapshot()["aggregate"]["step_latency_ms"]
+    assert agg["serve/decode|B=4|S=32"]["n"] == 8
+    assert agg["serve/packed_prefill|B=4|S=32|bucket=64|n=4"]["n"] == 1
+
+
+def test_step_histograms_survive_elasticity_fold():
+    """scale_down lifecycle: fold into the retired accumulator, reset the
+    engine's metrics, rejoin later — per-program step history is never lost
+    and never double-counted, while a live thread keeps recording."""
+    clk = FakeClock()
+    m = EngineMetrics(clock=clk)
+    cm = ClusterMetrics([m], clock=clk)
+    tr = Tracer(clock=clk)
+    stop = threading.Event()
+    errs = []
+
+    def retirement_thread():
+        try:
+            i = 0
+            while not stop.is_set():
+                m.record_step("serve/decode|B=2|S=16", 2e-3)
+                tr.record_span("serve/decode|B=2|S=16", i * 1e-3,
+                               i * 1e-3 + 2e-3)
+                i += 1
+        except Exception as e:  # pragma: no cover - failure path
+            errs.append(e)
+
+    th = threading.Thread(target=retirement_thread)
+    th.start()
+    for _ in range(200):
+        m.record_step("serve/packed_prefill|B=2|S=16|bucket=32|n=2", 1e-3)
+    # replica leaves mid-traffic: fold + reset with the recorder thread live
+    cm.remove_replica(m)
+    snap_mid = cm.snapshot()["aggregate"]["step_latency_ms"]
+    assert snap_mid[
+        "serve/packed_prefill|B=2|S=16|bucket=32|n=2"]["n"] == 200
+    stop.set()
+    th.join()
+    assert not errs
+    folded = cm._ret_steps["serve/decode|B=2|S=16"].snapshot()["n"]
+    m2 = EngineMetrics(clock=clk)  # the reset engine rejoins fresh
+    for _ in range(50):
+        m2.record_step("serve/decode|B=2|S=16", 3e-3)
+    cm.add_replica(m2)
+    agg = cm.snapshot()["aggregate"]["step_latency_ms"]
+    assert agg["serve/decode|B=2|S=16"]["n"] == folded + 50
+    assert agg[
+        "serve/packed_prefill|B=2|S=16|bucket=32|n=2"]["n"] == 200
+    assert tr.recorder.total == tr.recorder.dropped + len(tr.recorder)
+
+
+def test_prometheus_export_covers_counters_and_step_histograms():
+    m = EngineMetrics()
+    m.inc("completed", 3)
+    m.request_latency.record(0.01)
+    m.record_step("serve/decode|B=4|S=32", 1e-3)
+    cm = ClusterMetrics([m])
+    cm.inc("cluster_submitted", 3)
+    text = cm.export_prometheus()
+    assert 'repro_serving_events_total{event="completed"} 3' in text
+    assert 'repro_serving_events_total{event="cluster_submitted"} 3' in text
+    assert "# TYPE repro_request_latency_seconds histogram" in text
+    assert 'le="+Inf"} 1' in text
+    assert 'repro_step_latency_seconds_bucket{program=' \
+        '"serve/decode|B=4|S=32",le=' in text
+    assert "repro_request_latency_seconds_count 1" in text
+
+
+# -- autoscaler decision journal (tentpole exporter #2) ----------------------
+
+
+def test_autoscaler_journals_decisions_with_controller_inputs():
+    clk = FakeClock()
+    events = EventLog(clock=clk)
+    factory = lambda mesh: FakeReplica(mesh, clk, capacity=0, max_pending=1)
+    cluster = ServingCluster(None, None, replicas=1, standby=2,
+                             engine=factory, clock=clk, events=events)
+    policy = AutoscaleConfig(min_replicas=1, max_replicas=3,
+                             depth_high=0.5, up_patience=1, cooldown=0,
+                             down_patience=10**9,
+                             slo_p95_ms=1e9, min_window_samples=10**9)
+    scaler = Autoscaler(cluster, policy)
+    assert scaler.event_log is events, \
+        "autoscaler must default to the cluster's event log"
+    for i in range(8):
+        cluster.submit(FakeRequest(uid=i))
+    cluster._route()
+    assert scaler.tick() == "up"
+    (ev,) = events.events("scale_up")
+    assert ev["replicas_before"] == 1 and ev["replicas_after"] == 2
+    assert ev["depth"] >= 1 and ev["up_streak"] >= 1
+    assert ev["slo_breach"] is False and ev["p95_ms"] is None
+    assert ev["t"] == clk.t
+
+
+def test_cluster_journals_rejections_and_drains():
+    clk = FakeClock()
+    events = EventLog(clock=clk)
+    factory = lambda mesh: FakeReplica(mesh, clk, capacity=1, max_pending=1)
+    cluster = ServingCluster(None, None, replicas=2, standby=0,
+                             engine=factory, max_pending=1, clock=clk,
+                             events=events)
+    for i in range(4):  # front bound is 1: three submits bounce
+        try:
+            cluster.submit(FakeRequest(uid=i))
+        except Exception:
+            pass
+    assert events.counts().get("cluster_reject", 0) == 3
+    for rej in events.events("cluster_reject"):
+        assert rej["reason"] == "backpressure" and rej["depth"] >= 1
+    assert cluster.scale_down()
+    for _ in range(10):
+        cluster.step()
+        clk.advance(0.01)
+    assert events.counts().get("replica_drained", 0) == 1
+    (dr,) = events.events("replica_drained")
+    assert dr["replica"].startswith("replica")
+
+
+# -- cluster trace-id assignment + recorder collection -----------------------
+
+
+class TracedFakeReplica(FakeReplica):
+    """FakeReplica carrying a real tracer: exercises the cluster's
+    trace-id assignment and flight-recorder collection without model math
+    (tracer/events are deliberately outside the EngineReplica protocol)."""
+
+    def __init__(self, mesh, clock, **kw):
+        super().__init__(mesh, clock, **kw)
+        self.tracer = Tracer(clock=clock)
+
+    def submit(self, req):
+        super().submit(req)
+        self.tracer.begin(req.trace_id, "queue", t=self._clock())
+
+    def step(self):
+        now = self._clock()
+        for req in self._queue[:self.capacity]:
+            self.tracer.transition(req.trace_id, "queue", "retire", t=now)
+            self.tracer.end(req.trace_id, "retire", t=now)
+        super().step()
+
+
+def test_cluster_assigns_unique_trace_ids_and_labels_replicas():
+    clk = FakeClock()
+    factory = lambda mesh: TracedFakeReplica(mesh, clk, capacity=2,
+                                             max_pending=8)
+    cluster = ServingCluster(None, None, replicas=2, standby=0,
+                             engine=factory, clock=clk)
+    for i in range(6):
+        cluster.submit(FakeRequest(uid=0))  # colliding uids: ids still unique
+    for _ in range(4):
+        cluster.step()
+        clk.advance(0.01)
+    recs = cluster.flight_recorders()
+    assert sorted(recs) == ["replica0", "replica1"]
+    spans = [s for r in recs.values() for s in r.spans()]
+    tids = {s.trace_id for s in spans}
+    assert tids == set(range(6)), \
+        "cluster-assigned trace ids must be unique despite uid collisions"
+    assert validate_request_timelines(spans) == 6
+    doc = chrome_trace(recs)
+    assert validate_chrome_trace(doc) > 0
+
+
+# -- traced engines end to end (model-backed integration) --------------------
+
+
+def _traced(cfg):
+    return cfg.replace(trace=dataclasses.replace(cfg.trace, enable=True))
+
+
+def test_serve_engine_traced_run_satisfies_invariants():
+    """A real packed continuous-batching run under tracing: every request's
+    spans are valid, service phases sum to the recorded latency, step
+    histograms land under the AOT program keys, and nothing stays open."""
+    import jax
+
+    import repro.models as M
+    from repro.configs import smoke_config
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg = _traced(smoke_config("llama3-8b").replace(remat=False))
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_slots=4, max_len=32)
+    assert eng._packed and eng.tracer.enabled
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 4 + i)
+                    .astype(np.int32),
+                    max_new_tokens=3)
+            for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    assert eng.tracer.open_count() == 0
+    spans = eng.tracer.recorder.spans()
+    assert validate_request_timelines(spans) == 5
+    for tid, tl in request_timelines(spans).items():
+        names = [s.name for s in tl]
+        assert names[0] == "queue" and names[-1] == "retire"
+        ret = tl[-1]
+        service = sum(s.dur for s in tl if s.name != "retire")
+        assert service == pytest.approx(ret.attrs["latency_s"], abs=1e-6)
+    step_keys = list(eng.metrics.snapshot()["step_latency_ms"])
+    assert any(k.startswith("serve/decode|") for k in step_keys)
+    assert any(k.startswith("serve/packed_prefill|") for k in step_keys)
+    assert validate_chrome_trace(chrome_trace(eng.tracer)) == \
+        len(spans)
+
+
+def test_vision_engine_traced_run_satisfies_invariants():
+    import jax
+
+    import repro.models as M
+    from repro.configs import smoke_config
+    from repro.serving.vision import VisionEngine, synth_requests
+
+    cfg = _traced(smoke_config("vit-tiny").replace(remat=False))
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    eng = VisionEngine(cfg, params, batch_buckets=(1, 2), max_wait_s=0.0)
+    reqs = synth_requests(cfg, 4, seed=2)
+    for r in reqs:
+        eng.submit(r)
+        eng.step()
+    eng.flush()
+    assert eng.tracer.open_count() == 0
+    spans = eng.tracer.recorder.spans()
+    assert validate_request_timelines(spans) == 4
+    for tid, tl in request_timelines(spans).items():
+        assert [s.name for s in tl] == ["queue", "infer", "retire"]
+        service = sum(s.dur for s in tl if s.name != "retire")
+        assert service == pytest.approx(tl[-1].attrs["latency_s"],
+                                        abs=1e-6)
+    step_keys = list(eng.metrics.snapshot()["step_latency_ms"])
+    assert any(k.startswith("classify|b=") for k in step_keys)
+
+
+def test_disabled_engine_has_null_tracer_and_no_step_hists():
+    import jax
+
+    import repro.models as M
+    from repro.configs import smoke_config
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg = smoke_config("llama3-8b").replace(remat=False)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=32)
+    assert eng.tracer is NULL_TRACER and not eng._step_times
+    rng = np.random.default_rng(1)
+    req = Request(uid=0, prompt=rng.integers(0, cfg.vocab_size, 5)
+                  .astype(np.int32), max_new_tokens=2)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert eng.metrics.snapshot()["step_latency_ms"] == {}
+    assert eng.tracer.recorder.total == 0
