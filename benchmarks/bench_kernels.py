@@ -33,6 +33,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import AutotuneConfig
 from repro.kernels import autotune
+try:  # script sibling vs repo-root namespace import
+    from benchmarks.provenance import stamp
+except ImportError:
+    from provenance import stamp
 
 
 def gmm_shapes(smoke: bool):
@@ -167,7 +171,7 @@ def main() -> None:
         "all_never_slower": ok,
     }
     with open(args.out, "w") as f:
-        json.dump(out, f, indent=1)
+        json.dump(stamp(out, "bench_kernels"), f, indent=1)
     print(f"wrote {args.out}: {len(rows)} shapes, mode={out['mode']}, "
           f"all_never_slower={ok}")
     if args.table:

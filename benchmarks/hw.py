@@ -1,9 +1,21 @@
-"""Target-hardware constants (TPU v5e-class) for roofline terms."""
+"""Target-hardware constants (TPU v5e-class) for roofline terms.
 
-PEAK_FLOPS_BF16 = 197e12  # per chip
-PEAK_FLOPS_INT8 = 394e12  # MXU int8 path (2x bf16)
-HBM_BW = 819e9  # bytes/s per chip
-ICI_BW = 50e9  # bytes/s per link (~per chip for ring collectives)
-DCN_BW = 25e9  # bytes/s per host across pods (assumed)
-CHIPS_SINGLE_POD = 256
-CHIPS_MULTI_POD = 512
+Compatibility shim: the canonical constants now live in
+``repro.analysis.hw`` so serving code can use them without path hacks.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.hw import (  # noqa: F401,E402
+    CHIPS_MULTI_POD,
+    CHIPS_SINGLE_POD,
+    DCN_BW,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    PEAK_FLOPS_INT8,
+    device_peaks,
+    pick_int8,
+)

@@ -1,0 +1,78 @@
+"""Provenance stamping for BENCH_* artifacts.
+
+Every benchmark JSON gets a ``provenance`` block — schema version, git
+SHA, timestamp, device kind/count, backend versions — so two artifacts
+can be matched (same schema + device kind) and diffed (tools/bench_diff.py)
+across CI runs. Without it the BENCH trajectory is a pile of uncomparable
+numbers, which is why it sat empty through PR 7.
+
+Import works both ways benchmarks run: as a script sibling
+(``from provenance import stamp``) and as a namespace package from the
+repo root (``from benchmarks.provenance import stamp``).
+"""
+from __future__ import annotations
+
+import datetime
+import os
+import subprocess
+import time
+
+# Bump when a benchmark's report layout changes incompatibly; bench_diff
+# refuses to compare artifacts across schema versions.
+SCHEMA_VERSION = 1
+
+
+def git_sha() -> str:
+    """Current commit SHA: git first, CI env fallback, else "unknown"."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except Exception:
+        pass
+    return os.environ.get("GITHUB_SHA", "unknown")
+
+
+def _device_info() -> dict:
+    try:
+        import jax
+
+        devs = jax.devices()
+        return {
+            "backend": jax.default_backend(),
+            "device_kind": devs[0].device_kind if devs else "unknown",
+            "device_count": len(devs),
+            "jax_version": jax.__version__,
+        }
+    except Exception:
+        return {"backend": "unknown", "device_kind": "unknown",
+                "device_count": 0, "jax_version": "unknown"}
+
+
+def provenance(bench: str, schema: int = SCHEMA_VERSION) -> dict:
+    """The provenance block for one benchmark artifact."""
+    now = time.time()
+    block = {
+        "bench": bench,
+        "schema_version": schema,
+        "git_sha": git_sha(),
+        "timestamp": now,
+        "timestamp_iso": datetime.datetime.fromtimestamp(
+            now, datetime.timezone.utc).isoformat(),
+    }
+    block.update(_device_info())
+    env = {k: os.environ[k] for k in
+           ("REPRO_PALLAS", "JAX_PLATFORMS", "XLA_FLAGS")
+           if k in os.environ}
+    if env:
+        block["env"] = env
+    return block
+
+
+def stamp(report: dict, bench: str, schema: int = SCHEMA_VERSION) -> dict:
+    """Attach the provenance block to a report (in place, and returned)."""
+    report["provenance"] = provenance(bench, schema)
+    return report

@@ -28,6 +28,10 @@ from __future__ import annotations
 import argparse
 import json
 import time
+try:  # script sibling vs repo-root namespace import
+    from benchmarks.provenance import stamp
+except ImportError:
+    from provenance import stamp
 
 
 def measure_single_replica_fps(cfg, params, bucket: int, n: int) -> float:
@@ -212,6 +216,7 @@ def main() -> None:
         "aggregate": agg,
         "fps": agg["fps"],
     }
+    stamp(report, "serve_autoscale")
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {args.out} ({len(trace)} trace samples, "

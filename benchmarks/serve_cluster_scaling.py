@@ -29,6 +29,10 @@ import re
 import subprocess
 import sys
 import time
+try:  # script sibling vs repo-root namespace import
+    from benchmarks.provenance import stamp
+except ImportError:
+    from provenance import stamp
 
 DEVICE_FLAG = "--xla_force_host_platform_device_count"
 
@@ -206,6 +210,7 @@ def main() -> None:
         "rows": rows,
     }
     if args.out:
+        stamp(report, "serve_cluster_scaling")
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1)
         print(f"wrote {args.out} ({len(rows)} rows)")

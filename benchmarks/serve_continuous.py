@@ -39,6 +39,10 @@ import time
 import numpy as np
 
 from traffic_o1 import bursty_arrivals
+try:  # script sibling vs repo-root namespace import
+    from benchmarks.provenance import stamp
+except ImportError:
+    from provenance import stamp
 
 
 def _mixed_lengths(n: int, lo: int, hi: int) -> list:
@@ -233,6 +237,7 @@ def main() -> None:
         "checks": checks,
         "fps": scenarios["packed"]["tok_s"],
     }
+    stamp(report, "serve_continuous")
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {args.out}")

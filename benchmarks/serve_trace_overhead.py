@@ -32,6 +32,10 @@ import sys
 import time
 
 import numpy as np
+try:  # script sibling vs repo-root namespace import
+    from benchmarks.provenance import stamp
+except ImportError:
+    from provenance import stamp
 
 
 def _mixed_lengths(n: int, lo: int, hi: int) -> list:
@@ -252,6 +256,7 @@ def main() -> None:
         "checks": checks,
         "fps": runs["on"]["tok_s"],
     }
+    stamp(report, "serve_trace_overhead")
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {args.out}")

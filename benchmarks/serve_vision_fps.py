@@ -30,6 +30,10 @@ import repro.models as M
 from repro.configs import PAPER_ARCHS, get_shape, smoke_config
 from repro.core.quant.ptq import calibrate_model, ptq_model, quantized_config
 from repro.serving.vision import VisionEngine, synth_requests
+try:  # script sibling vs repo-root namespace import
+    from benchmarks.provenance import stamp
+except ImportError:
+    from provenance import stamp
 
 
 def build_variants(cfg):
@@ -167,6 +171,7 @@ def run(arch: str = "m3vit-tiny", smoke: bool = False,
         "rows": rows,
     }
     if out:
+        stamp(report, "serve_vision_fps")
         with open(out, "w") as f:
             json.dump(report, f, indent=1)
         print(f"wrote {out} ({len(rows)} rows)")

@@ -1,0 +1,11 @@
+"""Offline + live program analysis: HLO cost modelling and hardware peaks.
+
+``repro.analysis.hlo``  — call-graph-aware optimized-HLO roofline inputs
+                          (moved from ``benchmarks/hlo_analysis.py``, which
+                          re-exports for script compatibility).
+``repro.analysis.hw``   — target-hardware constants and per-device-kind
+                          peak lookup (canonical home of ``benchmarks/hw.py``).
+"""
+from repro.analysis import hlo, hw
+
+__all__ = ["hlo", "hw"]

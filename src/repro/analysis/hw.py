@@ -1,0 +1,90 @@
+"""Target-hardware constants and per-device-kind peak lookup.
+
+Canonical home of the roofline constants (``benchmarks/hw.py`` re-exports
+from here).  The defaults describe the TPU v5e-class target the roofline
+sections of DESIGN.md argue against; ``device_peaks()`` resolves the peaks
+for the devices actually attached, falling back to the target constants —
+flagged ``assumed=True`` — when the platform is unknown (e.g. the CPU
+backend used in CI).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+PEAK_FLOPS_BF16 = 197e12  # per chip
+PEAK_FLOPS_INT8 = 394e12  # MXU int8 path (2x bf16)
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (~per chip for ring collectives)
+DCN_BW = 25e9  # bytes/s per host across pods (assumed)
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512
+
+# Known device kinds -> (bf16 peak, int8 peak, HBM BW, ICI BW), per chip.
+# ``device.device_kind`` strings are matched case-insensitively by prefix.
+_KNOWN_PEAKS = {
+    "tpu v5e": (197e12, 394e12, 819e9, 50e9),
+    "tpu v5 lite": (197e12, 394e12, 819e9, 50e9),
+    "tpu v4": (275e12, 275e12, 1228e9, 100e9),
+}
+
+
+def device_peaks(device=None, *, use_int8: bool = False) -> dict:
+    """Resolve roofline peaks for ``device`` (default: first local device).
+
+    Returns a dict with ``peak_flops`` already selected for the bf16/int8
+    datapath (``use_int8``), plus the raw per-precision peaks, bandwidths,
+    the device kind, and ``assumed`` marking whether the numbers are real
+    for this device or the TPU-target defaults (CPU CI runs).
+    """
+    kind = "unknown"
+    if device is None:
+        try:
+            import jax
+
+            device = jax.devices()[0]
+        except Exception:  # pragma: no cover - no backend at all
+            device = None
+    if device is not None:
+        kind = str(getattr(device, "device_kind", "unknown")).lower()
+    match = None
+    for prefix, peaks in _KNOWN_PEAKS.items():
+        if kind.startswith(prefix):
+            match = peaks
+            break
+    if match is None:
+        match = (PEAK_FLOPS_BF16, PEAK_FLOPS_INT8, HBM_BW, ICI_BW)
+        assumed = True
+    else:
+        assumed = False
+    bf16, int8, hbm, ici = match
+    return {
+        "device_kind": kind,
+        "assumed": assumed,
+        "peak_kind": "int8" if use_int8 else "bf16",
+        "peak_flops": int8 if use_int8 else bf16,
+        "peak_flops_bf16": bf16,
+        "peak_flops_int8": int8,
+        "hbm_bw": hbm,
+        "ici_bw": ici,
+    }
+
+
+def pick_int8(params=None, quant_enabled: Optional[bool] = None) -> bool:
+    """Should the MFU denominator use the int8 peak?
+
+    True when quantization is enabled in config or any materialized weight
+    leaf is int8 (the post-PR-3 materialized int8 path).
+    """
+    if quant_enabled:
+        return True
+    if params is not None:
+        try:
+            import jax
+            import jax.numpy as jnp
+
+            for leaf in jax.tree_util.tree_leaves(params):
+                if getattr(leaf, "dtype", None) == jnp.int8:
+                    return True
+        except Exception:
+            return False
+    return False

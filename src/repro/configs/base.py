@@ -177,6 +177,32 @@ class TraceConfig:
 
 
 @dataclass(frozen=True)
+class IntrospectConfig:
+    """Live performance-introspection knobs (serving/introspect.py,
+    DESIGN.md section 12).
+
+    With ``enable`` on (the default), ``warmup()`` captures a per-program
+    ``ProgramCost`` row (cost_analysis + memory_analysis + call-graph HLO
+    metrics, analytic fallback marked ``estimated``) for every AOT program,
+    attaches a memory-watermark probe, and — for MoE configs — runs the
+    windowed expert-routing health monitor that emits ``expert_drift``
+    events into the engine's ``EventLog``. Capture happens entirely at
+    warmup; the only steady-state cost is the drift monitor's histogram
+    accumulation, bounded by the trace-overhead contract."""
+
+    enable: bool = True
+    # routed tokens per drift-monitor window; a window closes (and drift is
+    # evaluated) once this many (token, expert) routings accumulate
+    drift_window_tokens: int = 4096
+    # total-variation distance (L1/2) between a closed window's occupancy
+    # and the reference occupancy above which an expert_drift event fires
+    drift_threshold: float = 0.25
+    # EMA weight folding each non-drifting window into the reference
+    # occupancy (slow tracking, so gradual shift is not repeatedly flagged)
+    baseline_alpha: float = 0.1
+
+
+@dataclass(frozen=True)
 class ContinuousBatchingConfig:
     """Continuous-batching knobs for ``ServeEngine`` (DESIGN.md section 10).
 
@@ -239,6 +265,8 @@ class ModelConfig:
         default_factory=ContinuousBatchingConfig)
     # serving tracing/profiling (serving/trace.py; DESIGN.md §11)
     trace: TraceConfig = field(default_factory=TraceConfig)
+    # live performance introspection (serving/introspect.py; DESIGN.md §12)
+    introspect: IntrospectConfig = field(default_factory=IntrospectConfig)
     dtype: str = "bfloat16"
     # training knobs
     remat: bool = True

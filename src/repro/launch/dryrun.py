@@ -172,9 +172,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     text = compiled.as_text()
     colls = collective_stats(text)
     # call-graph-aware metrics (scan trip counts applied — cost_analysis
-    # counts while bodies once; see benchmarks/hlo_analysis.py)
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
-    from benchmarks.hlo_analysis import analyze
+    # counts while bodies once; see repro/analysis/hlo.py)
+    from repro.analysis.hlo import analyze
 
     deep = analyze(text)
     rec = {

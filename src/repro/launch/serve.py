@@ -17,11 +17,19 @@ Observability (DESIGN.md section 11): ``--trace-out`` writes a Chrome-trace
 cluster snapshot. Both serving paths report through the same
 ``ClusterMetrics.snapshot()`` so every tracked counter appears in one
 consistent summary.
+
+Live introspection (DESIGN.md section 12): ``--metrics-port`` serves
+``/metrics`` (Prometheus), ``/healthz`` and ``/snapshot`` over HTTP for
+the duration of the run; ``--metrics-interval N`` rewrites
+``--metrics-out`` every N seconds so a crashed run still leaves its
+last metrics snapshot behind.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
+import threading
 import time
 
 import jax
@@ -33,7 +41,39 @@ from repro.serving.cluster import ServingCluster
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.events import EventLog
 from repro.serving.metrics import ClusterMetrics
+from repro.serving.metrics_server import MetricsServer, cluster_healthz
 from repro.serving.trace import write_chrome_trace
+
+
+class _PeriodicMetricsWriter(threading.Thread):
+    """Rewrite ``--metrics-out`` every ``interval`` seconds during the run
+    (atomic tmp+rename), so a crashed or killed run still leaves its last
+    metrics snapshot behind instead of nothing at all."""
+
+    def __init__(self, cm, path: str, interval: float) -> None:
+        super().__init__(daemon=True, name="metrics-writer")
+        self._cm = cm
+        self._path = path
+        self._interval = interval
+        self._stop = threading.Event()
+        self.writes = 0
+
+    def write_once(self) -> None:
+        try:
+            tmp = self._path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(self._cm.export_prometheus())
+            os.replace(tmp, self._path)
+            self.writes += 1
+        except Exception:
+            pass  # a failed periodic write must not kill the run
+
+    def run(self) -> None:
+        while not self._stop.wait(self._interval):
+            self.write_once()
+
+    def stop(self) -> None:
+        self._stop.set()
 
 
 def _fmt_ms(d: dict) -> str:
@@ -120,6 +160,14 @@ def main() -> None:
     ap.add_argument("--metrics-out", default=None,
                     help="write the final cluster snapshot as Prometheus "
                          "text exposition here")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve live /metrics, /healthz and /snapshot over "
+                         "HTTP on this port for the duration of the run "
+                         "(0 picks a free port)")
+    ap.add_argument("--metrics-interval", type=float, default=None,
+                    help="with --metrics-out, rewrite the metrics file "
+                         "every N seconds during the run instead of only "
+                         "at exit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -144,46 +192,68 @@ def main() -> None:
         for uid in range(args.requests)
     ]
 
+    # Build the serving stack and its metrics roll-up BEFORE the run so a
+    # live --metrics-port endpoint and --metrics-interval writer observe
+    # the run in flight, not just the final snapshot.
+    cluster = engine = None
     if args.replicas >= 2:
         cluster = ServingCluster(cfg, params, replicas=args.replicas,
                                  engine="lm", batch_slots=args.slots,
                                  max_len=args.max_len, events=events)
         cluster.warmup()
-        if args.autotune:
-            from repro.kernels import autotune
-
-            print(autotune.summary())
-        t0 = time.perf_counter()
-        for r in reqs:
-            cluster.submit(r)
-            cluster.step()
-        cluster.flush()
-        dt = time.perf_counter() - t0
-        total = args.requests * args.new_tokens
-        print(f"generated {total} tokens in {dt:.2f}s "
-              f"({total / dt:.1f} tok/s, replicas={cluster.num_replicas}, "
-              f"quantized={args.quantized})")
         cm = cluster.metrics
-        recorders = cluster.flight_recorders()
+        healthz = lambda: cluster_healthz(cluster)  # noqa: E731
     else:
         engine = ServeEngine(cfg, params, batch_slots=args.slots,
                              max_len=args.max_len, events=events)
         engine.warmup()
-        if args.autotune:
-            from repro.kernels import autotune
-
-            print(autotune.summary())
-        for r in reqs:
-            engine.submit(r)
-        t0 = time.perf_counter()
-        engine.run_until_drained()
-        dt = time.perf_counter() - t0
-        total = args.requests * args.new_tokens
-        print(f"generated {total} tokens in {dt:.2f}s "
-              f"({total / dt:.1f} tok/s, quantized={args.quantized})")
         # the single-engine path reports through the same ClusterMetrics
         # roll-up as the cluster path: one summary schema, every counter
         cm = ClusterMetrics([engine.metrics])
+        healthz = None
+    if args.autotune:
+        from repro.kernels import autotune
+
+        print(autotune.summary())
+
+    server = None
+    if args.metrics_port is not None:
+        server = MetricsServer(cm.export_prometheus, healthz_fn=healthz,
+                               snapshot_fn=cm.snapshot,
+                               port=args.metrics_port)
+        server.start()
+        print(f"metrics endpoint: {server.url}/metrics")
+    writer = None
+    if args.metrics_interval and args.metrics_out:
+        writer = _PeriodicMetricsWriter(cm, args.metrics_out,
+                                        args.metrics_interval)
+        writer.start()
+
+    try:
+        t0 = time.perf_counter()
+        if cluster is not None:
+            for r in reqs:
+                cluster.submit(r)
+                cluster.step()
+            cluster.flush()
+        else:
+            for r in reqs:
+                engine.submit(r)
+            engine.run_until_drained()
+        dt = time.perf_counter() - t0
+    finally:
+        if writer is not None:
+            writer.stop()
+        if server is not None:
+            server.stop()
+    total = args.requests * args.new_tokens
+    extra = (f"replicas={cluster.num_replicas}, " if cluster is not None
+             else "")
+    print(f"generated {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s, {extra}quantized={args.quantized})")
+    if cluster is not None:
+        recorders = cluster.flight_recorders()
+    else:
         recorders = ({engine.tracer.label: engine.tracer.recorder}
                      if engine.tracer.enabled else {})
 

@@ -2,11 +2,24 @@ from repro.serving.autoscaler import Autoscaler
 from repro.serving.cluster import ServingCluster, replica_meshes
 from repro.serving.engine import Request, ServeEngine, build_serve_step
 from repro.serving.events import EventLog, read_jsonl
+from repro.serving.introspect import (
+    ExpertHealthMonitor,
+    capture_cost,
+    memory_watermark,
+    normalize_cost_analysis,
+    parse_program_key,
+)
 from repro.serving.metrics import (
     ClusterMetrics,
     EngineMetrics,
     LatencyTracker,
     hist_percentile,
+    program_perf,
+)
+from repro.serving.metrics_server import (
+    MetricsServer,
+    cluster_healthz,
+    serve_cluster_metrics,
 )
 from repro.serving.replica import EngineReplica
 from repro.serving.scheduler import Backpressure, MicroBatch, MicroBatcher
@@ -29,8 +42,10 @@ __all__ = [
     "EngineMetrics",
     "EngineReplica",
     "EventLog",
+    "ExpertHealthMonitor",
     "FlightRecorder",
     "LatencyTracker",
+    "MetricsServer",
     "MicroBatch",
     "MicroBatcher",
     "Request",
@@ -41,11 +56,18 @@ __all__ = [
     "VisionEngine",
     "VisionRequest",
     "build_serve_step",
+    "capture_cost",
     "chrome_trace",
+    "cluster_healthz",
     "hist_percentile",
     "make_tracer",
+    "memory_watermark",
+    "normalize_cost_analysis",
+    "parse_program_key",
+    "program_perf",
     "read_jsonl",
     "replica_meshes",
+    "serve_cluster_metrics",
     "synth_requests",
     "validate_chrome_trace",
     "validate_request_timelines",

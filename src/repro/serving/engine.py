@@ -212,7 +212,12 @@ class ServeEngine:
         # ``self.tracer.enabled`` so the disabled path is one attr read
         self.tracer = make_tracer(cfg.trace, clock=clock)
         self.events = events
-        self._step_times = self.tracer.enabled and cfg.trace.step_times
+        # per-program step timing feeds two consumers: trace span records
+        # (when tracing is on) and the MFU/roofline join (introspection,
+        # on by default — its cost is one clock read + histogram insert
+        # per dispatch, bounded by benchmarks/serve_introspect.py)
+        self._step_times = ((self.tracer.enabled and cfg.trace.step_times)
+                            or cfg.introspect.enable)
         self.mod = models.module_for(cfg)
         self.B = batch_slots
         self.max_len = max_len
@@ -229,6 +234,21 @@ class ServeEngine:
         self.metrics = EngineMetrics(
             num_experts=cfg.moe.num_experts if self._with_stats else 0,
             clock=clock)
+        self.expert_health = None
+        if cfg.introspect.enable and self._with_stats:
+            from repro.serving.introspect import ExpertHealthMonitor
+
+            # fed by add_expert_tokens outside the metrics lock; the drift
+            # hook resolves self.metrics at fire time so the counter lands
+            # in whichever EngineMetrics is current after a reset
+            self.expert_health = ExpertHealthMonitor(
+                cfg.moe.num_experts,
+                window_tokens=cfg.introspect.drift_window_tokens,
+                drift_threshold=cfg.introspect.drift_threshold,
+                baseline_alpha=cfg.introspect.baseline_alpha,
+                events=events, label="lm", clock=clock,
+                on_drift=lambda info: self.metrics.inc("expert_drift"))
+            self.metrics.expert_health = self.expert_health
         self._ep = (cfg.moe is not None
                     and cfg.moe.moe_exec == "expert_parallel")
         if self._ep:
@@ -367,9 +387,13 @@ class ServeEngine:
 
     def reset_metrics(self) -> None:
         """Fresh ``EngineMetrics`` (cluster replica leave — the old one was
-        folded into the retired accumulator)."""
+        folded into the retired accumulator). The static introspection
+        surface (ProgramCost rows, peaks, memory probe, health monitor)
+        carries over: it describes the compiled programs, not load."""
+        old = self.metrics
         self.metrics = EngineMetrics(
-            num_experts=self.metrics.expert_tokens.size, clock=self._clock)
+            num_experts=old.expert_tokens.size, clock=self._clock)
+        self.metrics.adopt_static(old)
 
     # -- AOT program cache (DESIGN.md section 10) ----------------------------
 
@@ -657,6 +681,7 @@ class ServeEngine:
             out = exe(self.params, self._tok, self.cache, index)
             self._tok, self.cache = out[0], out[1]
             jax.block_until_ready(jax.tree.leaves(self.cache)[0])
+            self._install_introspection(dict(self._programs))
             return
         tokens = jnp.zeros((self.B, 1), jnp.int32)
         index = jnp.asarray(self.pos, jnp.int32)
@@ -664,6 +689,35 @@ class ServeEngine:
             out = self._decode(self.params, tokens, self.cache, index)
         self.cache = out[1]
         jax.block_until_ready(jax.tree.leaves(self.cache)[0])
+        # the grouped path runs its decode through plain jit (no AOT
+        # grid) — lower the decode program once, purely to read its cost
+        # surfaces, so this engine's decode key still gets a ProgramCost row
+        programs: Dict[str, Any] = {}
+        if self.cfg.introspect.enable:
+            try:
+                sds = jax.ShapeDtypeStruct
+                cache_sds = jax.tree.map(
+                    lambda x: sds(x.shape, x.dtype), self.cache)
+                with self._scope():
+                    programs[self._program_key("decode")] = self._decode.lower(
+                        self.params, sds((self.B, 1), jnp.int32), cache_sds,
+                        sds((self.B,), jnp.int32)).compile()
+            except Exception:
+                programs[self._program_key("decode")] = None
+        self._install_introspection(programs)
+
+    def _install_introspection(self, programs: Dict[str, Any]) -> None:
+        """ProgramCost capture + peaks + memory probe (DESIGN.md §12).
+        Best-effort by contract: a backend with no cost surfaces degrades
+        to analytic estimates and never fails the warmup."""
+        if not self.cfg.introspect.enable:
+            return
+        from repro.serving import introspect
+
+        introspect.install(
+            self.metrics, cfg=self.cfg, programs=programs,
+            params=self.params, cache=self.cache,
+            devices=list(self._mesh_eff.devices.flat))
 
     def submit(self, req: Request) -> None:
         if len(req.prompt) > self._prompt_limit:

@@ -1,0 +1,428 @@
+"""Live performance introspection for the serving stack (DESIGN.md §12).
+
+Answers the north-star question — "are we running as fast as the hardware
+allows?" — *while serving* instead of in an offline dry-run:
+
+  * ``ProgramCost`` — per-AOT-program resource accounting captured at
+    ``warmup()`` from ``compiled.cost_analysis()`` + ``memory_analysis()``
+    + the call-graph-aware ``repro.analysis.hlo`` analyzer, keyed by the
+    same ``serve/<prog>|B=..|S=..`` keys as ``EngineMetrics.step_latency``
+    so cost rows join measured step-latency histograms into live MFU,
+    achieved-HBM-bandwidth, and a compute/memory/collective roofline
+    classification (the join itself lives in serving/metrics.py).
+  * Backends differ in what they expose (``cost_analysis`` returns a
+    list on CPU, a dict elsewhere, sometimes nothing at all), so every
+    capture degrades field-by-field to an **analytic estimate** marked
+    ``estimated=True`` — introspection must never fail a warmup.
+  * Memory watermarks — device ``memory_stats()`` where the backend has
+    it, analytic param-bytes + K/V-cache-bytes + peak-temp fallback on
+    hosts (CPU CI) that answer ``None``.
+  * ``ExpertHealthMonitor`` — windowed occupancy entropy / hot-cold skew
+    over the routed-token stream, emitting ``expert_drift`` events into
+    the serving ``EventLog`` when a window's occupancy moves more than a
+    total-variation threshold from the reference: the observability
+    precursor to the ROADMAP's expert-rebalancing item.
+
+Everything here is host-side and warmup-time; the only steady-state cost
+is the drift monitor's histogram accumulation (bounded alongside tracing
+by ``benchmarks/serve_introspect.py``).
+"""
+from __future__ import annotations
+
+import math
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.analysis import hlo, hw
+
+# ProgramCost rows are plain dicts with exactly these keys (DESIGN.md §12).
+# -1 marks "backend did not say"; ``flops``/``hbm_bytes`` are the best
+# estimates the MFU/roofline join consumes, preferring call-graph HLO
+# numbers (scan trip counts applied) over raw cost_analysis over analytic.
+PROGRAM_COST_FIELDS = (
+    "flops", "dot_flops", "cost_flops", "hbm_bytes", "convert_bytes",
+    "collective_bytes", "argument_bytes", "output_bytes", "temp_bytes",
+    "generated_code_bytes", "estimated", "source",
+)
+
+
+def parse_program_key(key: str) -> Tuple[str, Dict[str, int]]:
+    """Split an AOT program key (``serve/decode|B=4|S=512`` /
+    ``classify|b=8``) into its program name and integer k=v fields."""
+    parts = key.split("|")
+    kv: Dict[str, int] = {}
+    for p in parts[1:]:
+        if "=" not in p:
+            continue
+        k, _, v = p.partition("=")
+        try:
+            kv[k] = int(v)
+        except ValueError:
+            pass
+    return parts[0], kv
+
+
+def normalize_cost_analysis(raw) -> Dict[str, float]:
+    """Flatten the backend-dependent ``cost_analysis()`` return into one
+    ``{metric: float}`` dict: CPU answers a list of per-executable dicts,
+    TPU a plain dict, some backends ``None`` or ``[]``. Non-numeric values
+    drop; anything unrecognizable answers ``{}`` (degrade, never raise)."""
+    if isinstance(raw, (list, tuple)):
+        raw = raw[0] if raw else {}
+    if not isinstance(raw, dict):
+        return {}
+    out: Dict[str, float] = {}
+    for k, v in raw.items():
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[str(k)] = float(v)
+    return out
+
+
+def program_cost_from_compiled(compiled) -> Optional[dict]:
+    """Best-effort ProgramCost row from a compiled executable's own
+    introspection surfaces. Returns None when *no* surface yielded
+    anything (caller falls back to the analytic model)."""
+    row = {
+        "flops": -1.0, "dot_flops": 0.0, "cost_flops": -1.0,
+        "hbm_bytes": -1.0, "convert_bytes": 0.0, "collective_bytes": -1.0,
+        "argument_bytes": -1, "output_bytes": -1, "temp_bytes": -1,
+        "generated_code_bytes": -1, "estimated": False, "source": "",
+    }
+    sources: List[str] = []
+
+    try:
+        cost = normalize_cost_analysis(compiled.cost_analysis())
+    except Exception:
+        cost = {}
+    if cost:
+        sources.append("cost_analysis")
+        row["cost_flops"] = cost.get("flops", -1.0)
+        row["hbm_bytes"] = cost.get("bytes accessed", -1.0)
+
+    mem = None
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        mem = None
+    if mem is not None:
+        got_mem = False
+        for field, attr in (
+            ("argument_bytes", "argument_size_in_bytes"),
+            ("output_bytes", "output_size_in_bytes"),
+            ("temp_bytes", "temp_size_in_bytes"),
+            ("generated_code_bytes", "generated_code_size_in_bytes"),
+        ):
+            v = getattr(mem, attr, None)
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                row[field] = int(v)
+                got_mem = True
+        if got_mem:
+            sources.append("memory_analysis")
+
+    deep: dict = {}
+    try:
+        text = compiled.as_text()
+        if text:
+            deep = hlo.analyze(text)
+    except Exception:
+        deep = {}
+    if deep:
+        sources.append("hlo")
+        row["dot_flops"] = float(deep.get("dot_flops", 0))
+        row["convert_bytes"] = float(deep.get("convert_bytes", 0))
+        row["collective_bytes"] = float(deep.get("collective_bytes", 0))
+        hbm = float(deep.get("hbm_bytes", 0))
+        if hbm > 0:
+            # fusion-boundary traffic with scan trip counts applied beats
+            # "bytes accessed" (which counts while bodies once)
+            row["hbm_bytes"] = hbm
+
+    if not sources:
+        return None
+    if row["dot_flops"] > 0:
+        row["flops"] = row["dot_flops"]
+    elif row["cost_flops"] > 0:
+        row["flops"] = row["cost_flops"]
+    row["source"] = "+".join(sources)
+    return row
+
+
+def analytic_program_cost(key: str, cfg=None, *, param_bytes: int = 0,
+                          cache_bytes: int = 0) -> dict:
+    """Analytic ProgramCost fallback (``estimated=True``) from the config's
+    derived sizes and the program key's shape fields — the serving-grid
+    analogue of ``benchmarks/roofline.model_flops``. Deliberately rough:
+    it exists so the MFU join has *a* denominator on backends whose
+    executables expose nothing, and is always flagged."""
+    prog, kv = parse_program_key(key)
+    active = d = n_layers = q_dim = 0
+    if cfg is not None:
+        try:
+            active = cfg.active_param_count()
+            d = cfg.d_model
+            n_layers = cfg.num_layers
+            q_dim = cfg.attn.q_dim if cfg.attn is not None else d
+        except Exception:
+            pass
+    tokens = ctx = 0
+    if "decode" in prog:
+        tokens = kv.get("B", 1)
+        ctx = kv.get("S", 0)
+    elif "packed_prefill" in prog:
+        tokens = kv.get("bucket", 1)
+        ctx = tokens
+    elif "grouped_prefill" in prog:
+        tokens = kv.get("L", 1) * max(1, kv.get("n", 1))
+        ctx = kv.get("L", 1)
+    elif prog == "classify":
+        seq = cfg.image_tokens if cfg is not None and cfg.image_tokens else 1
+        tokens = kv.get("b", 1) * seq
+        ctx = seq
+    else:
+        tokens = kv.get("B", kv.get("b", 1))
+        ctx = kv.get("S", 0)
+    # 2*active matmul flops per token + attention score/value contractions
+    flops = 2.0 * active * tokens + 4.0 * q_dim * ctx * tokens * n_layers
+    # weights stream once per dispatch; decode re-reads the K/V cache
+    hbm = float(param_bytes + cache_bytes) + 4.0 * d * tokens
+    return {
+        "flops": flops if flops > 0 else -1.0,
+        "dot_flops": 0.0, "cost_flops": -1.0,
+        "hbm_bytes": hbm if hbm > 0 else -1.0,
+        "convert_bytes": 0.0, "collective_bytes": 0.0,
+        "argument_bytes": int(param_bytes), "output_bytes": -1,
+        "temp_bytes": -1, "generated_code_bytes": -1,
+        "estimated": True, "source": "analytic",
+    }
+
+
+def capture_cost(compiled, key: str, cfg=None, *, param_bytes: int = 0,
+                 cache_bytes: int = 0) -> dict:
+    """ProgramCost for one program: executable introspection first,
+    analytic hole-filling second. Never raises — the contract that lets
+    ``warmup()`` call this unconditionally."""
+    row = None
+    if compiled is not None:
+        try:
+            row = program_cost_from_compiled(compiled)
+        except Exception:
+            row = None
+    est = analytic_program_cost(key, cfg, param_bytes=param_bytes,
+                                cache_bytes=cache_bytes)
+    if row is None:
+        return est
+    for field in ("flops", "hbm_bytes"):
+        if row.get(field, -1) is None or row.get(field, -1) <= 0:
+            row[field] = est[field]
+            row["estimated"] = True
+            if "analytic" not in row["source"]:
+                row["source"] = (row["source"] + "+analytic").lstrip("+")
+    return row
+
+
+def tree_bytes(tree) -> int:
+    """Total on-device bytes of a pytree's array leaves (0 for None)."""
+    if tree is None:
+        return 0
+    try:
+        import jax
+
+        return int(sum(int(getattr(x, "nbytes", 0) or 0)
+                       for x in jax.tree_util.tree_leaves(tree)))
+    except Exception:
+        return 0
+
+
+def memory_watermark(devices=None, *, param_bytes: int = 0,
+                     cache_bytes: int = 0,
+                     program_costs: Optional[Dict[str, dict]] = None) -> dict:
+    """Replica memory watermark: real allocator stats summed over the
+    replica's devices when the backend exposes ``memory_stats()`` (TPU/GPU),
+    else the analytic model — resident params + K/V cache + the largest
+    compiled temp arena across the replica's programs — marked estimated."""
+    if devices is None:
+        try:
+            import jax
+
+            devices = jax.local_devices()
+        except Exception:
+            devices = []
+    rows = []
+    for dev in devices:
+        try:
+            s = dev.memory_stats()
+        except Exception:
+            s = None
+        if s:
+            rows.append(s)
+    peak_temp = 0
+    for c in (program_costs or {}).values():
+        t = c.get("temp_bytes", 0)
+        if isinstance(t, (int, float)) and t > 0:
+            peak_temp = max(peak_temp, int(t))
+    out = {
+        "param_bytes": int(param_bytes),
+        "kv_cache_bytes": int(cache_bytes),
+        "peak_temp_bytes": peak_temp,
+        "devices": len(rows) if rows else len(list(devices)),
+    }
+    if rows:
+        out["source"] = "device"
+        out["estimated"] = False
+        out["bytes_in_use"] = sum(int(r.get("bytes_in_use", 0)) for r in rows)
+        out["peak_bytes_in_use"] = sum(
+            int(r.get("peak_bytes_in_use", r.get("bytes_in_use", 0)))
+            for r in rows)
+        out["bytes_limit"] = sum(int(r.get("bytes_limit", 0)) for r in rows)
+        out["watermark_bytes"] = out["peak_bytes_in_use"]
+    else:
+        out["source"] = "analytic"
+        out["estimated"] = True
+        out["watermark_bytes"] = int(param_bytes) + int(cache_bytes) \
+            + peak_temp
+    return out
+
+
+def install(metrics, *, cfg, programs: Dict[str, object], params=None,
+            cache=None, devices=None) -> None:
+    """Attach the whole introspection surface to an ``EngineMetrics``:
+    one ProgramCost row per AOT program, the resolved roofline peaks, and
+    a live memory-watermark probe. Called from ``warmup()``; swallows
+    everything — introspection must never fail a warmup."""
+    try:
+        param_bytes = tree_bytes(params)
+        cache_bytes = tree_bytes(cache)
+        dev = None
+        try:
+            dev = list(devices)[0] if devices else None
+        except Exception:
+            dev = None
+        use_int8 = hw.pick_int8(
+            params, getattr(getattr(cfg, "quant", None), "enable", False))
+        metrics.set_peaks(hw.device_peaks(dev, use_int8=use_int8))
+        for key, exe in programs.items():
+            try:
+                metrics.set_program_cost(
+                    key, capture_cost(exe, key, cfg,
+                                      param_bytes=param_bytes,
+                                      cache_bytes=cache_bytes))
+            except Exception:
+                pass
+        costs = metrics.program_costs  # static after warmup; probe re-reads
+
+        def probe() -> dict:
+            return memory_watermark(devices, param_bytes=param_bytes,
+                                    cache_bytes=cache_bytes,
+                                    program_costs=costs)
+
+        metrics.memory_probe = probe
+        metrics.set_memory(probe())
+    except Exception:
+        pass
+
+
+class ExpertHealthMonitor:
+    """Windowed expert-routing health over the routed-token stream.
+
+    ``update(counts)`` accumulates per-expert routed-token histograms (the
+    same host arrays ``EngineMetrics.add_expert_tokens`` receives). Every
+    ``window_tokens`` routings the window closes: normalized occupancy
+    entropy and the hot/cold skew ratio are computed, and the window's
+    occupancy is compared (total-variation distance, L1/2) against a
+    slowly-tracking reference. Distance above ``drift_threshold`` fires
+    one ``expert_drift`` event into the ``EventLog`` (plus the optional
+    ``on_drift`` hook — engines count it as an ``expert_drift`` metrics
+    counter) and re-baselines, so a regime change is reported once, not
+    on every subsequent window.
+
+    Thread-safe behind its own lock, fed *outside* the metrics lock: the
+    only lock order is monitor -> (events | metrics), never the reverse.
+    """
+
+    def __init__(self, num_experts: int, *, window_tokens: int = 4096,
+                 drift_threshold: float = 0.25, baseline_alpha: float = 0.1,
+                 events=None, label: str = "engine",
+                 on_drift: Optional[Callable[[dict], None]] = None,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self.num_experts = int(num_experts)
+        self.window_tokens = int(window_tokens)
+        self.drift_threshold = float(drift_threshold)
+        self.baseline_alpha = float(baseline_alpha)
+        self.events = events
+        self.label = label
+        self.on_drift = on_drift
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._win = np.zeros(self.num_experts, np.int64)
+        self._ref: Optional[np.ndarray] = None
+        self._last: dict = {}
+        self.windows = 0
+        self.drift_events = 0
+
+    def update(self, counts) -> None:
+        a = np.asarray(counts, np.int64).reshape(-1)
+        if a.size != self.num_experts or self.num_experts == 0:
+            return
+        fire = None
+        with self._lock:
+            self._win += a
+            if int(self._win.sum()) >= self.window_tokens:
+                fire = self._close_window_locked()
+        if fire is not None:
+            if self.events is not None:
+                try:
+                    self.events.emit("expert_drift", t=self._clock(), **fire)
+                except Exception:
+                    pass
+            if self.on_drift is not None:
+                try:
+                    self.on_drift(fire)
+                except Exception:
+                    pass
+
+    def _close_window_locked(self) -> Optional[dict]:
+        total = float(self._win.sum())
+        occ = self._win / total
+        nz = occ[occ > 0]
+        e = self.num_experts
+        entropy = (float(-(nz * np.log(nz)).sum() / math.log(e))
+                   if e > 1 else 1.0)
+        hot = float(occ.max())
+        cold = float(occ.min())
+        skew = hot / max(cold, 1.0 / (e * 1e3))  # floor keeps it finite
+        l1 = (0.5 * float(np.abs(occ - self._ref).sum())
+              if self._ref is not None else 0.0)
+        drifted = self._ref is not None and l1 > self.drift_threshold
+        self.windows += 1
+        self._last = {
+            "entropy": round(entropy, 6),
+            "hot_cold_skew": round(skew, 3),
+            "hot_expert": int(occ.argmax()),
+            "cold_expert": int(occ.argmin()),
+            "l1_vs_ref": round(l1, 6),
+            "window_tokens": int(total),
+        }
+        if self._ref is None or drifted:
+            self._ref = occ
+        else:
+            a = self.baseline_alpha
+            self._ref = (1.0 - a) * self._ref + a * occ
+        self._win[:] = 0
+        if not drifted:
+            return None
+        self.drift_events += 1
+        return dict(self._last, label=self.label)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            out = {
+                "num_experts": self.num_experts,
+                "windows": self.windows,
+                "drift_events": self.drift_events,
+                "drift_threshold": self.drift_threshold,
+            }
+            out.update(self._last)
+            return out

@@ -215,6 +215,23 @@ class EngineMetrics:
         # autotuner-drift item needs. Trackers share the metrics lock, so
         # a snapshot never tears across programs.
         self.step_latency: Dict[str, LatencyTracker] = {}
+        # ProgramCost table (serving/introspect.py, DESIGN.md section 12):
+        # one row per AOT program, same keys as step_latency, captured at
+        # warmup(). Static after capture — snapshot() joins it with the
+        # measured step histograms into per-program MFU / achieved-HBM-BW /
+        # roofline classification.
+        self.program_costs: Dict[str, dict] = {}
+        # resolved roofline peaks ({peak_flops, hbm_bw, ici_bw, ...} from
+        # repro.analysis.hw.device_peaks) — the MFU denominator
+        self.peaks: Optional[dict] = None
+        # live memory-watermark probe (introspect.memory_watermark closure);
+        # snapshot() calls it outside the lock and caches the last answer
+        self.memory_probe: Optional[Callable[[], dict]] = None
+        self._memory: Optional[dict] = None
+        # expert-routing health monitor (introspect.ExpertHealthMonitor),
+        # fed by add_expert_tokens OUTSIDE the metrics lock — the monitor
+        # has its own lock and may call back into inc() on drift
+        self.expert_health = None
         self.expert_tokens = np.zeros(max(0, num_experts), np.int64)
         self._depth_sum = 0
         self._depth_max = 0
@@ -245,6 +262,42 @@ class EngineMetrics:
         with self._lock:
             if a.size and self.expert_tokens.size == a.size:
                 self.expert_tokens += a
+            monitor = self.expert_health
+        if monitor is not None:
+            # outside our lock: the monitor takes its own lock and calls
+            # back into inc() on drift (monitor -> metrics, never reverse)
+            monitor.update(a)
+
+    def set_program_cost(self, key: str, cost: dict) -> None:
+        with self._lock:
+            self.program_costs[key] = cost
+
+    def set_peaks(self, peaks: dict) -> None:
+        with self._lock:
+            self.peaks = peaks
+
+    def set_memory(self, mem: dict) -> None:
+        with self._lock:
+            self._memory = mem
+
+    def adopt_static(self, other: "EngineMetrics") -> None:
+        """Carry another metrics object's *static* introspection surface
+        (ProgramCost rows, peaks, memory probe, health monitor) into this
+        one. Engines call it from ``reset_metrics()``: cost rows describe
+        compiled programs, not accumulated load, so a drained replica that
+        rejoins keeps them without any double-counting."""
+        with other._lock:
+            costs = dict(other.program_costs)
+            peaks = other.peaks
+            probe = other.memory_probe
+            mem = other._memory
+            monitor = other.expert_health
+        with self._lock:
+            self.program_costs.update(costs)
+            self.peaks = peaks if peaks is not None else self.peaks
+            self.memory_probe = probe
+            self._memory = mem
+            self.expert_health = monitor
 
     def record_step(self, key: str, seconds: float) -> None:
         """Record one program dispatch's wall time under its AOT program
@@ -292,10 +345,20 @@ class EngineMetrics:
 
     def snapshot(self) -> dict:
         """The metrics schema (DESIGN.md section 6)."""
+        mem = None
+        probe = self.memory_probe
+        if probe is not None:
+            try:
+                mem = probe()  # device memory_stats outside the lock
+            except Exception:
+                mem = None
         with self._lock:
+            if mem is not None:
+                self._memory = mem
             return self._snapshot_locked()
 
     def _snapshot_locked(self) -> dict:
+        monitor = self.expert_health
         return {
             "counters": dict(self.counters),
             "fps": self.fps,
@@ -310,6 +373,11 @@ class EngineMetrics:
             },
             "step_latency_ms": {k: t.snapshot()
                                 for k, t in sorted(self.step_latency.items())},
+            "program_perf": program_perf(self.program_costs,
+                                         self.step_latency, self.peaks),
+            "memory": self._memory,
+            "expert_health": (monitor.snapshot()
+                              if monitor is not None else None),
             "expert_tokens": self.expert_tokens.tolist(),
             "expert_occupancy": _occupancy_of(self.expert_tokens),
         }
@@ -322,6 +390,91 @@ def _occupancy_of(tokens: np.ndarray) -> List[float]:
     if total == 0:
         return [0.0] * int(tokens.size)
     return [round(float(x), 6) for x in tokens / float(total)]
+
+
+def _occupancy_stats(tokens: np.ndarray) -> Optional[dict]:
+    """Entropy + hot/cold skew of a routed-token histogram — the pooled
+    (whole-run) counterpart of the drift monitor's per-window stats."""
+    total = float(tokens.sum()) if tokens.size else 0.0
+    if total == 0:
+        return None
+    occ = tokens / total
+    nz = occ[occ > 0]
+    e = int(tokens.size)
+    entropy = (float(-(nz * np.log(nz)).sum() / np.log(e))
+               if e > 1 else 1.0)
+    hot, cold = float(occ.max()), float(occ.min())
+    return {
+        "entropy": round(entropy, 6),
+        "hot_cold_skew": round(hot / max(cold, 1.0 / (e * 1e3)), 3),
+        "hot_expert": int(occ.argmax()),
+        "cold_expert": int(occ.argmin()),
+    }
+
+
+def program_perf(costs: Dict[str, dict],
+                 steps: Dict[str, "LatencyTracker"],
+                 peaks: Optional[dict]) -> Dict[str, dict]:
+    """Join the ProgramCost table with measured per-program step-latency
+    histograms (DESIGN.md section 12): per program this yields
+
+      * the roofline terms t_compute = flops/peak_flops, t_memory =
+        hbm_bytes/hbm_bw, t_collective = collective_bytes/ici_bw, with
+        ``bound`` naming the dominant term;
+      * measured MFU = flops / (p50 step seconds * peak_flops) and
+        achieved HBM bandwidth = hbm_bytes / p50 step seconds;
+      * ``roofline_frac`` = roofline-predicted step time over measured
+        p50 (1.0 means the program runs at the hardware limit).
+
+    p50 (not mean) anchors the measured side: step-time distributions are
+    long-tailed (host jitter, retirement interleaving) and MFU should
+    describe the typical dispatch. Rows appear for any key with a cost OR
+    a measurement; the join fields only when both sides exist."""
+    out: Dict[str, dict] = {}
+    pf = float(peaks.get("peak_flops", 0)) if peaks else 0.0
+    bw = float(peaks.get("hbm_bw", 0)) if peaks else 0.0
+    ici = float(peaks.get("ici_bw", 0)) if peaks else 0.0
+    for key in sorted(set(costs) | set(steps)):
+        c = costs.get(key)
+        row: dict = {}
+        flops = hbm = coll = -1.0
+        if c:
+            flops = float(c.get("flops", -1.0))
+            hbm = float(c.get("hbm_bytes", -1.0))
+            coll = float(c.get("collective_bytes", 0.0) or 0.0)
+            row["flops"] = flops
+            row["hbm_bytes"] = hbm
+            row["collective_bytes"] = coll
+            row["estimated"] = bool(c.get("estimated", False))
+            row["source"] = c.get("source", "")
+            t_c = flops / pf if (flops > 0 and pf) else 0.0
+            t_m = hbm / bw if (hbm > 0 and bw) else 0.0
+            t_x = coll / ici if (coll > 0 and ici) else 0.0
+            if t_c or t_m or t_x:
+                terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+                row["t_compute_s"] = t_c
+                row["t_memory_s"] = t_m
+                row["t_collective_s"] = t_x
+                row["bound"] = max(terms, key=terms.get)
+                row["roofline_step_s"] = max(t_c, t_m, t_x)
+        t = steps.get(key)
+        if t is not None and len(t):
+            sec = t.percentile(50)
+            row["steps"] = len(t)
+            row["step_p50_ms"] = round(sec * 1e3, 4)
+            if sec > 0 and c:
+                if flops > 0 and pf:
+                    row["mfu"] = round(flops / sec / pf, 6)
+                if hbm > 0:
+                    row["achieved_hbm_gbps"] = round(hbm / sec / 1e9, 3)
+                    if bw:
+                        row["hbm_util"] = round(hbm / sec / bw, 6)
+                rf = row.get("roofline_step_s", 0.0)
+                if rf > 0:
+                    row["roofline_frac"] = round(rf / sec, 6)
+        if row:
+            out[key] = row
+    return out
 
 
 class ClusterMetrics:
@@ -366,6 +519,11 @@ class ClusterMetrics:
         self._ret_batch = LatencyTracker(maxlen=65536)
         self._ret_queue_wait = LatencyTracker(maxlen=65536)
         self._ret_steps: Dict[str, LatencyTracker] = {}
+        # ProgramCost rows + peaks survive replica churn here: cost rows
+        # are static program properties (no double-count concern), so the
+        # fold just unions keys, preferring measured over estimated rows
+        self._ret_costs: Dict[str, dict] = {}
+        self._ret_peaks: Optional[dict] = None
         self._ret_counters: Dict[str, int] = {}
         self._ret_tokens: Optional[np.ndarray] = None
         self._ret_first: Optional[float] = None
@@ -405,6 +563,16 @@ class ClusterMetrics:
             if acc is None:
                 acc = self._ret_steps[k] = LatencyTracker(maxlen=65536)
             acc.merge(t)
+        with m._lock:
+            costs = dict(m.program_costs)
+            peaks = m.peaks
+        for k, c in costs.items():
+            old = self._ret_costs.get(k)
+            if old is None or (old.get("estimated")
+                               and not c.get("estimated")):
+                self._ret_costs[k] = c
+        if peaks is not None:
+            self._ret_peaks = peaks
         for k, v in m.counters.items():
             self._ret_counters[k] = self._ret_counters.get(k, 0) + v
         if m.expert_tokens.size:
@@ -500,6 +668,29 @@ class ClusterMetrics:
                 acc.merge(t)
         return out
 
+    def merged_program_costs(self) -> Dict[str, dict]:
+        """ProgramCost union over retired + live replicas. Live rows win
+        over retired ones (and measured over estimated): replicas compile
+        the same program grid, so same-key rows describe the same program."""
+        out = dict(self._ret_costs)
+        for m in self._replicas:
+            with m._lock:
+                costs = dict(m.program_costs)
+            for k, c in costs.items():
+                old = out.get(k)
+                if old is None or (old.get("estimated")
+                                   and not c.get("estimated")):
+                    out[k] = c
+        return out
+
+    def merged_peaks(self) -> Optional[dict]:
+        """Roofline peaks for the aggregate join — replicas are homogeneous
+        (one device kind per cluster), so any replica's answer serves."""
+        for m in self._replicas:
+            if m.peaks is not None:
+                return m.peaks
+        return self._ret_peaks
+
     def snapshot(self) -> dict:
         counters: Dict[str, int] = dict(self.counters)
         for k, v in self._ret_counters.items():
@@ -525,8 +716,29 @@ class ClusterMetrics:
         queue_wait = LatencyTracker.merged(
             [m.queue_wait for m in self._replicas])
         queue_wait.merge(self._ret_queue_wait)
+        replica_snaps = [m.snapshot() for m in self._replicas]
+        mem_rows = [s["memory"] for s in replica_snaps
+                    if s.get("memory") is not None]
+        memory = None
+        if mem_rows:
+            memory = {
+                "replicas": len(mem_rows),
+                "param_bytes": sum(r.get("param_bytes", 0)
+                                   for r in mem_rows),
+                "kv_cache_bytes": sum(r.get("kv_cache_bytes", 0)
+                                      for r in mem_rows),
+                "watermark_bytes": sum(r.get("watermark_bytes", 0)
+                                       for r in mem_rows),
+                "estimated": any(r.get("estimated", True)
+                                 for r in mem_rows),
+            }
+        health = _occupancy_stats(tokens)
+        if health is not None:
+            # the expert_drift counter folds through retirement like any
+            # other counter, so this survives replica churn
+            health["drift_events"] = counters.get("expert_drift", 0)
         return {
-            "replicas": [m.snapshot() for m in self._replicas],
+            "replicas": replica_snaps,
             "aggregate": {
                 "counters": counters,
                 "fps": self.fps,
@@ -536,6 +748,11 @@ class ClusterMetrics:
                 "step_latency_ms": {
                     k: t.snapshot()
                     for k, t in sorted(self.merged_step_latency().items())},
+                "program_perf": program_perf(self.merged_program_costs(),
+                                             self.merged_step_latency(),
+                                             self.merged_peaks()),
+                "memory": memory,
+                "expert_health": health,
                 "front_queue_depth": {
                     "mean": (self._depth_sum / self._depth_n)
                     if self._depth_n else 0.0,
@@ -606,6 +823,66 @@ class ClusterMetrics:
                 lines += _prom_histogram(
                     "repro_step_latency_seconds", tracker,
                     labels=f'program="{key}"', typed=False)
+
+        # -- introspection surface (DESIGN.md section 12) -------------------
+        perf = agg.get("program_perf") or {}
+        for metric, field in (
+            ("repro_program_mfu", "mfu"),
+            ("repro_program_achieved_hbm_bytes_per_second", None),
+            ("repro_program_flops", "flops"),
+            ("repro_program_hbm_bytes", "hbm_bytes"),
+            ("repro_program_roofline_frac", "roofline_frac"),
+            ("repro_program_cost_estimated", "estimated"),
+        ):
+            rows = []
+            for key, row in sorted(perf.items()):
+                if metric == "repro_program_achieved_hbm_bytes_per_second":
+                    v = row.get("achieved_hbm_gbps")
+                    v = v * 1e9 if v is not None else None
+                elif field == "estimated":
+                    v = float(bool(row["estimated"])) \
+                        if "estimated" in row else None
+                else:
+                    v = row.get(field)
+                    if v is not None and v < 0:
+                        v = None
+                if v is not None:
+                    rows.append((key, v))
+            if rows:
+                lines.append(f"# TYPE {metric} gauge")
+                for key, v in rows:
+                    lines.append(f'{metric}{{program="{key}"}} {v:g}')
+        bound_rows = [(k, r["bound"]) for k, r in sorted(perf.items())
+                      if "bound" in r]
+        if bound_rows:
+            lines.append("# TYPE repro_program_roofline_bound gauge")
+            for key, bound in bound_rows:
+                lines.append('repro_program_roofline_bound'
+                             f'{{program="{key}",bound="{bound}"}} 1')
+
+        mem_lines = []
+        for i, rsnap in enumerate(snap["replicas"]):
+            mem = rsnap.get("memory")
+            if not mem:
+                continue
+            for kind in ("param_bytes", "kv_cache_bytes",
+                         "watermark_bytes", "bytes_in_use", "bytes_limit"):
+                if kind in mem:
+                    mem_lines.append(
+                        'repro_replica_memory_bytes'
+                        f'{{replica="{i}",kind="{kind}"}} {mem[kind]}')
+        if mem_lines:
+            lines.append("# TYPE repro_replica_memory_bytes gauge")
+            lines += mem_lines
+
+        health = agg.get("expert_health")
+        if health:
+            lines.append("# TYPE repro_expert_occupancy_entropy gauge")
+            lines.append("repro_expert_occupancy_entropy "
+                         f"{health['entropy']}")
+            lines.append("# TYPE repro_expert_hot_cold_skew gauge")
+            lines.append("repro_expert_hot_cold_skew "
+                         f"{health['hot_cold_skew']}")
         return "\n".join(lines) + "\n"
 
 

@@ -98,7 +98,10 @@ class VisionEngine:
         # queue -> infer -> retire (one batched forward is the service)
         self.tracer = make_tracer(self.cfg.trace, clock=clock)
         self.events = events
-        self._step_times = self.tracer.enabled and self.cfg.trace.step_times
+        # step timing serves tracing AND the introspection MFU join
+        self._step_times = ((self.tracer.enabled
+                             and self.cfg.trace.step_times)
+                            or self.cfg.introspect.enable)
         self.top_k = min(top_k, cfg.num_classes)
         self.n_patches = cfg.image_tokens - 1
         self._clock = clock
@@ -110,6 +113,18 @@ class VisionEngine:
             num_experts=cfg.moe.num_experts if cfg.moe is not None else 0,
             clock=clock,
         )
+        self.expert_health = None
+        if self.cfg.introspect.enable and cfg.moe is not None:
+            from repro.serving.introspect import ExpertHealthMonitor
+
+            self.expert_health = ExpertHealthMonitor(
+                cfg.moe.num_experts,
+                window_tokens=self.cfg.introspect.drift_window_tokens,
+                drift_threshold=self.cfg.introspect.drift_threshold,
+                baseline_alpha=self.cfg.introspect.baseline_alpha,
+                events=events, label="vision", clock=clock,
+                on_drift=lambda info: self.metrics.inc("expert_drift"))
+            self.metrics.expert_health = self.expert_health
         self.max_inflight = max(1, int(max_inflight))
         self._inflight: deque = deque()
         self.mesh = mesh
@@ -124,6 +139,7 @@ class VisionEngine:
                     "moe_exec='expert_parallel' needs mesh= (a 'model'-axis "
                     "mesh whose size divides num_experts)")
             self._classify = jax.jit(fwd)
+            self._lowerable = self._classify
         else:
             # pin this replica to its mesh slice: params device_put with
             # per-leaf specs (expert stacks sharded over 'model' under EP,
@@ -153,6 +169,7 @@ class VisionEngine:
             self.params = jax.device_put(params, named(specs))
             jitted = jax.jit(fwd, in_shardings=(
                 named(specs), NamedSharding(mesh, P())))
+            self._lowerable = jitted  # warmup AOT-lowers it for cost rows
             ep_scope = (
                 (lambda: use_ep_mesh(mesh)) if self._ep
                 else contextlib.nullcontext
@@ -196,6 +213,27 @@ class VisionEngine:
         for b in self.scheduler.batch_sizes:
             x = jnp.zeros((b, self.n_patches, vit.PATCH_DIM), jnp.float32)
             jax.block_until_ready(self._classify(self.params, x))
+        if self.cfg.introspect.enable:
+            # AOT-lower each bucket program once, purely to read its cost
+            # surfaces (warmup is untimed; capture_cost degrades per key)
+            programs = {}
+            for b in self.scheduler.batch_sizes:
+                exe = None
+                try:
+                    x = jax.ShapeDtypeStruct(
+                        (b, self.n_patches, vit.PATCH_DIM), jnp.float32)
+                    with self._ep_scope():
+                        exe = self._lowerable.lower(self.params, x).compile()
+                except Exception:
+                    exe = None
+                programs[f"classify|b={b}"] = exe
+            from repro.serving import introspect
+
+            devices = (list(self.mesh.devices.flat)
+                       if self.mesh is not None else None)
+            introspect.install(self.metrics, cfg=self.cfg,
+                               programs=programs, params=self.params,
+                               devices=devices)
 
     @property
     def inflight(self) -> int:
@@ -223,8 +261,10 @@ class VisionEngine:
     def reset_metrics(self) -> None:
         """Fresh ``EngineMetrics`` (cluster replica leave — the old one was
         folded into the retired accumulator)."""
+        old = self.metrics
         self.metrics = EngineMetrics(
-            num_experts=self.metrics.expert_tokens.size, clock=self._clock)
+            num_experts=old.expert_tokens.size, clock=self._clock)
+        self.metrics.adopt_static(old)
 
     def submit(self, req: VisionRequest) -> None:
         """Enqueue one image; raises ``scheduler.Backpressure`` when the

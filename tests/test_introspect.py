@@ -1,0 +1,347 @@
+"""Live performance introspection (DESIGN.md section 12): per-program
+cost capture must cover every AOT program, degrade to analytic estimates
+instead of ever failing warmup, join with measured step latencies into
+MFU/roofline rows that survive elasticity folds, watch expert routing for
+drift, and serve it all over a scrapeable endpoint."""
+import json
+import os
+import sys
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import repro.models as M  # noqa: E402
+from repro.configs import smoke_config  # noqa: E402
+from repro.serving.engine import Request, ServeEngine  # noqa: E402
+from repro.serving.events import EventLog  # noqa: E402
+from repro.serving.introspect import (  # noqa: E402
+    ExpertHealthMonitor,
+    analytic_program_cost,
+    capture_cost,
+    memory_watermark,
+    normalize_cost_analysis,
+    parse_program_key,
+    program_cost_from_compiled,
+)
+from repro.serving.metrics import (  # noqa: E402
+    ClusterMetrics,
+    EngineMetrics,
+    program_perf,
+)
+from repro.serving.metrics_server import (  # noqa: E402
+    MetricsServer,
+    cluster_healthz,
+)
+from repro.serving.vision import VisionEngine, synth_requests  # noqa: E402
+from benchmarks.provenance import stamp  # noqa: E402
+from tools.bench_diff import comparable, diff, flatten  # noqa: E402
+
+
+# ---------------------------------------------------------------- unit layer
+
+
+def test_parse_program_key():
+    prog, dims = parse_program_key("serve/packed_prefill|B=4|S=128|"
+                                   "bucket=64|n=3")
+    assert prog == "serve/packed_prefill"
+    assert dims == {"B": 4, "S": 128, "bucket": 64, "n": 3}
+    prog, dims = parse_program_key("classify|b=8")
+    assert prog == "classify" and dims == {"b": 8}
+    assert parse_program_key("bare")[1] == {}
+
+
+def test_normalize_cost_analysis_quirks():
+    # jax versions disagree on the return shape: list-of-dict, bare dict,
+    # None, or garbage. All must normalize without raising.
+    d = {"flops": 10.0, "bytes accessed": 20.0, "utilization": "high"}
+    assert normalize_cost_analysis([d])["flops"] == 10.0
+    assert normalize_cost_analysis(d)["bytes accessed"] == 20.0
+    assert normalize_cost_analysis(None) == {}
+    assert normalize_cost_analysis("garbage") == {}
+    assert normalize_cost_analysis([]) == {}
+    assert normalize_cost_analysis([None]) == {}
+    # non-numeric values are filtered, numerics coerced to float
+    out = normalize_cost_analysis({"flops": 5, "name": "dot"})
+    assert out == {"flops": 5.0}
+
+
+def test_program_cost_from_real_compiled():
+    compiled = jax.jit(lambda x: x @ x).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    row = program_cost_from_compiled(compiled)
+    assert row is not None
+    assert row["flops"] > 0
+    assert row["hbm_bytes"] > 0
+    assert row["estimated"] is False
+    assert "cost_analysis" in row["source"] or "hlo" in row["source"]
+
+
+class _BrokenCompiled:
+    def cost_analysis(self):
+        raise RuntimeError("unimplemented on this backend")
+
+    def memory_analysis(self):
+        raise RuntimeError("nope")
+
+    def as_text(self):
+        raise RuntimeError("nope")
+
+
+def test_capture_cost_degrades_to_analytic():
+    cfg = smoke_config("olmoe-1b-7b")
+    row = capture_cost(_BrokenCompiled(), "serve/decode|B=4|S=128", cfg,
+                       param_bytes=1 << 20, cache_bytes=1 << 16)
+    assert row["estimated"] is True
+    assert row["flops"] > 0 and row["hbm_bytes"] > 0
+    assert "analytic" in row["source"]
+    # even with no cfg there must be a row, never an exception
+    row2 = capture_cost(None, "serve/decode|B=4|S=128", None)
+    assert row2["estimated"] is True
+
+
+def test_analytic_cost_scales_with_tokens():
+    cfg = smoke_config("olmoe-1b-7b")
+    small = analytic_program_cost("serve/decode|B=2|S=128", cfg)
+    big = analytic_program_cost(
+        "serve/packed_prefill|B=2|S=128|bucket=64|n=2", cfg)
+    assert big["flops"] > small["flops"]  # 64 tokens vs 2 decode tokens
+
+
+def test_memory_watermark_analytic_fallback():
+    # CPU devices report no memory_stats -> analytic path, flagged
+    mem = memory_watermark(jax.devices(), param_bytes=1000,
+                           cache_bytes=500,
+                           program_costs={"k": {"temp_bytes": 200.0}})
+    assert mem["watermark_bytes"] >= 1700 or mem["estimated"] is False
+    if mem["estimated"]:
+        assert mem["param_bytes"] == 1000
+        assert mem["kv_cache_bytes"] == 500
+
+
+# ------------------------------------------------------- engine integration
+
+
+@pytest.fixture(scope="module")
+def lm_engine():
+    cfg = smoke_config("olmoe-1b-7b")
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64)
+    eng.warmup()
+    rng = np.random.default_rng(0)
+    for uid in range(2):
+        eng.submit(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+            max_new_tokens=4))
+    eng.run_until_drained()
+    return eng
+
+
+def test_every_lm_program_has_cost_row(lm_engine):
+    assert lm_engine._programs, "packed engine should have an AOT grid"
+    missing = set(lm_engine._programs) - set(lm_engine.metrics.program_costs)
+    assert not missing, f"programs without ProgramCost rows: {missing}"
+
+
+def test_lm_snapshot_has_mfu_join(lm_engine):
+    perf = lm_engine.metrics.snapshot()["program_perf"]
+    assert perf
+    measured = [v for v in perf.values() if v.get("mfu") is not None]
+    assert measured, "served programs must join cost x latency into MFU"
+    for row in measured:
+        assert 0 < row["mfu"] < 1.5  # plausible fraction of peak
+        assert row["achieved_hbm_gbps"] is not None
+        assert row["bound"] in ("compute", "memory", "collective")
+
+
+def test_lm_snapshot_has_memory_block(lm_engine):
+    mem = lm_engine.metrics.snapshot()["memory"]
+    assert mem is not None
+    assert mem["watermark_bytes"] > 0
+
+
+def test_warmup_survives_cost_analysis_failure(monkeypatch):
+    # cost surfaces raising on every program must degrade to analytic
+    # estimates, not break warmup (satellite: cost_analysis() quirks)
+    import repro.serving.introspect as I
+
+    def broken(compiled):
+        raise RuntimeError("cost surface unavailable")
+
+    monkeypatch.setattr(I, "program_cost_from_compiled", broken)
+    cfg = smoke_config("olmoe-1b-7b")
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64)
+    eng.warmup()  # must not raise
+    costs = eng.metrics.program_costs
+    assert set(eng._programs) <= set(costs)
+    assert all(c["estimated"] for c in costs.values())
+
+
+def test_mfu_survives_scale_down_fold(lm_engine):
+    cm = ClusterMetrics([lm_engine.metrics])
+    live = cm.snapshot()["aggregate"]["program_perf"]
+    assert any(v.get("mfu") is not None for v in live.values())
+    cm.remove_replica(lm_engine.metrics)  # retire the only replica
+    folded = cm.snapshot()["aggregate"]["program_perf"]
+    assert any(v.get("mfu") is not None for v in folded.values()), \
+        "MFU rows must survive a scale_down fold into the retired pool"
+
+
+@pytest.fixture(scope="module")
+def vision_engine():
+    cfg = smoke_config("m3vit-tiny")
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    eng = VisionEngine(cfg, params, batch_buckets=(1, 2), max_wait_s=0.0,
+                       max_pending=0)
+    eng.warmup()
+    for r in synth_requests(cfg, 4, seed=0):
+        eng.submit(r)
+    eng.flush()
+    return eng
+
+
+def test_every_vision_bucket_has_cost_row(vision_engine):
+    costs = vision_engine.metrics.program_costs
+    assert {"classify|b=1", "classify|b=2"} <= set(costs)
+
+
+def test_vision_snapshot_has_mfu_join(vision_engine):
+    snap = vision_engine.metrics.snapshot()
+    perf = snap["program_perf"]
+    assert any(v.get("mfu") is not None for v in perf.values())
+    assert snap["expert_health"] is not None
+
+
+# --------------------------------------------------------- expert drift
+
+
+def test_expert_drift_fires_on_skewed_routing():
+    events = EventLog()
+    fired = []
+    mon = ExpertHealthMonitor(4, window_tokens=64, drift_threshold=0.25,
+                              events=events, label="t",
+                              on_drift=fired.append)
+    uniform = np.array([16, 16, 16, 16])
+    for _ in range(4):  # establish the uniform baseline
+        mon.update(uniform)
+    assert not events.events("expert_drift")
+    skew = np.array([58, 2, 2, 2])
+    for _ in range(4):
+        mon.update(skew)
+    drifts = events.events("expert_drift")
+    assert drifts, "skewed routing must emit expert_drift events"
+    assert fired and fired[0]["l1_vs_ref"] > 0.25
+    snap = mon.snapshot()
+    assert snap["hot_cold_skew"] > 1.0
+    assert 0.0 <= snap["entropy"] <= 1.0
+    assert snap["drift_events"] == len(drifts)
+
+
+def test_expert_monitor_entropy_bounds():
+    mon = ExpertHealthMonitor(8, window_tokens=8)
+    mon.update(np.full(8, 1))  # perfectly uniform window
+    assert mon.snapshot()["entropy"] == pytest.approx(1.0)
+    mon2 = ExpertHealthMonitor(8, window_tokens=8)
+    counts = np.zeros(8, np.int64)
+    counts[3] = 8  # fully collapsed window
+    mon2.update(counts)
+    assert mon2.snapshot()["entropy"] == pytest.approx(0.0)
+
+
+# ------------------------------------------------------------- endpoint
+
+
+def _get(url):
+    with urllib.request.urlopen(url, timeout=5) as r:
+        return r.status, r.headers.get("Content-Type", ""), r.read()
+
+
+def test_metrics_server_routes(lm_engine):
+    cm = ClusterMetrics([lm_engine.metrics])
+    with MetricsServer(cm.export_prometheus, snapshot_fn=cm.snapshot,
+                       healthz_fn=lambda: {"status": "ok"}) as srv:
+        status, ctype, body = _get(srv.url + "/metrics")
+        assert status == 200 and "text/plain" in ctype
+        text = body.decode()
+        assert "repro_program_mfu" in text
+        assert "repro_replica_memory_bytes" in text
+        for line in text.splitlines():
+            if line and not line.startswith("#"):
+                name, val = line.rsplit(" ", 1)
+                float(val)  # every sample value parses
+        status, ctype, body = _get(srv.url + "/healthz")
+        assert status == 200 and json.loads(body)["status"] == "ok"
+        status, _, body = _get(srv.url + "/snapshot")
+        assert status == 200 and isinstance(json.loads(body), dict)
+        try:
+            status, _, _ = _get(srv.url + "/nope")
+        except urllib.error.HTTPError as e:
+            status = e.code
+        assert status == 404
+
+
+def test_reset_metrics_keeps_static_cost_surface(lm_engine):
+    # runs AFTER the endpoint tests: it intentionally wipes the measured
+    # histograms (fresh EngineMetrics) while adopt_static carries the
+    # static cost surface across
+    lm_engine.reset_metrics()
+    assert lm_engine.metrics.program_costs, \
+        "adopt_static must carry ProgramCost rows across reset_metrics"
+    assert lm_engine.metrics.peaks is not None
+
+
+def test_healthz_degrades_on_errors():
+    class _C:
+        class metrics:
+            @staticmethod
+            def snapshot():
+                return {"replicas_active": 1,
+                        "aggregate": {"counters": {"retire_errors": 1,
+                                                   "completed": 3}}}
+
+    hz = cluster_healthz(_C())
+    assert hz["status"] == "degraded"
+    assert hz["retire_errors"] == 1 and hz["completed"] == 3
+
+
+# -------------------------------------------- provenance + bench_diff
+
+
+def test_provenance_stamp_keys():
+    rep = stamp({"fps": 1.0}, "unit_test")
+    p = rep["provenance"]
+    for k in ("bench", "schema_version", "git_sha", "timestamp",
+              "timestamp_iso", "backend", "device_kind", "device_count"):
+        assert k in p, f"provenance missing {k}"
+    assert p["bench"] == "unit_test"
+
+
+def test_bench_diff_flags_beyond_noise():
+    old = stamp({"fps": 100.0, "lat": {"p50": 10.0}}, "b")
+    new = stamp({"fps": 90.0, "lat": {"p50": 10.2}}, "b")
+    ok, _ = comparable(old, new)
+    assert ok
+    rows = {r["metric"]: r for r in diff(old, new, noise=0.05)}
+    assert rows["fps"]["beyond_noise"] is True
+    assert rows["lat.p50"]["beyond_noise"] is False
+    assert not any(m.startswith("provenance.") for m in rows)
+
+
+def test_bench_diff_incomparable():
+    old = stamp({"fps": 1.0}, "bench_a")
+    new = stamp({"fps": 1.0}, "bench_b")
+    ok, reason = comparable(old, new)
+    assert not ok and "bench" in reason
+    ok, reason = comparable({"fps": 1.0}, new)
+    assert not ok and "provenance" in reason
+
+
+def test_flatten_drops_bools_and_nans():
+    flat = flatten({"a": True, "b": float("nan"), "c": [1, {"d": 2.5}]})
+    assert flat == {"c.0": 1.0, "c.1.d": 2.5}

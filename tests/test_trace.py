@@ -527,13 +527,20 @@ def test_vision_engine_traced_run_satisfies_invariants():
 
 
 def test_disabled_engine_has_null_tracer_and_no_step_hists():
+    import dataclasses
+
     import jax
 
     import repro.models as M
     from repro.configs import smoke_config
     from repro.serving.engine import Request, ServeEngine
 
+    # tracing off is not enough to go fully dark anymore: introspection
+    # (on by default, DESIGN.md section 12) keeps step timing alive for
+    # the MFU join — only disabling both drops every per-dispatch cost
     cfg = smoke_config("llama3-8b").replace(remat=False)
+    cfg = cfg.replace(introspect=dataclasses.replace(cfg.introspect,
+                                                     enable=False))
     params = M.init_model_params(cfg, jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, params, batch_slots=2, max_len=32)
     assert eng.tracer is NULL_TRACER and not eng._step_times
@@ -543,4 +550,26 @@ def test_disabled_engine_has_null_tracer_and_no_step_hists():
     eng.submit(req)
     eng.run_until_drained()
     assert eng.metrics.snapshot()["step_latency_ms"] == {}
+    assert eng.tracer.recorder.total == 0
+
+
+def test_untraced_engine_still_records_step_times_for_mfu():
+    import jax
+
+    import repro.models as M
+    from repro.configs import smoke_config
+    from repro.serving.engine import Request, ServeEngine
+
+    # default config: tracing off, introspection on -> no spans, but the
+    # per-program step histograms the MFU join needs DO accumulate
+    cfg = smoke_config("llama3-8b").replace(remat=False)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=32)
+    assert eng.tracer is NULL_TRACER and eng._step_times
+    rng = np.random.default_rng(1)
+    req = Request(uid=0, prompt=rng.integers(0, cfg.vocab_size, 5)
+                  .astype(np.int32), max_new_tokens=2)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert eng.metrics.snapshot()["step_latency_ms"] != {}
     assert eng.tracer.recorder.total == 0

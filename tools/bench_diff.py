@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""Diff two BENCH_* artifacts against a noise floor.
+
+Matches artifacts by provenance (same bench name, schema version, and
+device kind — numbers from different hardware or report layouts are not
+comparable), flattens every numeric leaf into dotted metric paths, and
+reports per-metric deltas, flagging the ones whose relative change
+exceeds the noise floor. CI runs it as a soft-fail step against the
+previous successful run's artifacts:
+
+  python tools/bench_diff.py BENCH_old.json BENCH_new.json \
+      --noise 0.05 --out bench_diff.json
+
+Exit code is 0 unless ``--hard`` is given (then regressions beyond the
+noise floor exit 1). Incomparable artifacts report why and exit 0 —
+a provenance mismatch is a fact about the runs, not a failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Dict, List, Optional, Tuple
+
+
+def flatten(obj, prefix: str = "") -> Dict[str, float]:
+    """Numeric leaves of a nested report as {dotted.path: float}. Lists
+    index numerically; NaNs drop (they mean "no data", not a value)."""
+    out: Dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}{k}." if prefix or k else k))
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            out.update(flatten(v, f"{prefix}{i}."))
+    elif isinstance(obj, bool):
+        pass
+    elif isinstance(obj, (int, float)):
+        if not math.isnan(obj):
+            out[prefix.rstrip(".")] = float(obj)
+    return out
+
+
+def comparable(a: dict, b: dict) -> Tuple[bool, str]:
+    """Whether two artifacts may be compared, and why not if not."""
+    pa, pb = a.get("provenance"), b.get("provenance")
+    if pa is None or pb is None:
+        missing = "old" if pa is None else "new"
+        return False, f"{missing} artifact has no provenance block " \
+                      "(predates benchmarks/provenance.py)"
+    for field in ("bench", "schema_version", "device_kind", "backend"):
+        va, vb = pa.get(field), pb.get(field)
+        if va != vb:
+            return False, f"provenance mismatch on {field!r}: " \
+                          f"{va!r} vs {vb!r}"
+    return True, ""
+
+
+def diff(old: dict, new: dict, noise: float = 0.05,
+         ignore_prefixes: Tuple[str, ...] = ("provenance.", "meta.")
+         ) -> List[dict]:
+    """Per-metric rows for every path present in both artifacts."""
+    fa, fb = flatten(old), flatten(new)
+    rows: List[dict] = []
+    for path in sorted(set(fa) & set(fb)):
+        if any(path.startswith(p) for p in ignore_prefixes):
+            continue
+        a, b = fa[path], fb[path]
+        delta = b - a
+        rel = (delta / abs(a)) if a else (0.0 if delta == 0 else math.inf)
+        rows.append({
+            "metric": path,
+            "old": a,
+            "new": b,
+            "delta": delta,
+            "rel": None if math.isinf(rel) else round(rel, 6),
+            "beyond_noise": abs(rel) > noise,
+        })
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="previous BENCH_*.json")
+    ap.add_argument("new", help="current BENCH_*.json")
+    ap.add_argument("--noise", type=float, default=0.05,
+                    help="relative noise floor (default 5%%)")
+    ap.add_argument("--out", default="", help="write the diff report here")
+    ap.add_argument("--hard", action="store_true",
+                    help="exit 1 on any beyond-noise change")
+    ap.add_argument("--top", type=int, default=20,
+                    help="print at most this many beyond-noise rows")
+    args = ap.parse_args(argv)
+
+    with open(args.old) as f:
+        old = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+
+    ok, reason = comparable(old, new)
+    report = {
+        "old": args.old,
+        "new": args.new,
+        "noise": args.noise,
+        "comparable": ok,
+    }
+    if not ok:
+        report["reason"] = reason
+        print(f"bench_diff: incomparable artifacts — {reason}")
+        rows = []
+    else:
+        rows = diff(old, new, noise=args.noise)
+        flagged = [r for r in rows if r["beyond_noise"]]
+        report["metrics"] = len(rows)
+        report["beyond_noise"] = len(flagged)
+        report["rows"] = rows
+        print(f"bench_diff: {len(rows)} shared metrics, "
+              f"{len(flagged)} beyond the {args.noise:.0%} noise floor")
+        for r in flagged[:args.top]:
+            rel = "inf" if r["rel"] is None else f"{r['rel']:+.1%}"
+            print(f"  {r['metric']}: {r['old']:g} -> {r['new']:g} ({rel})")
+        if len(flagged) > args.top:
+            print(f"  ... and {len(flagged) - args.top} more")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {args.out}")
+    if args.hard and ok and report.get("beyond_noise"):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
