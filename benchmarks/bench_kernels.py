@@ -46,16 +46,26 @@ def gmm_shapes(smoke: bool):
         return [
             (64, 8, 32, 64, "float32"),
             (64, 8, 32, 64, "int8"),
+            (64, 8, 32, 64, "int4"),  # nibble-packed expert stack
             (8, 8, 64, 32, "int8"),  # decode-sized: exercises the clamp
+            (8, 8, 64, 32, "int4"),
         ]
     shapes = []
-    for dt in ("float32", "int8"):
+    for dt in ("float32", "int8", "int4"):
         for T in (256, 1024, 4096):
             shapes += [
                 (T, 8, 256, 1024, dt),  # fc1 (glu: 2*d_ff)
                 (T, 8, 512, 256, dt),  # fc2
             ]
     return shapes
+
+
+def gmm_weight_bytes(G: int, Din: int, Dout: int, dt: str) -> int:
+    """Measured expert-stack bytes for one swept shape — what actually sits
+    in HBM: nibble-packed int4 stores ceil(Din/2) uint8 rows."""
+    if dt == "int4":
+        return G * (-(-Din // 2)) * Dout
+    return G * Din * Dout * jnp.dtype(dt).itemsize
 
 
 def attn_shapes(smoke: bool):
@@ -136,11 +146,14 @@ def main() -> None:
 
     rows = []
     for T, G, Din, Dout, dt in gmm_shapes(args.smoke):
-        int8 = dt == "int8"
+        quant = dt in ("int8", "int4")
+        x_dt = jnp.int8 if quant else jnp.dtype(dt)  # W4A8: int8 acts
+        w_dt = jnp.uint8 if dt == "int4" else jnp.dtype(dt)
         req = autotune.gmm_request(
-            T, G, Din, Dout, x_dtype=jnp.dtype(dt), w_dtype=jnp.dtype(dt),
-            scaled=int8, ascaled=int8)
+            T, G, Din, Dout, x_dtype=x_dt, w_dtype=w_dt,
+            scaled=quant, ascaled=quant)
         row, entry = bench_request(req, at_cfg)
+        row["weight_bytes"] = gmm_weight_bytes(G, Din, Dout, dt)
         table.put(req.key, tuple(entry["blocks"]), entry["ms"],
                   entry["source"])
         rows.append(row)
@@ -161,6 +174,17 @@ def main() -> None:
               f"{row['tuned']['ms']}ms (x{row['speedup']})")
 
     ok = all(r["never_slower"] for r in rows)
+    # measured expert-stack byte shrink: int8 vs int4 rows of the same
+    # (T, G, din, dout) bucket (the acceptance number for the int4 scheme)
+    by_shape = {}
+    for r in rows:
+        if r["kernel"] != "grouped_matmul" or "weight_bytes" not in r:
+            continue
+        kv = dict(p.split("=", 1) for p in r["key"].split("|")[1:])
+        sig = (kv["T"], kv["G"], kv["din"], kv["dout"])
+        by_shape.setdefault(sig, {})[kv["wdt"]] = r["weight_bytes"]
+    shrinks = [b["int8"] / b["uint8"] for b in by_shape.values()
+               if "int8" in b and "uint8" in b]
     out = {
         "benchmark": "kernel_autotune",
         "device_kind": kind,
@@ -169,6 +193,8 @@ def main() -> None:
         "kernel_versions": dict(autotune.KERNEL_VERSIONS),
         "rows": rows,
         "all_never_slower": ok,
+        "int4_weight_shrink_vs_int8": (
+            round(sum(shrinks) / len(shrinks), 4) if shrinks else None),
     }
     with open(args.out, "w") as f:
         json.dump(stamp(out, "bench_kernels"), f, indent=1)

@@ -73,7 +73,11 @@ def pick_int8(params=None, quant_enabled: Optional[bool] = None) -> bool:
     """Should the MFU denominator use the int8 peak?
 
     True when quantization is enabled in config or any materialized weight
-    leaf is int8 (the post-PR-3 materialized int8 path).
+    leaf is int8 (the post-PR-3 materialized int8 path) OR nibble-packed
+    int4 (uint8 storage). Int4 stacks deliberately use the *int8* peak
+    (DESIGN.md §13): the TPU MXU has no separate int4 datapath — packed
+    weights unpack to int8 in-register and contract on the int8 path, so
+    int4's win is HBM bytes (roofline memory-bound rows), not peak FLOPs.
     """
     if quant_enabled:
         return True
@@ -83,8 +87,11 @@ def pick_int8(params=None, quant_enabled: Optional[bool] = None) -> bool:
             import jax.numpy as jnp
 
             for leaf in jax.tree_util.tree_leaves(params):
-                if getattr(leaf, "dtype", None) == jnp.int8:
+                dt = getattr(leaf, "dtype", None)
+                if dt == jnp.int8:
                     return True
+                if dt == jnp.uint8 and getattr(leaf, "ndim", 0) >= 2:
+                    return True  # nibble-packed int4 weight stack
         except Exception:
             return False
     return False

@@ -79,6 +79,14 @@ class QuantConfig:
     post_norm_reparam: bool = True  # Eqs. 10-16
     softmax_log_sqrt2: bool = True  # Eqs. 17-21
     kv_cache_int8: bool = True  # serving: int8 K/V cache
+    # Per-site mixed-scheme map for ``ptq_model(materialize="int4")``
+    # (DESIGN.md section 13): (dotted-path-suffix pattern, scheme) pairs,
+    # e.g. (("moe.wi", "int4"), ("moe.wo", "int4")). Longest-suffix match
+    # wins; unmatched sites stay int8. Empty = the documented experts-only
+    # default (ptq.DEFAULT_INT4_SCHEME) when int4 materialization is
+    # requested. Also honored by ``materialize="fake"`` to build the
+    # fake-quant oracle of a mixed tree.
+    scheme_map: Tuple[Tuple[str, str], ...] = ()
 
 
 @dataclass(frozen=True)

@@ -52,7 +52,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.quant.calibrate import TapCollector
 from repro.core.quant.linear_quant import fake_quant_weight, quantize_weight
-from repro.core.quant.qtypes import ASCALE_SUFFIX, SCALE_SUFFIX, qmax
+from repro.core.quant.qtypes import (
+    ASCALE_SUFFIX, SCALE_SUFFIX, pack_int4, qmax,
+)
 
 # Families whose every linear call site routes through the
 # ``models.layers.quant_linear`` seam (int8 materialization supported).
@@ -65,6 +67,54 @@ QUANT_WEIGHT_KEYS = frozenset(
         "patch_proj", "frontend_proj", "in_proj", "out_proj",
     }
 )
+
+# Supported ``ptq_model(materialize=...)`` modes (satellite: the validation
+# error enumerates these).
+MATERIALIZE_MODES = ("fake", "int8", "int4")
+
+# Per-site schemes a scheme-map entry may name (DESIGN.md section 13).
+SITE_SCHEMES = ("int8", "int4")
+
+# The documented default when ``materialize="int4"`` is requested without a
+# scheme map: ONLY the MoE expert stacks drop to int4; every sensitive site
+# (router/gate, head, patch/frontend projections, attention) stays int8.
+DEFAULT_INT4_SCHEME = (("moe.wi", "int4"), ("moe.wo", "int4"))
+
+# Leaf keys that may legally carry an int4 scheme (the grouped expert path
+# is the only consumer that executes nibble-packed leaves).
+_INT4_SITE_KEYS = frozenset({"wi", "wo"})
+
+
+def _scheme_dict(scheme_map) -> Dict[Tuple[str, ...], str]:
+    """Validate a scheme map and key it by dotted-path pattern components."""
+    out = {}
+    for pat, sch in dict(scheme_map).items():
+        if sch not in SITE_SCHEMES:
+            raise ValueError(
+                f"unknown scheme {sch!r} for site pattern {pat!r}; "
+                f"supported schemes: {', '.join(SITE_SCHEMES)}"
+            )
+        parts = tuple(pat.split("."))
+        if sch == "int4" and parts[-1] not in _INT4_SITE_KEYS:
+            raise ValueError(
+                f"int4 scheme requested for site pattern {pat!r}, but only "
+                f"MoE expert stacks (moe.wi / moe.wo) execute nibble-packed "
+                f"int4; sensitive sites (router, head, frontend, attention) "
+                f"must stay int8"
+            )
+        out[parts] = sch
+    return out
+
+
+def _scheme_for(path: Tuple[str, ...], scheme: Dict[Tuple[str, ...], str]):
+    """Longest dotted-suffix match of ``path`` against the scheme map;
+    unmatched sites default to int8 (DESIGN.md section 13)."""
+    best, best_len = "int8", 0
+    for parts, sch in scheme.items():
+        if len(parts) <= len(path) and path[-len(parts):] == parts \
+                and len(parts) > best_len:
+            best, best_len = sch, len(parts)
+    return best
 
 
 # ---------------------------------------------------------------------------
@@ -225,33 +275,66 @@ def _layer_groups(cfg: ModelConfig, params) -> List[Tuple[str, str, list]]:
     raise ValueError(f"PTQ: unsupported family {fam!r}")
 
 
-def _quantize_weights(tree, bits: int):
+def _site_bits(path: Tuple[str, ...], scheme, default_bits: int) -> int:
+    if scheme and _scheme_for(path, scheme) == "int4":
+        return 4
+    return default_bits
+
+
+def _check_int4_site(path: Tuple[str, ...]) -> None:
+    if path[-1] not in _INT4_SITE_KEYS or "moe" not in path[:-1]:
+        raise NotImplementedError(
+            f"int4 scheme matched non-expert site {'.'.join(path)!r}; only "
+            f"MoE expert stacks (moe.wi / moe.wo) execute nibble-packed "
+            f"int4 — keep sensitive sites int8 in the scheme map"
+        )
+
+
+def _quantize_weights(tree, bits: int, scheme=None,
+                      path: Tuple[str, ...] = ()):
+    """Fake (quantize-dequantize) materialization; with a scheme map the
+    matched sites use the 4-bit grid — the oracle for mixed int4 trees."""
     if isinstance(tree, dict):
         out = {}
         for k, v in tree.items():
             if isinstance(v, dict):
-                out[k] = _quantize_weights(v, bits)
+                out[k] = _quantize_weights(v, bits, scheme, path + (k,))
             elif k in QUANT_WEIGHT_KEYS and hasattr(v, "ndim") and v.ndim >= 2:
-                out[k] = fake_quant_weight(v, bits)
+                out[k] = fake_quant_weight(
+                    v, _site_bits(path + (k,), scheme, bits))
             else:
                 out[k] = v
         return out
     return tree
 
 
-def _materialize_int8(tree, bits: int):
-    """Replace quantizable weight leaves with stored-int8 + dequant scale.
+def _materialize_stored(tree, bits: int, scheme=None,
+                        path: Tuple[str, ...] = (), n_int4=None):
+    """Replace quantizable weight leaves with stored-integer + dequant scale.
 
-    Same per-output-channel symmetric grid as ``fake_quant_weight`` — the
-    fake-quant tree is the numerical oracle for this one."""
+    int8 sites store ``jnp.int8``; scheme-matched int4 sites store
+    nibble-packed ``jnp.uint8`` (two weights per byte along the input dim,
+    :func:`repro.core.quant.qtypes.pack_int4`). Same per-output-channel
+    symmetric grids as ``fake_quant_weight`` — the fake-quant tree (built
+    with the same scheme map) is the numerical oracle for this one."""
     if isinstance(tree, dict):
         out = {}
         for k, v in tree.items():
             if isinstance(v, dict):
-                out[k] = _materialize_int8(v, bits)
+                out[k] = _materialize_stored(v, bits, scheme, path + (k,),
+                                             n_int4)
             elif k in QUANT_WEIGHT_KEYS and hasattr(v, "ndim") and v.ndim >= 2:
-                w_q, w_scale = quantize_weight(v, bits)
-                out[k] = w_q
+                leaf_path = path + (k,)
+                site_bits = _site_bits(leaf_path, scheme, bits)
+                if site_bits == 4:
+                    _check_int4_site(leaf_path)
+                    w_q, w_scale = quantize_weight(v, 4)
+                    out[k] = pack_int4(w_q)
+                    if n_int4 is not None:
+                        n_int4[0] += 1
+                else:
+                    w_q, w_scale = quantize_weight(v, site_bits)
+                    out[k] = w_q
                 out[k + SCALE_SUFFIX] = w_scale.astype(jnp.float32)
             else:
                 out[k] = v
@@ -303,24 +386,56 @@ def ptq_model(cfg: ModelConfig, params, taps: TapCollector, *,
     ``fold_only``):
 
       * ``"fake"``: quantize-dequantize in f32 — the reference oracle the
-        deployment path is validated against;
+        deployment path is validated against. Honors a non-empty
+        ``cfg.quant.scheme_map`` (matched sites use the 4-bit grid), so it
+        stays the oracle for mixed int4 trees too;
       * ``"int8"``: a QuantizedParams tree — weight leaves stored
         ``jnp.int8`` plus ``<key>_scale`` / ``<key>_as`` leaves, executed
-        through the int8 kernels by ``models.layers.quant_linear``.
+        through the int8 kernels by ``models.layers.quant_linear``;
+      * ``"int4"``: mixed-scheme QuantizedParams tree driven by
+        ``cfg.quant.scheme_map`` — scheme-matched MoE expert stacks stored
+        as nibble-packed ``jnp.uint8`` int4 (two weights per byte along the
+        input dim), every other site int8 as above. An empty scheme map
+        falls back to the documented experts-only default
+        (``DEFAULT_INT4_SCHEME``) rather than silently quantizing sensitive
+        sites. DESIGN.md section 13.
     """
-    if materialize not in ("fake", "int8"):
-        raise ValueError(f"unknown materialize mode {materialize!r}")
-    if materialize == "int8" and not fold_only \
+    if materialize not in MATERIALIZE_MODES:
+        raise ValueError(
+            f"unknown materialize mode {materialize!r}; supported modes: "
+            f"{', '.join(MATERIALIZE_MODES)}"
+        )
+    if materialize in ("int8", "int4") and not fold_only \
             and cfg.family not in INT8_FAMILIES:
         raise NotImplementedError(
-            f"int8 materialization requires every linear site of the family "
-            f"to route through models.layers.quant_linear; {cfg.family!r} "
-            f"is not threaded yet (supported: {sorted(INT8_FAMILIES)})"
+            f"{materialize} materialization requires every linear site of "
+            f"the family to route through models.layers.quant_linear; "
+            f"{cfg.family!r} is not threaded yet "
+            f"(supported: {sorted(INT8_FAMILIES)})"
         )
+    scheme = None
+    if materialize == "int4":
+        scheme = _scheme_dict(cfg.quant.scheme_map or DEFAULT_INT4_SCHEME)
+        if not any(s == "int4" for s in scheme.values()):
+            raise ValueError(
+                "materialize='int4' with a scheme map that names no int4 "
+                "site; drop the map to get the experts-only default "
+                "(DEFAULT_INT4_SCHEME) or add moe.wi/moe.wo entries"
+            )
+    elif cfg.quant.scheme_map:
+        scheme = _scheme_dict(cfg.quant.scheme_map)
+        if materialize == "int8" and any(
+                s == "int4" for s in scheme.values()):
+            raise ValueError(
+                "scheme map names int4 sites but materialize='int8'; use "
+                "materialize='int4' for mixed-scheme trees"
+            )
+        if materialize == "int8":
+            scheme = None  # all-int8 map is the int8 path exactly
     rms = cfg.norm == "rmsnorm"
     a_bits = cfg.quant.a_bits
     w_bits = cfg.quant.w_bits
-    ascale = materialize == "int8" and not fold_only
+    ascale = materialize in ("int8", "int4") and not fold_only
     p = _copy(params)
 
     for key, prefix, sites in _layer_groups(cfg, p):
@@ -395,8 +510,17 @@ def ptq_model(cfg: ModelConfig, params, taps: TapCollector, *,
             p["enc_norm"]["a_scale"] = s_tilde[0]
 
     if not fold_only:
-        p = (_materialize_int8(p, w_bits) if materialize == "int8"
-             else _quantize_weights(p, w_bits))
+        if materialize in ("int8", "int4"):
+            n_int4 = [0]
+            p = _materialize_stored(p, w_bits, scheme, n_int4=n_int4)
+            if materialize == "int4" and n_int4[0] == 0:
+                raise ValueError(
+                    "materialize='int4' produced no int4 leaves: the scheme "
+                    "map matched no MoE expert stack in this model "
+                    "(int4 targets moe.wi/moe.wo; dense models have none)"
+                )
+        else:
+            p = _quantize_weights(p, w_bits, scheme)
     return p
 
 

@@ -13,11 +13,14 @@ import jax.numpy as jnp
 import numpy as np
 
 
-# QuantizedParams leaf-naming contract (DESIGN.md section 4): a materialized
-# int8 weight leaf ``<key>`` rides with a per-output-channel dequant scale
-# ``<key>_scale`` (f32 [..., out]) and, at sites with a calibrated static
-# activation scale, a folded per-site scale ``<key>_as`` (f32 scalar per
-# layer). ``models.layers.quant_linear`` dispatches on the weight dtype.
+# QuantizedParams leaf-naming contract (DESIGN.md sections 4/13): a
+# materialized sub-fp weight leaf ``<key>`` rides with a per-output-channel
+# dequant scale ``<key>_scale`` (f32 [..., out]) and, at sites with a
+# calibrated static activation scale, a folded per-site scale ``<key>_as``
+# (f32 scalar per layer). ``models.layers.quant_linear`` and the grouped
+# expert path dispatch on the weight dtype: ``jnp.int8`` = stored int8,
+# ``jnp.uint8`` = nibble-packed int4 (two signed 4-bit weights per byte
+# along the input dim — see pack_int4/unpack_int4).
 SCALE_SUFFIX = "_scale"
 ASCALE_SUFFIX = "_as"
 
@@ -29,6 +32,71 @@ def is_quantized_weight(leaf) -> bool:
         and leaf.dtype == jnp.int8
         and getattr(leaf, "ndim", 0) >= 2
     )
+
+
+# canonical name for the int8 predicate (the int4 predicate's sibling)
+is_int8_leaf = is_quantized_weight
+
+
+def is_int4_leaf(leaf) -> bool:
+    """True for a nibble-packed int4 weight leaf (``uint8`` storage, two
+    signed 4-bit weights per byte along the input dim; DESIGN.md §13). No
+    other QuantizedParams leaf is stored ``uint8``, so the dtype alone is
+    the dispatch key."""
+    return (
+        hasattr(leaf, "dtype")
+        and leaf.dtype == jnp.uint8
+        and getattr(leaf, "ndim", 0) >= 2
+    )
+
+
+# ---------------------------------------------------------------------------
+# Int4 nibble packing (DESIGN.md section 13)
+#
+# Layout: packing runs along the *input* (contraction) dim, axis -2 of a
+# [..., Din, Dout] weight — so per-output-channel scales and Dout tiling
+# are untouched.  byte[p] = (q[2p+1] & 0xF) << 4 | (q[2p] & 0xF): the LOW
+# nibble holds the EVEN logical row 2p, the HIGH nibble the ODD row 2p+1.
+# An odd Din is zero-padded to even before packing (a zero weight row
+# contributes nothing regardless of the activation multiplied against it),
+# so the packed dim is ceil(Din/2) and consumers pad x to 2*ceil(Din/2).
+# ---------------------------------------------------------------------------
+
+PACK_AXIS = -2  # the input/contraction dim of a [..., Din, Dout] weight
+
+
+def packed_rows(din: int) -> int:
+    """Packed-dim length for a logical input dim ``din``."""
+    return -(-din // 2)
+
+
+def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack int4-valued ``q`` ([..., Din, Dout], values in [-8, 7]) into
+    nibble-packed ``uint8`` [..., ceil(Din/2), Dout]."""
+    if q.shape[PACK_AXIS] % 2:
+        pad = [(0, 0)] * q.ndim
+        pad[PACK_AXIS] = (0, 1)
+        q = jnp.pad(q, pad)
+    lo = q[..., 0::2, :].astype(jnp.int32) & 0xF
+    hi = q[..., 1::2, :].astype(jnp.int32) & 0xF
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jnp.ndarray, din: Optional[int] = None) -> jnp.ndarray:
+    """Invert :func:`pack_int4`: ``uint8`` [..., P, Dout] -> sign-extended
+    ``int8``-stored int4 values [..., din (default 2*P), Dout]."""
+    b = packed.astype(jnp.int32)
+    lo = b & 0xF
+    hi = (b >> 4) & 0xF
+    # two's-complement sign extension of a 4-bit field: v - 16*(v>>3)
+    lo = lo - ((lo & 0x8) << 1)
+    hi = hi - ((hi & 0x8) << 1)
+    full = jnp.stack([lo, hi], axis=-2)  # [..., P, 2, Dout]
+    full = full.reshape(packed.shape[:-2] + (2 * packed.shape[-2],
+                                             packed.shape[-1]))
+    if din is not None:
+        full = full[..., :din, :]
+    return full.astype(jnp.int8)
 
 
 def qmax(bits: int) -> int:

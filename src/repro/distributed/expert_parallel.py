@@ -229,12 +229,15 @@ def expert_parallel_moe(x: jnp.ndarray, p: dict, cfg: ModelConfig, *,
     w_shard = {k: p[k] for k in _SHARDED_LEAVES if k in p}
     scalars = {k: p[k] for k in _SCALAR_LEAVES if k in p}
     if quantize_exchange is None:
-        quantize_exchange = (p["wi"].dtype == jnp.int8 and "wi_as" in p)
+        # int8 and nibble-packed-int4 (uint8) stacks both consume int8
+        # activations, so the exchange quantizes in either case
+        quantize_exchange = (p["wi"].dtype in (jnp.int8, jnp.uint8)
+                             and "wi_as" in p)
     elif quantize_exchange and "wi_as" not in p:
         raise ValueError(
             "quantize_exchange needs the folded fc1 activation scale "
-            "(`wi_as`) — only materialized-int8 QuantizedParams trees "
-            "carry it")
+            "(`wi_as`) — only materialized int8/int4 QuantizedParams "
+            "trees carry it")
 
     y = shard_map(
         partial(_ep_shard_body, cfg=cfg, n_shards=n,

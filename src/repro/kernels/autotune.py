@@ -49,10 +49,12 @@ from repro.kernels.expert_linear import legal_gmm_blocks
 from repro.kernels.quant_attention import legal_attn_blocks
 
 # Bumped when a kernel's tiling/legality logic changes (the sublane/lane
-# clamp-rounding fix shipped as version 2): entries swept against an older
-# kernel are dropped at load so a tuned table can never pin obsolete tiles.
+# clamp-rounding fix shipped as version 2; nibble-packed int4 weights and
+# the ``pk`` key facet shipped as grouped_matmul version 3): entries swept
+# against an older kernel are dropped at load so a tuned table can never
+# pin obsolete tiles.
 KERNEL_VERSIONS: Dict[str, int] = {
-    "grouped_matmul": 2,
+    "grouped_matmul": 3,
     "streaming_attention": 2,
 }
 TABLE_VERSION = 1
@@ -106,6 +108,12 @@ def _dt(dtype) -> str:
 
 def gmm_request(T: int, G: int, Din: int, Dout: int, *, x_dtype, w_dtype,
                 scaled: bool, ascaled: bool) -> TuneRequest:
+    # ``din`` is always the LOGICAL input dim (== x.shape[1]); ``pk`` marks
+    # nibble-packed int4 weights (uint8 storage, rows = ceil(din/2)) so the
+    # packed and int8 paths can never share a tuning entry even though the
+    # wdt facet already differs — the packed layout is part of the key
+    # contract (DESIGN.md sections 9/13).
+    packed = jnp.dtype(w_dtype) == jnp.uint8
     return TuneRequest("grouped_matmul", (
         ("T", bucket_pow2(T)),
         ("G", int(G)),
@@ -115,6 +123,7 @@ def gmm_request(T: int, G: int, Din: int, Dout: int, *, x_dtype, w_dtype,
         ("wdt", _dt(w_dtype)),
         ("ws", int(bool(scaled))),
         ("as", int(bool(ascaled))),
+        ("pk", int(packed)),
     ))
 
 
@@ -163,11 +172,13 @@ def gmm_candidates(req: TuneRequest) -> List[Tuple[int, int]]:
         eff = legal_gmm_blocks(bm, bn, T, Dout, xdt)
         if eff in seen:
             continue
-        # resident tiles: x [bm, Din] + w [Din, bn] + f32 acc/out [bm, bn].
+        # resident tiles: x [bm, Din] + w [Din, bn] + f32 acc/out [bm, bn]
+        # (packed int4: the w tile holds ceil(Din/2) nibble-pair rows).
         # The default (first) candidate is exempt: it is what an untuned
         # process runs, so it must stay in the sweep as the baseline —
         # dropping it would let a "tuned" pick be slower than untuned.
-        vmem = (eff[0] * Din * xb + Din * eff[1] * wb
+        w_rows = -(-Din // 2) if req.get("pk") else Din
+        vmem = (eff[0] * Din * xb + w_rows * eff[1] * wb
                 + 2 * eff[0] * eff[1] * 4)
         if out and vmem > _VMEM_BUDGET:
             continue
@@ -430,7 +441,10 @@ def build_candidate(req: TuneRequest, blocks: Tuple[int, int], *,
         Din, Dout = req.get("din"), req.get("dout")
         xdt, wdt = jnp.dtype(req.get("xdt")), jnp.dtype(req.get("wdt"))
         x = jnp.ones((T, Din), xdt)
-        w = jnp.ones((G, Din, Dout), wdt)
+        if req.get("pk"):  # nibble-packed int4: uint8 rows of ceil(Din/2)
+            w = jnp.full((G, -(-Din // 2), Dout), 0x11, jnp.uint8)
+        else:
+            w = jnp.ones((G, Din, Dout), wdt)
         gs = _balanced_sizes(T, G)
         kw = dict(block_m=blocks[0], block_n=blocks[1], interpret=interpret)
         if req.get("ws"):

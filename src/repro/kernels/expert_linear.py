@@ -99,13 +99,14 @@ def _gmm_kernel(
     row_start,  # [n_work] first sorted row of this work item's group
     row_end,  # [n_work] one-past-last row (start == end for padding)
     x_ref,  # [bm, Din]
-    w_ref,  # [1, Din, bn]
+    w_ref,  # [1, Din, bn] (int4_packed: [1, Din//2, bn] uint8 nibble pairs)
     *rest,  # (w_scale_ref?, a_scale_ref?, o_ref, acc)
     block_m: int,
     n_work: int,
     has_scale: bool,
     has_ascale: bool,
     int8_full: bool,
+    int4_packed: bool,
 ):
     rest = list(rest)
     ws_ref = rest.pop(0) if has_scale else None
@@ -127,7 +128,25 @@ def _gmm_kernel(
     )
     in_group = (rows >= row_start[w]) & (rows < row_end[w])  # [bm, 1]
 
-    if int8_full:
+    if int4_packed:
+        # Unpack the nibble-packed int4 tile in-register, right where the
+        # fused w_scale/a_scale flush already lives: low nibble = even input
+        # row 2p, high nibble = odd row 2p+1 (DESIGN.md section 13). Sign
+        # extension of a 4-bit field: v - 16*(v>>3). The unpacked tile only
+        # ever exists at [Din//2*2, bn] VMEM-tile granularity — no full
+        # int8 expert stack is materialized anywhere.
+        xi = jnp.where(in_group, x_ref[...], 0).astype(jnp.int8)
+        wq = w_ref[0].astype(jnp.int32)  # [P, bn] packed nibble pairs
+        lo = wq & 0xF
+        hi = (wq >> 4) & 0xF
+        lo = lo - ((lo & 0x8) << 1)
+        hi = hi - ((hi & 0x8) << 1)
+        wu = jnp.stack([lo, hi], axis=1)  # [P, 2, bn]
+        wu = wu.reshape(2 * wq.shape[0], wq.shape[1]).astype(jnp.int8)
+        part = jax.lax.dot(
+            xi, wu, preferred_element_type=jnp.int32
+        ).astype(jnp.float32)
+    elif int8_full:
         xi = jnp.where(in_group, x_ref[...], 0).astype(jnp.int8)
         part = jax.lax.dot(
             xi, w_ref[0], preferred_element_type=jnp.int32
@@ -152,7 +171,7 @@ def _gmm_kernel(
 
 def grouped_matmul(
     x: jnp.ndarray,  # [T, Din] rows sorted by group
-    w: jnp.ndarray,  # [G, Din, Dout]
+    w: jnp.ndarray,  # [G, Din, Dout]; uint8 = nibble-packed int4 [G, ceil(Din/2), Dout]
     group_sizes: jnp.ndarray,  # [G] int32, sum == T
     *,
     w_scale: Optional[jnp.ndarray] = None,  # [G, Dout] per-expert dequant
@@ -164,7 +183,23 @@ def grouped_matmul(
 ) -> jnp.ndarray:
     T, Din = x.shape
     G, _, Dout = w.shape
-    int8_in = x.dtype == jnp.int8 and w.dtype == jnp.int8
+    int4_packed = w.dtype == jnp.uint8
+    if int4_packed:
+        if x.dtype != jnp.int8:
+            raise TypeError(
+                "nibble-packed int4 weights require int8 activations "
+                f"(W4A8); got x dtype {x.dtype}"
+            )
+        P = w.shape[1]
+        if -(-Din // 2) != P:
+            raise ValueError(
+                f"packed weight dim {P} does not match input dim {Din} "
+                f"(expected ceil(Din/2) = {-(-Din // 2)})"
+            )
+        if Din != 2 * P:  # odd Din: the packed pad row pairs with a zero col
+            x = jnp.pad(x, ((0, 0), (0, 2 * P - Din)))
+            Din = 2 * P
+    int8_in = int4_packed or (x.dtype == jnp.int8 and w.dtype == jnp.int8)
     if T == 0:  # all groups empty: nothing routed this step
         return jnp.zeros(
             (0, Dout),
@@ -185,13 +220,14 @@ def grouped_matmul(
 
     int8_full = x.dtype == jnp.int8 and w.dtype == jnp.int8
     if out_dtype is None:
-        out_dtype = jnp.float32 if int8_full else x.dtype
+        out_dtype = jnp.float32 if (int8_full or int4_packed) else x.dtype
     has_scale = w_scale is not None
     has_ascale = a_scale is not None
 
+    w_rows = w.shape[1]  # Din, or ceil(Din/2) packed
     in_specs = [
         pl.BlockSpec((block_m, Din), lambda n, wk, g_, m_, s_, e_: (m_[wk], 0)),
-        pl.BlockSpec((1, Din, block_n), lambda n, wk, g_, m_, s_, e_: (g_[wk], 0, n)),
+        pl.BlockSpec((1, w_rows, block_n), lambda n, wk, g_, m_, s_, e_: (g_[wk], 0, n)),
     ]
     args = [xp, wp]
     if has_scale:
@@ -214,6 +250,7 @@ def grouped_matmul(
         has_scale=has_scale,
         has_ascale=has_ascale,
         int8_full=int8_full,
+        int4_packed=int4_packed,
     )
 
     out = pl.pallas_call(

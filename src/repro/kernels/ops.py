@@ -167,12 +167,14 @@ def _grouped_matmul(
 ) -> jnp.ndarray:
     mode = _mode()
     int8_w = w.dtype == jnp.int8
-    if int8_w and x.dtype != jnp.int8:
+    int4_w = w.dtype == jnp.uint8  # nibble-packed int4 stack (W4A8)
+    if (int8_w or int4_w) and x.dtype != jnp.int8:
         if a_scale is None:
             raise ValueError(
-                "int8 grouped weights need the folded activation scale "
-                "(a PTQ int8 tree carries it as the `wi_as` / `wo_a_scale` "
-                "leaf — was the model calibrated with taps?)"
+                f"{'int4' if int4_w else 'int8'} grouped weights need the "
+                "folded activation scale (a PTQ QuantizedParams tree "
+                "carries it as the `wi_as` / `wo_a_scale` leaf — was the "
+                "model calibrated with taps?)"
             )
         from repro.core.quant.qtypes import quantize_sym
 
@@ -191,6 +193,33 @@ def _grouped_matmul(
                    interpret=(mode == "interpret"))
     # ragged_dot is the fast XLA path on CPU/GPU (grouped_matmul_ref is the
     # oracle used by tests; ragged_dot matches it exactly).
+    if int4_w:
+        # Nibble-planar contraction: the low-nibble plane multiplies the
+        # even activation columns, the high-nibble plane the odd columns —
+        # two half-width ragged_dots whose int32 sum equals the unpacked
+        # contraction exactly. The full-width int8 expert stack is never
+        # materialized (the jaxpr only holds [G, Din/2, Dout] planes).
+        P = w.shape[1]
+        xp = x if x.shape[1] == 2 * P else jnp.pad(
+            x, ((0, 0), (0, 2 * P - x.shape[1])))
+        w32 = w.astype(jnp.int32)
+        lo = ((w32 & 0xF) - ((w32 & 0x8) << 1)).astype(jnp.int8)
+        h4 = (w32 >> 4) & 0xF
+        hi = (h4 - ((h4 & 0x8) << 1)).astype(jnp.int8)
+        gs = group_sizes.astype(jnp.int32)
+        acc = (
+            jax.lax.ragged_dot(xp[:, 0::2], lo, gs,
+                               preferred_element_type=jnp.int32)
+            + jax.lax.ragged_dot(xp[:, 1::2], hi, gs,
+                                 preferred_element_type=jnp.int32)
+        )
+        y = acc.astype(jnp.float32)
+        seg = _row_groups(group_sizes, x.shape[0])
+        if w_scale is not None:
+            y = y * w_scale[seg]
+        if a_scale is not None:
+            y = y * a_scale
+        return y
     if int8_w:
         acc = jax.lax.ragged_dot(x, w, group_sizes.astype(jnp.int32),
                                  preferred_element_type=jnp.int32)
@@ -242,9 +271,9 @@ def grouped_mlp(
     else:
         h = act_fn(act)(h)
     maybe_record(taps, "moe_mid", h)
-    if wo.dtype == jnp.int8:
-        # real-int8 fc2: mid_a_scale is the *actual* quantizer here (same
-        # value the fake-quant oracle clips to — identical grids)
+    if wo.dtype in (jnp.int8, jnp.uint8):
+        # real-int8/packed-int4 fc2: mid_a_scale is the *actual* quantizer
+        # here (same value the fake-quant oracle clips to — identical grids)
         y = grouped_matmul(h, wo, group_sizes, w_scale=wo_scale,
                            a_scale=mid_a_scale, a_bits=a_bits)
     else:

@@ -147,6 +147,22 @@ def grouped_matmul_q_ref(
     return y
 
 
+def grouped_matmul_q4_ref(
+    x_q: jnp.ndarray,  # int8 [T, Din] rows sorted by group
+    w_packed: jnp.ndarray,  # uint8 [G, ceil(Din/2), Dout] nibble-packed int4
+    group_sizes: jnp.ndarray,  # [G] int32, sum == T
+    w_scale: jnp.ndarray,  # f32 [G, Dout] per-expert per-channel dequant
+    a_scale: Optional[jnp.ndarray] = None,  # f32 scalar activation dequant
+) -> jnp.ndarray:
+    """Nibble-packed int4 grouped oracle (W4A8): unpack to int4 values held
+    in int8, then the exact-int32-accumulate int8 oracle — the bit-exactness
+    ground truth for the packed Pallas path (DESIGN.md section 13)."""
+    from repro.core.quant.qtypes import unpack_int4
+
+    w_q = unpack_int4(w_packed, x_q.shape[1])
+    return grouped_matmul_q_ref(x_q, w_q, group_sizes, w_scale, a_scale)
+
+
 def grouped_mlp_ref(
     x: jnp.ndarray,  # [T, D] sorted by group
     wi: jnp.ndarray,  # [G, D, Dh]  (Dh = 2*ff for GLU)

@@ -90,6 +90,16 @@ def quant_linear(x: jnp.ndarray, p: dict, key: str,
     the same contract).
     """
     w = p[key]
+    if w.dtype == jnp.uint8:
+        # Nibble-packed int4 leaf at a quant_linear site. The packed
+        # *kernel* execution exists only for the grouped expert path (the
+        # scheme-map policy keeps quant_linear sites int8 — ptq validates
+        # that), so this is a compatibility path for hand-built trees:
+        # unpack once to int4 values held in int8 and fall through the
+        # int8 dispatch below — same grids, same Eq. 9 rescale.
+        from repro.core.quant.qtypes import unpack_int4
+
+        w = unpack_int4(w, x.shape[-1])
     if w.dtype != jnp.int8:
         return x @ w
     from repro.core.quant.qtypes import (

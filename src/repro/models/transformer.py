@@ -153,10 +153,17 @@ def _moe_apply(x: jnp.ndarray, p: dict, cfg: ModelConfig, taps=None):
     r = route_topk(xt, p["gate"], p.get("gate_b"), m.top_k,
                    logits=gate_logits)
     wi, wo = p["wi"], p["wo"]
-    if wi.dtype == jnp.int8 and m.impl == "gshard":
+    if wi.dtype in (jnp.int8, jnp.uint8) and m.impl == "gshard":
         # The capacity-einsum path is the training/dry-run fallback; it has
-        # no int8 contraction, so dequantize on the fly. The serving path
-        # (impl="grouped") executes int8 inside the kernel instead.
+        # no integer contraction, so dequantize on the fly (nibble-packed
+        # int4 stacks unpack first). The serving path (impl="grouped")
+        # executes int8/packed-int4 inside the kernel instead.
+        if wi.dtype == jnp.uint8:
+            from repro.core.quant.qtypes import unpack_int4
+
+            hid = wi.shape[-1]
+            wi = unpack_int4(wi, D)
+            wo = unpack_int4(wo, hid // 2 if cfg.glu else hid)
         wi = wi.astype(jnp.float32) * p["wi_scale"][..., None, :]
         wo = wo.astype(jnp.float32) * p["wo_scale"][..., None, :]
     if m.impl == "gshard":

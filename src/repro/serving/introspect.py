@@ -236,13 +236,56 @@ def tree_bytes(tree) -> int:
         return 0
 
 
+def param_byte_breakdown(tree) -> dict:
+    """Dtype/packing-aware parameter byte accounting (DESIGN.md §13).
+
+    Sizes every leaf from its ACTUAL storage dtype (``nbytes``) — never an
+    assumed int8/fp32 width — and splits out:
+
+      * ``by_dtype``: bytes per storage dtype name (``uint8`` = the
+        nibble-packed int4 leaves, two weights per byte);
+      * ``expert_stack_bytes``: bytes of the MoE expert stacks (``wi``/
+        ``wo`` leaves under a ``moe`` subtree) — the operand the int4
+        scheme halves;
+      * ``int4_packed_bytes``: bytes of nibble-packed leaves anywhere.
+    """
+    out = {"by_dtype": {}, "expert_stack_bytes": 0, "int4_packed_bytes": 0}
+    if tree is None:
+        return out
+    try:
+        import jax
+
+        from repro.core.quant.qtypes import is_int4_leaf
+
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            n = int(getattr(leaf, "nbytes", 0) or 0)
+            if not n:
+                continue
+            dt = str(getattr(leaf, "dtype", "unknown"))
+            out["by_dtype"][dt] = out["by_dtype"].get(dt, 0) + n
+            keys = [getattr(k, "key", None) for k in path]
+            if keys and keys[-1] in ("wi", "wo") and "moe" in keys[:-1]:
+                out["expert_stack_bytes"] += n
+            if is_int4_leaf(leaf):
+                out["int4_packed_bytes"] += n
+    except Exception:
+        pass
+    return out
+
+
 def memory_watermark(devices=None, *, param_bytes: int = 0,
                      cache_bytes: int = 0,
-                     program_costs: Optional[Dict[str, dict]] = None) -> dict:
+                     program_costs: Optional[Dict[str, dict]] = None,
+                     param_breakdown: Optional[dict] = None) -> dict:
     """Replica memory watermark: real allocator stats summed over the
     replica's devices when the backend exposes ``memory_stats()`` (TPU/GPU),
     else the analytic model — resident params + K/V cache + the largest
-    compiled temp arena across the replica's programs — marked estimated."""
+    compiled temp arena across the replica's programs — marked estimated.
+
+    ``param_bytes`` (and the optional ``param_breakdown`` from
+    :func:`param_byte_breakdown`) are sized from actual leaf dtypes
+    including nibble packing, so an int4 expert tree reports ~2x fewer
+    expert bytes than int8 even on the analytic (CPU) path."""
     if devices is None:
         try:
             import jax
@@ -269,6 +312,13 @@ def memory_watermark(devices=None, *, param_bytes: int = 0,
         "peak_temp_bytes": peak_temp,
         "devices": len(rows) if rows else len(list(devices)),
     }
+    if param_breakdown:
+        out["param_bytes_by_dtype"] = dict(param_breakdown.get("by_dtype",
+                                                               {}))
+        out["expert_stack_bytes"] = int(
+            param_breakdown.get("expert_stack_bytes", 0))
+        out["int4_packed_bytes"] = int(
+            param_breakdown.get("int4_packed_bytes", 0))
     if rows:
         out["source"] = "device"
         out["estimated"] = False
@@ -294,6 +344,7 @@ def install(metrics, *, cfg, programs: Dict[str, object], params=None,
     everything — introspection must never fail a warmup."""
     try:
         param_bytes = tree_bytes(params)
+        param_breakdown = param_byte_breakdown(params)
         cache_bytes = tree_bytes(cache)
         dev = None
         try:
@@ -316,7 +367,8 @@ def install(metrics, *, cfg, programs: Dict[str, object], params=None,
         def probe() -> dict:
             return memory_watermark(devices, param_bytes=param_bytes,
                                     cache_bytes=cache_bytes,
-                                    program_costs=costs)
+                                    program_costs=costs,
+                                    param_breakdown=param_breakdown)
 
         metrics.memory_probe = probe
         metrics.set_memory(probe())

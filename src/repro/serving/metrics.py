@@ -866,7 +866,8 @@ class ClusterMetrics:
             if not mem:
                 continue
             for kind in ("param_bytes", "kv_cache_bytes",
-                         "watermark_bytes", "bytes_in_use", "bytes_limit"):
+                         "watermark_bytes", "bytes_in_use", "bytes_limit",
+                         "expert_stack_bytes", "int4_packed_bytes"):
                 if kind in mem:
                     mem_lines.append(
                         'repro_replica_memory_bytes'

@@ -109,6 +109,40 @@ def test_quantized_tree_roundtrip_and_structure_free_restore(tmp_path):
     assert arr.dtype == np.int8
 
 
+def test_int4_packed_tree_roundtrip_and_structure_free_restore(tmp_path):
+    """A mixed int4/int8 QuantizedParams tree — nibble-packed ``uint8``
+    expert stacks next to int8 sensitive sites and f32 scale siblings —
+    keeps exact dtypes and bytes on disk, and ``restore(None)`` rebuilds it
+    from the manifest alone (serving loads PTQ'd trees without a template)."""
+    from repro.core.quant.qtypes import pack_int4
+
+    rng = np.random.default_rng(0)
+    q = rng.integers(-8, 8, (2, 4, 7, 8)).astype(np.int8)  # odd Din: pad row
+    tree = {
+        "moe": {
+            "wi": pack_int4(jnp.asarray(q)),
+            "wi_scale": jnp.asarray(rng.random((2, 4, 8)), jnp.float32),
+            "wi_as": jnp.asarray(rng.random(2), jnp.float32),
+            "gate": jnp.asarray(rng.integers(-128, 128, (2, 8, 4)), jnp.int8),
+            "gate_scale": jnp.asarray(rng.random((2, 4)), jnp.float32),
+        },
+    }
+    assert tree["moe"]["wi"].dtype == jnp.uint8
+    m = CheckpointManager(str(tmp_path))
+    m.save(1, tree, blocking=True)
+    for restored in (m.restore(tree), m.restore(None)):
+        flat_t = dict(_flatten_pairs(tree))
+        flat_r = dict(_flatten_pairs(restored))
+        assert flat_t.keys() == flat_r.keys()
+        for k in flat_t:
+            assert flat_t[k].dtype == flat_r[k].dtype, k
+            np.testing.assert_array_equal(
+                np.asarray(flat_t[k]), np.asarray(flat_r[k]))
+    # packed leaves are stored uint8 (two weights per byte) on disk
+    arr = np.load(tmp_path / "step_00000001" / "moe__wi.npy")
+    assert arr.dtype == np.uint8 and arr.shape == (2, 4, 4, 8)
+
+
 def _flatten_pairs(tree, prefix=""):
     if isinstance(tree, dict):
         for k, v in tree.items():

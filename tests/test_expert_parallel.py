@@ -42,13 +42,14 @@ def trees():
                for i in range(2)]
     taps = calibrate_model(cfg, params, batches)
     p_int8 = ptq_model(cfg, params, taps, materialize="int8")
+    p_int4 = ptq_model(cfg, params, taps, materialize="int4")
     batch = M.synth_batch(cfg, shape, jax.random.PRNGKey(7))
-    return cfg, params, p_int8, batch
+    return cfg, params, p_int8, p_int4, batch
 
 
 @requires_devices(8)
 def test_ep_fp32_matches_single_device(trees):
-    cfg, params, _, batch = trees
+    cfg, params, _, _, batch = trees
     y_ref, aux_ref = M.forward(params, cfg, batch)
     with use_ep_mesh(make_ep_mesh(8)):
         y_ep, aux_ep = M.forward(params, _ep(cfg), batch)
@@ -61,7 +62,7 @@ def test_ep_fp32_matches_single_device(trees):
 def test_ep_int8_matches_single_device_int8(trees):
     """Acceptance: expert-parallel int8 MoE-ViT forward on an 8-device mesh
     matches the single-device materialized-int8 output."""
-    cfg, _, p_int8, batch = trees
+    cfg, _, p_int8, _, batch = trees
     qcfg = quantized_config(cfg)
     y_ref, _ = M.forward(p_int8, qcfg, batch)
     with use_ep_mesh(make_ep_mesh(8)):
@@ -73,7 +74,7 @@ def test_ep_int8_matches_single_device_int8(trees):
 
 @requires_devices(8)
 def test_ep_classify_top1_matches(trees):
-    cfg, _, p_int8, _ = trees
+    cfg, _, p_int8, _, _ = trees
     qcfg = quantized_config(cfg)
     rng = np.random.default_rng(5)
     x = jnp.asarray(
@@ -92,7 +93,7 @@ def test_ep_jaxpr_shards_expert_stacks_and_exchanges_tokens(trees):
     """Acceptance: the jaxpr shows sharded expert weights — the shard_map
     body computes on E/n-expert local slices (never the full stack) — and
     an all_to_all token exchange."""
-    cfg, _, p_int8, _ = trees
+    cfg, _, p_int8, _, _ = trees
     qcfg = _ep(quantized_config(cfg))
     x = jnp.zeros((2, cfg.image_tokens - 1, 768), jnp.float32)
     with use_ep_mesh(make_ep_mesh(8)):
@@ -107,10 +108,49 @@ def test_ep_jaxpr_shards_expert_stacks_and_exchanges_tokens(trees):
     assert f"i8[{e_local},{qcfg.moe.d_ff},{D}]" in jaxpr
 
 
+@requires_devices(8)
+def test_ep_int4_bit_identical_to_single_device(trees):
+    """Acceptance: expert-parallel forward over the mixed int4/int8 tree on
+    8 fake devices is BIT-IDENTICAL to single-device. Unlike fp32, every
+    contraction on this path is exact int32 arithmetic and each token's
+    expert partials are combined in router order on both paths, so sharding
+    must not change a single ulp."""
+    cfg, _, _, p_int4, batch = trees
+    qcfg = quantized_config(cfg)
+    y_ref, _ = M.forward(p_int4, qcfg, batch)
+    with use_ep_mesh(make_ep_mesh(8)):
+        y_ep, _ = M.forward(p_int4, _ep(qcfg), batch)
+    np.testing.assert_array_equal(np.asarray(y_ep), np.asarray(y_ref))
+
+
+@requires_devices(8)
+def test_ep_jaxpr_shards_packed_int4_stacks(trees):
+    """The shard_map body consumes uint8 nibble-packed LOCAL expert slices
+    (E/n experts, ceil(Din/2) rows) — sharding does not unpack — and the
+    token exchange still moves int8 rows (auto-enabled for packed trees)."""
+    from repro.core.quant.qtypes import packed_rows
+
+    cfg, _, _, p_int4, _ = trees
+    qcfg = _ep(quantized_config(cfg))
+    x = jnp.zeros((2, cfg.image_tokens - 1, 768), jnp.float32)
+    with use_ep_mesh(make_ep_mesh(8)):
+        jaxpr = str(jax.make_jaxpr(
+            lambda p, b: M.classify(p, qcfg, b, top_k=5))(p_int4, x))
+    E, D = qcfg.moe.num_experts, qcfg.d_model
+    hid = qcfg.moe.d_ff * (2 if qcfg.glu else 1)
+    e_local = E // 8
+    assert f"u8[{e_local},{packed_rows(D)},{hid}]" in jaxpr, \
+        "per-shard compute does not consume a packed local expert slice"
+    assert f"u8[{e_local},{packed_rows(qcfg.moe.d_ff)},{D}]" in jaxpr
+    a2a = [ln for ln in jaxpr.splitlines() if "all_to_all" in ln]
+    assert any(":i8[" in ln for ln in a2a), \
+        f"token exchange of the packed tree still moves fp rows: {a2a}"
+
+
 @requires_devices(2)
 def test_ep_works_at_two_shards(trees):
     """E=8 over 2 shards (4 local experts): same equivalence."""
-    cfg, params, _, batch = trees
+    cfg, params, _, _, batch = trees
     y_ref, _ = M.forward(params, cfg, batch)
     with use_ep_mesh(make_ep_mesh(2)):
         y_ep, _ = M.forward(params, _ep(cfg), batch)
@@ -122,7 +162,7 @@ def test_ep_works_at_two_shards(trees):
 def test_ep_layer_level_counts_and_aux(trees):
     """Layer-level call: routed-token counts match the replicated router's
     histogram and every (token, slot) pair is preserved (dropless)."""
-    cfg, params, _, _ = trees
+    cfg, params, _, _, _ = trees
     rng = np.random.default_rng(3)
     x = jnp.asarray(rng.standard_normal((2, 9, cfg.d_model)), jnp.float32)
     lp = jax.tree.map(lambda a: a[0], params["pairs_moe"])["moe"]
@@ -139,7 +179,7 @@ def test_ep_int8_exchange_matches_fp32_exchange(trees):
     activation scale) is elementwise-before vs elementwise-after the
     exchange — the output must be *bit-identical* to moving fp32 rows and
     letting the grouped kernel quantize them post-exchange."""
-    cfg, _, p_int8, _ = trees
+    cfg, _, p_int8, _, _ = trees
     qcfg = _ep(quantized_config(cfg))
     rng = np.random.default_rng(11)
     x = jnp.asarray(rng.standard_normal((2, 9, cfg.d_model)), jnp.float32)
@@ -157,7 +197,7 @@ def test_ep_int8_tree_exchanges_int8_payload(trees):
     """The forward token exchange of a materialized-int8 tree moves int8
     rows (auto-enabled quantize_exchange): the jaxpr carries an int8
     all_to_all alongside the f32 return exchange."""
-    cfg, _, p_int8, _ = trees
+    cfg, _, p_int8, _, _ = trees
     qcfg = _ep(quantized_config(cfg))
     x = jnp.zeros((2, 9, cfg.d_model), jnp.float32)
     lp = jax.tree.map(lambda a: a[0], p_int8["pairs_moe"])["moe"]
@@ -200,6 +240,6 @@ def test_validate_ep_rejects_bad_configs():
 
 
 def test_ep_without_mesh_raises(trees):
-    cfg, params, _, batch = trees
+    cfg, params, _, _, batch = trees
     with pytest.raises(RuntimeError, match="no EP mesh"):
         M.forward(params, _ep(cfg), batch)

@@ -1,0 +1,349 @@
+"""The executable int4 expert-stack path (DESIGN.md section 13).
+
+Covers the mixed-scheme sub-int8 contract end to end: nibble pack/unpack
+round-trips, the packed grouped kernel bit-identical to the int4 fake-quant
+oracle (including odd contraction dims and empty groups, in interpret
+mode), the materialization contract of ``ptq_model(..., materialize="int4")``
+(experts packed uint8, sensitive sites int8), the scheme-map validation
+surface, logit fidelity of the real-int4 forward against the mixed fake
+oracle, the no-unpacked-expert-copy property of the jitted forward (neither
+fp NOR full-width int8), dtype-aware memory accounting, and serving decode
+on a mixed int4/int8 tree.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models as M
+from repro.configs import get_shape, smoke_config
+from repro.core.quant.linear_quant import quantize_weight
+from repro.core.quant.ptq import (
+    DEFAULT_INT4_SCHEME, calibrate_model, ptq_model, quantized_config,
+)
+from repro.core.quant.qtypes import (
+    is_int4_leaf, is_int8_leaf, pack_int4, packed_rows, quantize_sym,
+    unpack_int4,
+)
+from repro.kernels import ref
+from repro.kernels.expert_linear import grouped_matmul
+from repro.serving.engine import Request, ServeEngine
+
+
+def _scheme_cfg(cfg, scheme_map=DEFAULT_INT4_SCHEME):
+    return cfg.replace(
+        quant=dataclasses.replace(cfg.quant, scheme_map=scheme_map))
+
+
+# ---------------------------------------------------------------------------
+# Packing primitives
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("din", [8, 7, 2, 1])
+def test_pack_unpack_roundtrip_exact(rng, din):
+    """pack_int4 -> unpack_int4 is the identity on int4-range values, for
+    even and odd (zero-padded) contraction dims."""
+    q = rng.integers(-8, 8, (3, din, 5)).astype(np.int8)
+    packed = pack_int4(jnp.asarray(q))
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == (3, packed_rows(din), 5)
+    back = unpack_int4(packed, din)
+    assert back.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(back), q)
+    # without the logical dim, the padded even length comes back
+    full = unpack_int4(packed)
+    assert full.shape == (3, 2 * packed_rows(din), 5)
+    np.testing.assert_array_equal(np.asarray(full[:, :din]), q)
+    if din % 2:  # the phantom odd row is the zero pad
+        np.testing.assert_array_equal(np.asarray(full[:, din]),
+                                      np.zeros((3, 5), np.int8))
+
+
+def test_nibble_layout_low_even_high_odd():
+    """byte[p] = (q[2p+1] & 0xF) << 4 | (q[2p] & 0xF): LOW nibble holds the
+    EVEN row — the layout the Pallas kernel unpacks in-tile."""
+    q = jnp.asarray([[[3], [-2]]], jnp.int8)  # rows 0, 1 of one column
+    b = int(np.asarray(pack_int4(q))[0, 0, 0])
+    assert b & 0xF == 3  # low nibble: even row
+    assert (b >> 4) & 0xF == (-2) & 0xF  # high nibble: odd row
+
+
+def test_int4_leaf_predicate():
+    w4 = jnp.zeros((2, 3, 4), jnp.uint8)
+    w8 = jnp.zeros((2, 3, 4), jnp.int8)
+    assert is_int4_leaf(w4) and not is_int4_leaf(w8)
+    assert is_int8_leaf(w8) and not is_int8_leaf(w4)
+    assert not is_int4_leaf(jnp.zeros((4,), jnp.uint8))  # scalars/vectors
+
+
+# ---------------------------------------------------------------------------
+# Kernel level: nibble-packed grouped matmul vs the int4 oracle
+# ---------------------------------------------------------------------------
+
+INT4_GROUP_CASES = [
+    (4, 64, 96, [40, 0, 17, 71]),
+    (1, 64, 64, [130]),  # dense mode
+    (8, 32, 32, [0, 0, 5, 0, 123, 1, 0, 16]),  # mostly-empty groups
+    (3, 32, 48, [0, 0, 0]),  # fully empty: zero tokens routed
+    (4, 31, 40, [9, 0, 4, 6]),  # odd Din: zero-padded last nibble row
+]
+
+
+@pytest.mark.parametrize("G,Din,Dout,sizes", INT4_GROUP_CASES)
+@pytest.mark.parametrize("with_ascale", [False, True])
+def test_grouped_matmul_int4_packed_bit_identical_to_oracle(
+        rng, G, Din, Dout, sizes, with_ascale):
+    """Packed int4 x int8 grouped kernel (interpret mode, real kernel body
+    on CPU) is BIT-IDENTICAL to grouped_matmul_q4_ref — both accumulate the
+    same int32 products and apply the same f32 rescale."""
+    T = sum(sizes)
+    gs = jnp.asarray(sizes, jnp.int32)
+    xf = rng.standard_normal((T, Din)).astype(np.float32)
+    a_scale = jnp.asarray(max(np.abs(xf).max(), 1e-6) / 127.0, jnp.float32) \
+        if T else jnp.asarray(0.05, jnp.float32)
+    x_q = quantize_sym(jnp.asarray(xf), a_scale, 8)
+    wf = jnp.asarray(rng.standard_normal((G, Din, Dout)), jnp.float32)
+    w_q, w_scale = quantize_weight(wf, 4)  # int4 grid, per-out-channel
+    w_packed = pack_int4(w_q)
+    assert w_packed.shape == (G, packed_rows(Din), Dout)
+
+    y = grouped_matmul(
+        x_q, w_packed, gs,
+        w_scale=w_scale,
+        a_scale=a_scale if with_ascale else None,
+        block_m=32, block_n=32, interpret=True,
+    )
+    y_ref = ref.grouped_matmul_q4_ref(
+        x_q, w_packed, gs, w_scale,
+        a_scale if with_ascale else None,
+    )
+    assert y.shape == (T, Dout) and y.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+def test_grouped_matmul_int4_rejects_fp_activations(rng):
+    """W4A8 means int8 activations — fp rows against a packed stack is a
+    caller bug, not something to quantize silently at this layer."""
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    w = jnp.zeros((2, 8, 8), jnp.uint8)
+    gs = jnp.asarray([5, 3], jnp.int32)
+    with pytest.raises(TypeError, match="int8"):
+        grouped_matmul(x, w, gs, w_scale=jnp.ones((2, 8)), interpret=True)
+
+
+def test_grouped_matmul_int4_rejects_wrong_packed_rows(rng):
+    x = jnp.zeros((8, 16), jnp.int8)
+    w = jnp.zeros((2, 16, 8), jnp.uint8)  # should be ceil(16/2) = 8 rows
+    gs = jnp.asarray([5, 3], jnp.int32)
+    with pytest.raises(ValueError, match="pack"):
+        grouped_matmul(x, w, gs, w_scale=jnp.ones((2, 8)), interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# PTQ materialization + end-to-end fidelity on the paper's MoE-ViT
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def moe_vit_int4():
+    cfg = smoke_config("m3vit-small").replace(remat=False)
+    shape = get_shape("train_4k").replace(seq_len=24, global_batch=2)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    batches = [M.synth_batch(cfg, shape, jax.random.PRNGKey(i))
+               for i in range(2)]
+    taps = calibrate_model(cfg, params, batches)
+    p_int4 = ptq_model(cfg, params, taps, materialize="int4")
+    # the mixed fake oracle: same scheme map, quantize-dequantize in f32
+    p_fake = ptq_model(_scheme_cfg(cfg), params, taps)
+    return cfg, params, batches, taps, p_int4, p_fake
+
+
+def test_int4_materialization_contract(moe_vit_int4):
+    """Expert stacks are stored nibble-packed uint8 (half the input rows)
+    with per-output-channel scales; every sensitive site stays int8."""
+    cfg, params, batches, taps, p, _ = moe_vit_int4
+    moe = p["pairs_moe"]["moe"]
+    n_pairs = cfg.num_layers // 2
+    E, D = cfg.moe.num_experts, cfg.d_model
+    hid = cfg.moe.d_ff * (2 if cfg.glu else 1)
+    assert moe["wi"].dtype == jnp.uint8
+    assert moe["wi"].shape == (n_pairs, E, packed_rows(D), hid)
+    assert moe["wi_scale"].shape == (n_pairs, E, hid)
+    assert moe["wi_as"].shape == (n_pairs,)
+    assert moe["wo"].dtype == jnp.uint8
+    assert moe["wo"].shape == (n_pairs, E, packed_rows(cfg.moe.d_ff), D)
+    assert moe["wo_scale"].shape == (n_pairs, E, D)
+    assert moe["wo_a_scale"].shape == (n_pairs,)
+    # sensitive sites: router, attention, head, patch all stay int8
+    assert moe["gate"].dtype == jnp.int8
+    for grp in ("pairs_dense", "pairs_moe"):
+        for k in ("wq", "wk", "wv", "wo"):
+            assert p[grp]["attn"][k].dtype == jnp.int8
+    assert p["head"].dtype == jnp.int8
+    assert p["patch_proj"].dtype == jnp.int8
+    # the packed stacks round-trip to the same int4 codes the oracle uses
+    w_q, _ = quantize_weight(
+        ptq_model(cfg, params, taps, fold_only=True)["pairs_moe"]["moe"]["wi"],
+        4)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_int4(moe["wi"], D)), np.asarray(w_q))
+
+
+def test_int4_fake_oracle_keeps_fp_leaves(moe_vit_int4):
+    """The mixed fake-quant oracle simulates the 4-bit grid in f32 — no
+    stored-integer leaf anywhere."""
+    _, _, _, _, _, p_fake = moe_vit_int4
+    assert all(leaf.dtype not in (jnp.int8, jnp.uint8)
+               for leaf in jax.tree.leaves(p_fake))
+
+
+def test_materialize_mode_validation(moe_vit_int4):
+    cfg, params, _, taps, _, _ = moe_vit_int4
+    with pytest.raises(ValueError, match="fake, int8, int4"):
+        ptq_model(cfg, params, taps, materialize="int2")
+
+
+def test_scheme_map_validation(moe_vit_int4):
+    cfg, params, _, taps, _, _ = moe_vit_int4
+    # unknown scheme name
+    with pytest.raises(ValueError, match="unknown scheme"):
+        ptq_model(_scheme_cfg(cfg, (("moe.wi", "int2"),)), params, taps,
+                  materialize="int4")
+    # int4 at a sensitive site is rejected up front
+    with pytest.raises(ValueError, match="sensitive sites"):
+        ptq_model(_scheme_cfg(cfg, (("attn.wq", "int4"),)), params, taps,
+                  materialize="int4")
+    # int4 materialization with an all-int8 map names no int4 site
+    with pytest.raises(ValueError, match="names no int4"):
+        ptq_model(_scheme_cfg(cfg, (("moe.wi", "int8"),)), params, taps,
+                  materialize="int4")
+    # int8 materialization must not silently ignore an int4-bearing map
+    with pytest.raises(ValueError, match="materialize='int4'"):
+        ptq_model(_scheme_cfg(cfg), params, taps, materialize="int8")
+
+
+def test_int4_on_dense_model_raises():
+    """No MoE expert stack -> nothing int4 can target: loud error, not a
+    silently all-int8 tree."""
+    cfg = smoke_config("vit-tiny").replace(remat=False)
+    shape = get_shape("train_4k").replace(seq_len=24, global_batch=2)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    taps = calibrate_model(
+        cfg, params, [M.synth_batch(cfg, shape, jax.random.PRNGKey(0))])
+    with pytest.raises(ValueError, match="no int4 leaves"):
+        ptq_model(cfg, params, taps, materialize="int4")
+
+
+def test_int4_forward_matches_mixed_fake_oracle(moe_vit_int4):
+    """Real packed-int4 execution and the mixed quantize-dequantize
+    simulation are the same computation up to accumulation-order rounding."""
+    cfg, _, batches, _, p_int4, p_fake = moe_vit_int4
+    qcfg = quantized_config(cfg)
+    lg_fake, _ = M.forward(p_fake, qcfg, batches[0])
+    lg_int4, _ = M.forward(p_int4, qcfg, batches[0])
+    assert bool(jnp.isfinite(lg_int4).all())
+    scale = float(jnp.std(lg_fake)) + 1e-9
+    assert float(jnp.max(jnp.abs(lg_fake - lg_int4))) / scale < 1e-4
+
+
+def test_jitted_forward_materializes_no_unpacked_expert_copy(moe_vit_int4):
+    """The jitted forward consumes the packed uint8 stacks directly; no
+    dequantized fp copy AND no unpacked full-width int8 copy of the expert
+    weights appears anywhere in the program (the nibble-planar CPU lowering
+    contracts half-width planes; TPU unpacks in-tile)."""
+    cfg, _, batches, _, p_int4, _ = moe_vit_int4
+    qcfg = quantized_config(cfg)
+    jaxpr = str(jax.make_jaxpr(
+        lambda p, b: M.forward(p, qcfg, b)[0]
+    )(p_int4, batches[0]))
+    n_pairs = cfg.num_layers // 2
+    E, D = qcfg.moe.num_experts, qcfg.d_model
+    hid = qcfg.moe.d_ff * (2 if qcfg.glu else 1)
+    leaked = [
+        f"{dt}[{dims}]"
+        for dt in ("f32", "bf16", "i8")  # i8 = unpacked int4 would defeat
+        for dims in (                    # the memory win
+            f"{E},{D},{hid}", f"{n_pairs},{E},{D},{hid}",
+            f"{E},{qcfg.moe.d_ff},{D}", f"{n_pairs},{E},{qcfg.moe.d_ff},{D}",
+        )
+        if f"{dt}[{dims}]" in jaxpr
+    ]
+    assert not leaked, f"unpacked expert weight copies found: {leaked}"
+    # the packed stacks themselves are consumed by the program
+    assert f"u8[{n_pairs},{E},{packed_rows(D)},{hid}]" in jaxpr
+    assert f"u8[{n_pairs},{E},{packed_rows(qcfg.moe.d_ff)},{D}]" in jaxpr
+    assert "ragged_dot" in jaxpr
+
+
+def test_param_byte_breakdown_halves_expert_bytes(moe_vit_int4):
+    """Dtype-aware accounting (memory watermark input): the int4 tree's
+    expert-stack bytes are exactly half the int8 tree's, and the packed
+    bytes are attributed to the uint8 bucket."""
+    from repro.serving.introspect import param_byte_breakdown
+
+    cfg, params, _, taps, p_int4, _ = moe_vit_int4
+    p_int8 = ptq_model(cfg, params, taps, materialize="int8")
+    b8 = param_byte_breakdown(p_int8)
+    b4 = param_byte_breakdown(p_int4)
+    assert b8["int4_packed_bytes"] == 0
+    assert b4["int4_packed_bytes"] > 0
+    # even dims here: ceil(D/2) = D/2 exactly
+    assert b4["expert_stack_bytes"] * 2 == b8["expert_stack_bytes"]
+    assert b4["by_dtype"]["uint8"] == b4["int4_packed_bytes"]
+    assert b4["int4_packed_bytes"] == b4["expert_stack_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Serving: ServeEngine decode over a mixed int4/int8 QuantizedParams tree
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def moe_lm_int4():
+    cfg = smoke_config("olmoe-1b-7b").replace(remat=False)
+    shape = get_shape("train_4k").replace(seq_len=24, global_batch=2)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    batches = [M.synth_batch(cfg, shape, jax.random.PRNGKey(i))
+               for i in range(2)]
+    taps = calibrate_model(cfg, params, batches)
+    qcfg = quantized_config(cfg)
+    return qcfg, ptq_model(_scheme_cfg(cfg), params, taps), \
+        ptq_model(cfg, params, taps, materialize="int4")
+
+
+def test_serve_engine_decodes_int4_params(moe_lm_int4):
+    """Continuous-batching decode over the mixed int4/int8 tree matches the
+    mixed fake-quant engine token for token (greedy)."""
+    qcfg, p_fake, p_int4 = moe_lm_int4
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, qcfg.vocab_size, n).astype(np.int32)
+               for n in (5, 3)]
+    outs = []
+    for p in (p_int4, p_fake):
+        eng = ServeEngine(qcfg, p, batch_slots=2, max_len=32)
+        reqs = [Request(uid=i, prompt=pr, max_new_tokens=4)
+                for i, pr in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        outs.append([tuple(r.generated) for r in reqs])
+    assert outs[0] == outs[1]
+
+
+def test_build_serve_step_accepts_int4_params(moe_lm_int4):
+    """The jitted decode step lowers and runs with packed uint8 expert
+    leaves and their scale siblings."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.serving.engine import build_serve_step
+
+    qcfg, _, p_int4 = moe_lm_int4
+    B, S = 2, 16
+    shape = get_shape("decode_32k").replace(seq_len=S, global_batch=B)
+    step = build_serve_step(qcfg, shape, make_host_mesh(),
+                            donate_cache=False, params=p_int4)
+    mod = M.module_for(qcfg)
+    cache = mod.init_cache(qcfg, B, S, dtype=jnp.bfloat16)
+    tokens = jnp.zeros((B, 1), jnp.int32)
+    logits, _ = step(p_int4, tokens, cache, jnp.zeros((), jnp.int32))
+    assert logits.shape == (B, 1, qcfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
