@@ -1,0 +1,384 @@
+"""Chaos-injection serving benchmark: fault tolerance made measurable
+(DESIGN.md section 14) — writes ``BENCH_chaos.json``.
+
+Drives an open-loop offered load through a vision ``ServingCluster`` three
+ways:
+
+  baseline — no faults, watchdog on (the production configuration). Sets
+             the FPS/p99 reference.
+  chaos    — the same load with a scheduled replica kill at steady state
+             (``FaultConfig.kill_schedule``, kind ``"dead"`` — every later
+             step raises, modelling a crashed process). The watchdog must
+             evict the dead replica, the standby must backfill, stranded
+             in-flight requests must re-dispatch, and the cluster must
+             recover to the baseline completion rate.
+  off/on/off — closed-loop overhead passes with the watchdog disabled /
+             enabled / disabled again on identical single-replica
+             clusters. The off/off2 spread is the measurement noise
+             floor; the fault layer must cost <= ``--bound`` beyond it.
+
+Hard checks (exit 1 on failure):
+
+  * **zero lost accepted requests** — every request the cluster accepted
+    gets exactly one terminal callback (completed / cancelled / failed),
+    counted through ``on_done`` across the eviction;
+  * the kill actually evicted a replica and the standby was promoted;
+  * completion rate recovers to >= 90% of the baseline FPS after the
+    eviction + promotion (recovery time is reported);
+  * watchdog overhead within ``--bound`` + noise floor.
+
+Soft checks (reported, never fatal): bounded p99 inflation vs baseline.
+
+  PYTHONPATH=src python benchmarks/serve_chaos.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+try:  # script sibling vs repo-root namespace import
+    from benchmarks.provenance import stamp
+except ImportError:
+    from provenance import stamp
+
+
+def measure_single_replica_fps(cfg, params, bucket: int, n: int) -> float:
+    """Closed-loop FPS of one replica (throwaway engine, outside any
+    cluster metrics)."""
+    from repro.serving.vision import VisionEngine, synth_requests
+
+    eng = VisionEngine(cfg, params, batch_buckets=(bucket,), max_wait_s=0.0)
+    eng.warmup()
+    reqs = synth_requests(cfg, n, seed=99)
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+        eng.step()
+    eng.flush()
+    return n / (time.perf_counter() - t0)
+
+
+def run_offered_load(cluster, reqs, arrivals, deadline_s: float):
+    """Open-loop phase: submit on the arrival schedule while pumping the
+    cluster; returns (accounting dict, pump counts). Terminal deliveries
+    are counted per uid through ``on_done`` — the zero-lost evidence."""
+    from repro.serving.scheduler import Backpressure
+
+    terminal = {}  # uid -> terminal callback count (must end at exactly 1)
+    statuses = {}
+    completions = []  # (t, status) for windowed-rate recovery analysis
+    t0 = time.perf_counter()
+
+    def done_cb(r):
+        terminal[r.uid] = terminal.get(r.uid, 0) + 1
+        statuses[r.uid] = r.status
+        completions.append((time.perf_counter() - t0, r.status))
+
+    accepted, shed = [], 0
+    pumps = 0
+    pumps_half = None
+    i = 0
+    while i < len(arrivals) or not cluster.idle:
+        now = time.perf_counter() - t0
+        if now > deadline_s:
+            break  # wedged cluster: flush() below delivers terminals
+        while i < len(arrivals) and arrivals[i] <= now:
+            r = reqs[i]
+            r.on_done = done_cb
+            try:
+                cluster.submit(r)
+                accepted.append(r)
+            except Backpressure:
+                shed += 1
+            i += 1
+        cluster.step()
+        pumps += 1
+        if pumps_half is None and i >= len(arrivals) // 2:
+            pumps_half = pumps
+    cluster.flush()
+    wall = time.perf_counter() - t0
+    return {
+        "accepted": len(accepted),
+        "shed": shed,
+        "terminal": terminal,
+        "statuses": statuses,
+        "completions": completions,
+        "wall_s": wall,
+        "t0": t0,
+        "pumps": pumps,
+        "pumps_half": pumps_half or max(1, pumps // 2),
+    }
+
+
+def recovery_time(completions, t_resume: float, target_fps: float,
+                  window_s: float):
+    """Earliest time after ``t_resume`` at which the completion rate over
+    one sliding window reaches ``target_fps``; None when it never does."""
+    times = sorted(t for t, status in completions if status == "completed")
+    if not times:
+        return None
+    t = t_resume
+    end = times[-1]
+    a = np.asarray(times)
+    while t <= end:
+        n = int(np.searchsorted(a, t + window_s) - np.searchsorted(a, t))
+        if n / window_s >= target_fps:
+            return t - t_resume
+        t += window_s / 4.0
+    return None
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="m3vit-tiny")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced smoke config + short phases (CI)")
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    ap.add_argument("--phase-s", type=float, default=0.0,
+                    help="offered-load duration; 0 = 2.0s (smoke) / 5s")
+    ap.add_argument("--bound", type=float, default=0.02,
+                    help="max tolerated watchdog overhead beyond the "
+                         "off/off2 noise floor")
+    ap.add_argument("--repeats", type=int, default=0,
+                    help="overhead rounds; 0 = 6 (smoke) / 10")
+    ap.add_argument("--recovery-frac", type=float, default=0.9,
+                    help="fraction of baseline FPS the chaos run must "
+                         "recover to after the eviction")
+    args = ap.parse_args()
+
+    import jax
+
+    import repro.models as M
+    from repro.configs import PAPER_ARCHS, smoke_config
+    from repro.configs.base import FaultConfig
+    from repro.serving.cluster import ServingCluster
+    from repro.serving.events import EventLog
+    from repro.serving.vision import synth_requests
+
+    if args.smoke:
+        cfg = smoke_config(args.arch).replace(remat=False)
+        bucket, est_n = 2, 16
+    else:
+        cfg = PAPER_ARCHS[args.arch].replace(remat=False)
+        bucket, est_n = 4, 64
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    phase_s = args.phase_s or (2.0 if args.smoke else 5.0)
+    repeats = args.repeats or (6 if args.smoke else 10)
+
+    cap_fps = measure_single_replica_fps(cfg, params, bucket, est_n)
+    # two active replicas on shared CPU: offer below ONE replica's measured
+    # closed-loop capacity so the post-eviction survivor can absorb the
+    # re-dispatched backlog and the recovery check measures the fault path,
+    # not a CPU saturation artifact
+    rate = 0.6 * cap_fps
+    print(f"arch={cfg.name} devices={jax.device_count()} "
+          f"single-replica capacity ~{cap_fps:.1f} FPS, "
+          f"offered {rate:.1f} rps for {phase_s:.1f}s")
+
+    arrivals = [i / rate for i in range(int(phase_s * rate))]
+    deadline_s = max(10.0, 6 * phase_s)
+
+    def cluster_for(faults, events=None):
+        c = ServingCluster(
+            cfg, params, replicas=2, standby=1,
+            batch_buckets=(1, bucket), max_wait_s=1e-3,
+            max_pending=4096, max_pending_per_replica=8 * bucket,
+            clock=time.perf_counter, faults=faults, events=events,
+        )
+        c.warmup()
+        return c
+
+    # -- phase 1: no-fault baseline ------------------------------------------
+    base_cluster = cluster_for(FaultConfig())
+    base = run_offered_load(
+        base_cluster,
+        synth_requests(cfg, len(arrivals), seed=0), arrivals, deadline_s)
+    base_completed = sum(
+        1 for s in base["statuses"].values() if s == "completed")
+    fps_base = base_completed / base["wall_s"]
+    base_p99 = base_cluster.metrics.snapshot()[
+        "aggregate"]["latency_ms"]["p99"]
+
+    # -- phase 2: chaos — scheduled replica kill at steady state -------------
+    # the kill step is calibrated from the baseline pump count: ordinal 0
+    # dies when it has been ticked as many times as it took the baseline
+    # to admit half its arrivals, which lands the crash mid-load
+    kill_step = base["pumps_half"]
+    chaos_faults = FaultConfig(
+        inject=True, seed=0, error_budget=2,
+        kill_schedule=((0, kill_step, "dead"),))
+    events = EventLog(clock=time.perf_counter)
+    chaos_cluster = cluster_for(chaos_faults, events=events)
+    chaos = run_offered_load(
+        chaos_cluster,
+        synth_requests(cfg, len(arrivals), seed=1), arrivals, deadline_s)
+    chaos_completed = sum(
+        1 for s in chaos["statuses"].values() if s == "completed")
+    chaos_failed = sum(
+        1 for s in chaos["statuses"].values() if s == "failed")
+
+    counters = chaos_cluster.metrics.snapshot()["aggregate"]["counters"]
+    evicted_evs = events.events("replica_evicted")
+    replaced_evs = events.events("replica_replaced")
+    # recovery: windowed completion rate back at >= recovery_frac x the
+    # baseline FPS, measured from the standby promotion
+    window_s = max(0.25, 8.0 / max(fps_base, 1e-9))
+    t_resume = ((replaced_evs[0]["t"] - chaos["t0"]) if replaced_evs
+                else 0.0)
+    rec_s = recovery_time(chaos["completions"], max(0.0, t_resume),
+                          args.recovery_frac * fps_base, window_s)
+
+    exactly_once = all(n == 1 for n in chaos["terminal"].values())
+    zero_lost = (len(chaos["terminal"]) == chaos["accepted"]
+                 and exactly_once)
+
+    # -- phase 3: watchdog overhead (off / on / off2) ------------------------
+    def overhead_cluster(watchdog: bool):
+        return cluster_for(FaultConfig(watchdog=watchdog))
+
+    clusters = {"off": overhead_cluster(False),
+                "on": overhead_cluster(True),
+                "off2": overhead_cluster(False)}
+    n_over = est_n * 2
+    uid0 = [10_000]
+
+    def make():
+        reqs = synth_requests(cfg, n_over, seed=7)
+        for r in reqs:
+            r.uid = uid0[0]
+            uid0[0] += 1
+        return reqs
+
+    def serve_once(c):
+        reqs = make()
+        t0 = time.perf_counter()
+        for r in reqs:
+            c.submit(r)
+            c.step()
+        c.flush()
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        return dt
+
+    for c in clusters.values():
+        serve_once(c)  # untimed: residual compiles/caches land here
+    dts = {name: [] for name in clusters}
+    order = list(clusters)
+    for r in range(repeats):
+        # rotate in-round order so machine drift spreads over all variants
+        for name in order[r % 3:] + order[:r % 3]:
+            dts[name].append(serve_once(clusters[name]))
+    overhead_on = float(np.median(
+        [on / (0.5 * (a + b)) for on, a, b
+         in zip(dts["on"], dts["off"], dts["off2"])])) - 1.0
+    noise_floor = abs(float(np.median(
+        [a / b for a, b in zip(dts["off"], dts["off2"])])) - 1.0)
+    effective_bound = args.bound + noise_floor
+
+    # p99s from the pooled cluster distributions (milliseconds)
+    chaos_p99 = chaos_cluster.metrics.snapshot()[
+        "aggregate"]["latency_ms"]["p99"]
+
+    hard_checks = {
+        "zero_lost_accepted": zero_lost,
+        "exactly_once_terminal": exactly_once,
+        "replica_evicted": len(evicted_evs) >= 1
+        and counters.get("replicas_evicted", 0) >= 1,
+        "standby_promoted": len(replaced_evs) >= 1
+        and counters.get("replicas_replaced", 0) >= 1,
+        "recovered_to_target_fps": rec_s is not None,
+        "overhead_within_bound": overhead_on <= effective_bound,
+    }
+    soft_checks = {
+        "redispatch_exercised": counters.get("cluster_redispatched", 0) >= 1,
+        "no_terminal_failures": chaos_failed == 0,
+        "baseline_all_completed": base_completed == base["accepted"],
+        # injected-fault p99 inflation stays bounded: generous 10x because
+        # a re-dispatched request legitimately pays queue wait twice and a
+        # shared-CPU runner adds noise on top
+        "p99_inflation_bounded": (
+            not (base_p99 == base_p99 and chaos_p99 == chaos_p99)
+            or chaos_p99 <= 10.0 * max(base_p99, 1.0)),
+    }
+    for name, ok in hard_checks.items():
+        print(f"  [{'ok' if ok else 'MISS'}] {name}")
+    for name, ok in soft_checks.items():
+        print(f"  [{'ok' if ok else 'soft-miss'}] {name} (soft)")
+    print(f"baseline: {base_completed}/{base['accepted']} completed, "
+          f"{fps_base:.1f} FPS")
+    print(f"chaos: {chaos_completed} completed / {chaos_failed} failed "
+          f"of {chaos['accepted']} accepted; "
+          f"evictions={counters.get('replicas_evicted', 0)} "
+          f"redispatched={counters.get('cluster_redispatched', 0)} "
+          f"duplicates={counters.get('duplicate_retirements', 0)}; "
+          f"recovery "
+          f"{('%.2fs' % rec_s) if rec_s is not None else 'NOT REACHED'} "
+          f"after promotion (window {window_s:.2f}s)")
+    print(f"overhead: watchdog {100 * overhead_on:+.2f}% "
+          f"(noise floor {100 * noise_floor:.2f}%, "
+          f"bound {100 * args.bound:.0f}% + floor)")
+
+    report = {
+        "meta": {
+            "bench": "serve_chaos",
+            "mode": "smoke" if args.smoke else "full",
+            "arch": cfg.name,
+            "devices": jax.device_count(),
+            "offered_rps": rate,
+            "phase_s": phase_s,
+            "kill_step": kill_step,
+            "repeats": repeats,
+            "bound": args.bound,
+            "recovery_frac": args.recovery_frac,
+            "note": ("CPU-host run: replicas share compute; the run "
+                     "measures the fault path's bookkeeping, not hardware "
+                     "failover speed"),
+        },
+        "baseline": {
+            "accepted": base["accepted"],
+            "completed": base_completed,
+            "shed": base["shed"],
+            "fps": fps_base,
+            "wall_s": base["wall_s"],
+            "p99_ms": base_p99,
+        },
+        "chaos": {
+            "accepted": chaos["accepted"],
+            "completed": chaos_completed,
+            "failed": chaos_failed,
+            "shed": chaos["shed"],
+            "wall_s": chaos["wall_s"],
+            "p99_ms": chaos_p99,
+            "recovery_s": rec_s,
+            "recovery_window_s": window_s,
+            "counters": {k: counters.get(k, 0) for k in (
+                "replicas_evicted", "replicas_replaced",
+                "cluster_redispatched", "cluster_failed",
+                "duplicate_retirements", "replica_step_errors",
+                "cluster_shed")},
+            "eviction_events": evicted_evs,
+            "replacement_events": replaced_evs,
+        },
+        "overhead": {
+            "watchdog": overhead_on,
+            "noise_floor": noise_floor,
+            "effective_bound": effective_bound,
+            "rounds": {name: ds for name, ds in dts.items()},
+        },
+        "checks": hard_checks,
+        "soft_checks": soft_checks,
+        "fps": fps_base,
+    }
+    stamp(report, "serve_chaos")
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+    if not all(hard_checks.values()):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,7 @@ from repro.configs.base import (
     AutotuneConfig,
     DECODE_32K,
     FULL_ATTENTION_FAMILIES,
+    FaultConfig,
     IntrospectConfig,
     LONG_500K,
     ModelConfig,

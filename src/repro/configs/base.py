@@ -211,6 +211,69 @@ class IntrospectConfig:
 
 
 @dataclass(frozen=True)
+class FaultConfig:
+    """Serving fault model: chaos injection + watchdog/recovery knobs
+    (serving/faults.py, DESIGN.md section 14).
+
+    Two independent halves share the config:
+
+    **Injection** (``inject`` — default off): the deterministic chaos
+    harness. With it on, every replica the cluster builds is wrapped in a
+    ``FaultyReplica`` decorator whose seeded ``FaultInjector`` raises step
+    exceptions / OOM-shaped allocation failures, stalls steps (fake-clock
+    compatible), rejects submits, and poisons ``on_done`` callbacks at the
+    configured rates and schedule. With it off nothing is wrapped — the
+    injection path literally does not exist at runtime (the NULL-injector
+    discipline of ``NULL_TRACER``).
+
+    **Watchdog / recovery** (``watchdog`` — default on): the per-replica
+    health monitor and the quarantine/re-dispatch machinery in
+    ``ServingCluster``. Budgets below decide when a replica is evicted and
+    how often one request may be re-dispatched before it fails terminally.
+    """
+
+    # -- chaos injection (all rates are per-boundary Bernoulli draws from
+    #    a replica-ordinal-seeded generator; 0.0 everywhere = no faults
+    #    even when inject=True) --------------------------------------------
+    inject: bool = False
+    seed: int = 0
+    step_error_rate: float = 0.0  # step() raises InjectedFault
+    oom_rate: float = 0.0  # step() raises InjectedOOM (RESOURCE_EXHAUSTED)
+    step_stall_rate: float = 0.0  # step() stalls stall_s before running
+    stall_s: float = 0.25  # injected stall duration (clock seconds)
+    submit_reject_rate: float = 0.0  # replica submit() raises Backpressure
+    callback_poison_rate: float = 0.0  # wrap on_done to raise after running
+    # deterministic schedule: (replica_ordinal, local_step, kind) triples,
+    # kind in {"error", "oom", "stall", "dead"}. "dead" kills the replica
+    # permanently — every later step raises too (a crashed process, not a
+    # transient fault). Scheduled entries override the random draws.
+    kill_schedule: Tuple[Tuple[int, int, str], ...] = ()
+
+    # -- watchdog / recovery ----------------------------------------------
+    watchdog: bool = True
+    # absolute step wall-time ceiling; one step slower than this counts as
+    # a stall regardless of history
+    step_timeout_s: float = 30.0
+    # relative stall detector: step slower than stall_threshold x the EMA
+    # of healthy steps (StragglerMonitor), armed after warmup_steps. Steps
+    # under stall_floor_s never count as relative stalls: a serving pump
+    # spins through idle no-op ticks whose microsecond durations would
+    # otherwise seed an EMA that makes any real batch dispatch look like
+    # an 8x stall
+    stall_threshold: float = 8.0
+    warmup_steps: int = 5
+    stall_floor_s: float = 0.05
+    # consecutive-fault budgets before quarantine (an OOM-classified error
+    # evicts immediately — retrying into a full allocator wedges the pump)
+    error_budget: int = 3
+    stall_budget: int = 2
+    # re-dispatches one request may consume across evictions before it is
+    # terminally failed (its on_done fires exactly once with status
+    # "failed" instead of retrying forever)
+    retry_budget: int = 2
+
+
+@dataclass(frozen=True)
 class ContinuousBatchingConfig:
     """Continuous-batching knobs for ``ServeEngine`` (DESIGN.md section 10).
 
@@ -275,6 +338,9 @@ class ModelConfig:
     trace: TraceConfig = field(default_factory=TraceConfig)
     # live performance introspection (serving/introspect.py; DESIGN.md §12)
     introspect: IntrospectConfig = field(default_factory=IntrospectConfig)
+    # serving fault model: chaos injection + watchdog (serving/faults.py;
+    # DESIGN.md §14)
+    faults: FaultConfig = field(default_factory=FaultConfig)
     dtype: str = "bfloat16"
     # training knobs
     remat: bool = True

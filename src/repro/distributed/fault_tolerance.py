@@ -83,10 +83,12 @@ class StragglerMonitor:
 
 
 def run_step_with_retry(fn: Callable, *args, max_retries: int = 2,
-                        on_retry: Optional[Callable] = None):
+                        on_retry: Optional[Callable] = None,
+                        sleep: Callable[[float], None] = time.sleep):
     """Retry a step on transient runtime errors (host OOM spikes, flaky
     collective timeouts). Deterministic data keyed by step makes the retry
-    exactly reproducible."""
+    exactly reproducible. Backoff is 0.1 * 2**attempt seconds via ``sleep``
+    (injectable so tests assert the schedule without waiting it out)."""
     for attempt in range(max_retries + 1):
         try:
             return fn(*args)
@@ -95,7 +97,7 @@ def run_step_with_retry(fn: Callable, *args, max_retries: int = 2,
                 raise
             if on_retry is not None:
                 on_retry(attempt)
-            time.sleep(0.1 * 2**attempt)
+            sleep(0.1 * 2**attempt)
 
 
 def elastic_mesh(preferred_shape, axis_names, devices=None):

@@ -23,12 +23,21 @@ Live introspection (DESIGN.md section 12): ``--metrics-port`` serves
 the duration of the run; ``--metrics-interval N`` rewrites
 ``--metrics-out`` every N seconds so a crashed run still leaves its
 last metrics snapshot behind.
+
+Fault tolerance (DESIGN.md section 14): SIGTERM/SIGINT trigger a graceful
+drain (stop admission, serve what is in flight, write final metrics)
+instead of a hard exit — the seed's ``PreemptionGuard`` wired into the
+submit loop. ``--chaos`` turns on the deterministic fault-injection layer
+(serving/faults.py) with ``--chaos-*`` rates and ``--chaos-kill
+ORDINAL:STEP`` scheduled replica kills; the watchdog/quarantine machinery
+is on by default for the cluster path regardless.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import os
+import signal
 import threading
 import time
 
@@ -37,6 +46,7 @@ import numpy as np
 
 from repro import models
 from repro.configs import get_config, smoke_config
+from repro.distributed.fault_tolerance import PreemptionGuard
 from repro.serving.cluster import ServingCluster
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.events import EventLog
@@ -169,11 +179,40 @@ def main() -> None:
                          "every N seconds during the run instead of only "
                          "at exit")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chaos", action="store_true",
+                    help="enable the deterministic fault-injection layer "
+                         "(serving/faults.py): replicas are wrapped in "
+                         "seeded FaultyReplica decorators")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--chaos-error-rate", type=float, default=0.0,
+                    help="per-step probability of an injected step error")
+    ap.add_argument("--chaos-oom-rate", type=float, default=0.0,
+                    help="per-step probability of an injected OOM")
+    ap.add_argument("--chaos-stall-rate", type=float, default=0.0,
+                    help="per-step probability of an injected stall")
+    ap.add_argument("--chaos-reject-rate", type=float, default=0.0,
+                    help="per-submit probability of an injected rejection")
+    ap.add_argument("--chaos-kill", action="append", default=[],
+                    metavar="ORDINAL:STEP",
+                    help="kill replica ORDINAL permanently at its local "
+                         "step STEP (repeatable)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.quantized:
         cfg = cfg.replace(quant=dataclasses.replace(cfg.quant, enable=True))
+    if args.chaos:
+        kills = []
+        for spec in args.chaos_kill:
+            ordn, step = spec.split(":")
+            kills.append((int(ordn), int(step), "dead"))
+        cfg = cfg.replace(faults=dataclasses.replace(
+            cfg.faults, inject=True, seed=args.chaos_seed,
+            step_error_rate=args.chaos_error_rate,
+            oom_rate=args.chaos_oom_rate,
+            step_stall_rate=args.chaos_stall_rate,
+            submit_reject_rate=args.chaos_reject_rate,
+            kill_schedule=tuple(kills)))
     if args.autotune:
         cfg = cfg.replace(autotune=dataclasses.replace(
             cfg.autotune, enable=True, cache_dir=args.autotune_cache))
@@ -229,15 +268,26 @@ def main() -> None:
                                         args.metrics_interval)
         writer.start()
 
+    # graceful preemption: SIGTERM/SIGINT stop admission; everything
+    # already accepted is served to completion and the final metrics write
+    # below still happens (distributed/fault_tolerance.py PreemptionGuard)
+    guard = PreemptionGuard(signals=(signal.SIGTERM, signal.SIGINT))
+    shed = 0
     try:
         t0 = time.perf_counter()
         if cluster is not None:
             for r in reqs:
+                if guard.preempted:
+                    shed += 1
+                    continue
                 cluster.submit(r)
                 cluster.step()
             cluster.flush()
         else:
             for r in reqs:
+                if guard.preempted:
+                    shed += 1
+                    continue
                 engine.submit(r)
             engine.run_until_drained()
         dt = time.perf_counter() - t0
@@ -245,8 +295,11 @@ def main() -> None:
         if writer is not None:
             writer.stop()
         if server is not None:
-            server.stop()
-    total = args.requests * args.new_tokens
+            server.close()
+    if shed:
+        print(f"preempted: drained {args.requests - shed} accepted "
+              f"requests, shed {shed} unsubmitted")
+    total = (args.requests - shed) * args.new_tokens
     extra = (f"replicas={cluster.num_replicas}, " if cluster is not None
              else "")
     print(f"generated {total} tokens in {dt:.2f}s "

@@ -2,6 +2,14 @@ from repro.serving.autoscaler import Autoscaler
 from repro.serving.cluster import ServingCluster, replica_meshes
 from repro.serving.engine import Request, ServeEngine, build_serve_step
 from repro.serving.events import EventLog, read_jsonl
+from repro.serving.faults import (
+    FaultInjector,
+    FaultyReplica,
+    InjectedFault,
+    InjectedOOM,
+    ReplicaWatchdog,
+    is_oom_error,
+)
 from repro.serving.introspect import (
     ExpertHealthMonitor,
     capture_cost,
@@ -43,7 +51,12 @@ __all__ = [
     "EngineReplica",
     "EventLog",
     "ExpertHealthMonitor",
+    "FaultInjector",
+    "FaultyReplica",
     "FlightRecorder",
+    "InjectedFault",
+    "InjectedOOM",
+    "ReplicaWatchdog",
     "LatencyTracker",
     "MetricsServer",
     "MicroBatch",
@@ -60,6 +73,7 @@ __all__ = [
     "chrome_trace",
     "cluster_healthz",
     "hist_percentile",
+    "is_oom_error",
     "make_tracer",
     "memory_watermark",
     "normalize_cost_analysis",

@@ -37,6 +37,12 @@ Control law (evaluated once per ``tick()``):
 
 The controller is pure host-side bookkeeping driven by the same injectable
 clock as the cluster, so tests run it deterministically under a fake clock.
+
+Interplay with fault tolerance (DESIGN.md section 14): watchdog evictions
+bypass this controller entirely — ``ServingCluster.quarantine`` promotes a
+standby directly, so the cooldown never delays capacity recovery — and
+``scale_down`` refuses while the cluster is degraded, so a down-streak
+accumulated before a fault cannot fight the recovery.
 """
 from __future__ import annotations
 

@@ -40,20 +40,43 @@ records the (t, active-count) timeline on every transition.
 ``metrics`` is a ``ClusterMetrics`` roll-up: aggregate FPS over the union
 window, latency percentiles merged from replica distributions (pooled, not
 averaged), per-expert occupancy summed across replicas.
+
+**Fault tolerance** (DESIGN.md section 14, serving/faults.py): with
+``FaultConfig.watchdog`` on (the default), every replica ``step()`` runs
+under a ``ReplicaWatchdog`` — consecutive step exceptions past the error
+budget (OOM immediately), or consecutive stalls past the stall budget, take
+the ``quarantine()`` path: the replica leaves the router *without* being
+ticked again (unlike ``scale_down``'s graceful drain — a quarantined
+replica may be wedged), its metrics fold into the retired accumulator, its
+stranded in-flight requests are reclaimed via the optional ``evict()``
+replica method and re-dispatched to healthy replicas (bounded by
+``retry_budget``, then terminal ``failed``), and capacity is backfilled
+from the standby pool — directly, not through the autoscaler, so the
+controller's cooldown never delays recovery. ``on_done`` delivery is
+at-most-once cluster-wide: ``submit`` wraps the callback with an idempotent
+guard so a duplicate retirement (replayed across an eviction) is counted,
+not delivered. With no standby left the cluster enters *degraded* mode:
+admission tightens to what the surviving replicas can actually absorb
+(reject-with-reason, never queue collapse), ``health()``/`/healthz` report
+``degraded`` with the evicted-replica ledger, and ``scale_down`` refuses.
+``FaultConfig.inject`` additionally wraps each replica in the deterministic
+chaos ``FaultyReplica`` decorator (benchmarks/serve_chaos.py drives it).
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import FaultConfig, ModelConfig
 from repro.serving.events import EventLog
+from repro.serving.faults import FaultInjector, FaultyReplica, ReplicaWatchdog
 from repro.serving.metrics import ClusterMetrics
 from repro.serving.replica import EngineReplica
-from repro.serving.scheduler import MicroBatcher
+from repro.serving.scheduler import Backpressure, MicroBatcher
 from repro.serving.trace import FlightRecorder, write_chrome_trace
 
 EngineFactory = Callable[[Any], EngineReplica]  # mesh -> replica
@@ -103,6 +126,11 @@ class ServingCluster:
         max_pending_per_replica: int = 64,
         events: Optional[EventLog] = None,
         clock: Callable[[], float] = time.monotonic,
+        # fault model (None -> cfg.faults when cfg is given, else defaults);
+        # fault_stall_fn overrides the injected-stall sleep for fake-clock
+        # tests (serving/faults.py)
+        faults: Optional[FaultConfig] = None,
+        fault_stall_fn: Optional[Callable[[float], None]] = None,
     ) -> None:
         devices = list(devices if devices is not None else jax.devices())
         self._devices = devices
@@ -123,6 +151,19 @@ class ServingCluster:
         # id(engine) -> stable "replicaN" name; kept cluster-side so event
         # records name untraced replicas too (a tracer only mirrors it)
         self._labels: Dict[int, str] = {}
+        # fault model: chaos injection (replica decorator) + watchdog state
+        if faults is None:
+            faults = (cfg.faults if cfg is not None
+                      and getattr(cfg, "faults", None) is not None
+                      else FaultConfig())
+        self.faults = faults
+        self._wd_enabled = bool(faults.watchdog)
+        self._watchdogs: Dict[int, ReplicaWatchdog] = {}
+        self._retire_lock = threading.Lock()  # at-most-once on_done guard
+        self._degraded = False
+        self._evicted: List[dict] = []  # eviction ledger (healthz)
+        self._evicted_engines: List[EngineReplica] = []
+        self._per_replica_cap = int(max_pending_per_replica)
         self._factory = self._resolve_factory(
             cfg, params, engine,
             batch_buckets=batch_buckets, max_wait_s=max_wait_s,
@@ -130,6 +171,20 @@ class ServingCluster:
             batch_slots=batch_slots, max_len=max_len,
             max_pending_per_replica=max_pending_per_replica,
         )
+        if faults.inject:
+            # every replica this cluster ever builds (including autoscaler
+            # cold-spawns) gets its own seeded injector; build order matches
+            # label order so injector ordinals line up with "replicaN"
+            base_factory = self._factory
+            self._inject_seq = 0
+
+            def chaotic(mesh, _f=base_factory):
+                inj = FaultInjector(self.faults, ordinal=self._inject_seq,
+                                    stall_fn=fault_stall_fn)
+                self._inject_seq += 1
+                return FaultyReplica(_f(mesh), inj)
+
+            self._factory = chaotic
         self.meshes = self._build_meshes(replicas + standby)
         self._next_mesh_i = replicas + standby
         built = [self._factory(mesh) for mesh in self.meshes]
@@ -292,14 +347,23 @@ class ServingCluster:
         self.metrics.add_replica(eng.metrics)
         self.metrics.mark_replicas(len(self.engines))
         self.metrics.inc("cluster_scale_up")
+        if self._degraded:
+            # capacity restored: leave degraded mode (admission un-tightens)
+            self._degraded = False
+            if self.events is not None:
+                self.events.emit("cluster_recovered",
+                                 active=len(self.engines),
+                                 standby=len(self._standby))
         return True
 
     def scale_down(self) -> bool:
         """Stop routing to the least-loaded replica and start draining it:
         it keeps being ticked until everything queued + in flight on it is
         served, then returns to standby (``_reap_drained``). Refuses to
-        drop the last active replica."""
-        if len(self.engines) <= 1:
+        drop the last active replica, and refuses entirely while degraded —
+        a cluster that just lost capacity to an eviction must not let the
+        controller's scale-down streak fight the recovery."""
+        if len(self.engines) <= 1 or self._degraded:
             return False
         eng = min(self.engines, key=lambda e: e.load)
         self.engines.remove(eng)
@@ -328,17 +392,238 @@ class ServingCluster:
                 still.append(e)
         self._draining = still
 
+    # -- fault tolerance (DESIGN.md section 14) ------------------------------
+
+    def _watchdog(self, eng) -> ReplicaWatchdog:
+        wd = self._watchdogs.get(id(eng))
+        if wd is None:
+            wd = ReplicaWatchdog(
+                self.faults, label=self._labels.get(id(eng), "replica?"))
+            self._watchdogs[id(eng)] = wd
+        return wd
+
+    def _step_replica(self, eng) -> None:
+        """Tick one replica under the watchdog: time the step, feed the
+        outcome to the replica's monitor, quarantine on a verdict. With the
+        watchdog disabled this is exactly ``eng.step()``."""
+        if not self._wd_enabled:
+            eng.step()
+            return
+        wd = self._watchdog(eng)
+        t0 = self._clock()
+        try:
+            eng.step()
+        except Exception as e:
+            self.metrics.inc("replica_step_errors")
+            if self.events is not None:
+                self.events.emit("replica_step_error",
+                                 replica=self._labels.get(id(eng)),
+                                 error=repr(e))
+            verdict = wd.record_error(e)
+            if verdict is not None:
+                self.quarantine(eng, verdict)
+            return
+        verdict = wd.record_step(self._clock() - t0)
+        if verdict is not None:
+            self.quarantine(eng, verdict)
+
+    def quarantine(self, eng, verdict: Optional[dict] = None) -> None:
+        """Evict a suspect replica NOW — no drain, no further ticks (it may
+        be wedged). Its metrics fold into the retired accumulator exactly as
+        a drain would; its stranded queued/in-flight requests are reclaimed
+        (optional replica ``evict()``) and re-dispatched to healthy
+        replicas; capacity is backfilled from the standby pool directly —
+        deliberately NOT via the autoscaler, whose cooldown must never
+        delay recovery. With no standby left the cluster goes degraded."""
+        if isinstance(verdict, str):
+            verdict = {"reason": verdict}
+        verdict = dict(verdict or {"reason": "manual"})
+        was_active = eng in self.engines
+        if was_active:
+            self.engines.remove(eng)
+        elif eng in self._draining:
+            self._draining.remove(eng)
+        else:
+            return  # already quarantined/drained — idempotent
+        self.metrics.remove_replica(eng.metrics)
+        try:
+            eng.reset_metrics()
+        except Exception:
+            pass  # a wedged replica's reset must not abort the eviction
+        stranded: List[Any] = []
+        evict = getattr(eng, "evict", None)
+        if callable(evict):
+            try:
+                stranded = list(evict())
+            except Exception:
+                pass  # best-effort reclaim; unreturned requests fail below
+        self._watchdogs.pop(id(eng), None)
+        self._evicted_engines.append(eng)  # keep its flight recorder
+        label = self._labels.get(id(eng))
+        self.metrics.inc("replicas_evicted")
+        if self.events is not None:
+            # full watchdog inputs ride along — the eviction is replayable
+            # from the journal
+            self.events.emit("replica_evicted", replica=label,
+                             stranded=len(stranded), **verdict)
+        backfilled = None
+        if was_active and self._standby:
+            new = self._standby.pop(0)
+            backfilled = self._labels.get(id(new))
+            self.engines.append(new)
+            self.metrics.add_replica(new.metrics)
+            self.metrics.inc("replicas_replaced")
+            if self.events is not None:
+                self.events.emit("replica_replaced", evicted=label,
+                                 replacement=backfilled,
+                                 standby=len(self._standby))
+        elif was_active:
+            # serving capacity lost with no standby to promote: degrade
+            if not self._degraded:
+                self._degraded = True
+                self.metrics.inc("cluster_degraded")
+                if self.events is not None:
+                    self.events.emit("cluster_degraded",
+                                     active=len(self.engines),
+                                     evicted=len(self._evicted) + 1)
+        self._evicted.append({
+            "t": self._clock(), "replica": label,
+            "stranded": len(stranded), "backfilled": backfilled, **verdict,
+        })
+        self.metrics.mark_replicas(len(self.engines))
+        for req in stranded:
+            self._redispatch(req)
+
+    def _redispatch(self, req) -> None:
+        """Re-queue an evicted in-flight request at the front-end (original
+        ``submitted_at`` stamp preserved — client latency includes the
+        failure), bounded by ``retry_budget`` re-dispatches, then terminal
+        ``failed``."""
+        req.redispatched = getattr(req, "redispatched", 0) + 1
+        if req.redispatched > self.faults.retry_budget:
+            self._fail(req, "retry_budget_exhausted")
+            return
+        req.evicted = False
+        if hasattr(req, "eos_seen"):
+            req.eos_seen = False
+        if hasattr(req, "generated"):
+            req.generated = None  # restart the stream from the prompt
+        self.metrics.inc("cluster_redispatched")
+        if self.events is not None:
+            self.events.emit("request_redispatched",
+                             uid=getattr(req, "uid", None),
+                             attempt=req.redispatched)
+        try:
+            self._front.submit(req)
+        except Backpressure:
+            self._fail(req, "redispatch_backpressure")
+
+    def _fail(self, req, reason: str) -> None:
+        """Terminal ``failed``: counted, journaled, and delivered through
+        the (at-most-once-guarded) ``on_done`` exactly like a completion."""
+        req.status = "failed"
+        req.evicted = False
+        self.metrics.inc("cluster_failed")
+        if self.events is not None:
+            self.events.emit("request_failed", uid=getattr(req, "uid", None),
+                             reason=reason,
+                             redispatched=getattr(req, "redispatched", 0))
+        cb = getattr(req, "on_done", None)
+        if cb is not None:
+            try:
+                cb(req)
+            except Exception as e:
+                self.metrics.inc("cluster_callback_errors")
+                if self.events is not None:
+                    self.events.emit("callback_error",
+                                     uid=getattr(req, "uid", None),
+                                     error=repr(e))
+
+    def _guard_done(self, req) -> None:
+        """Wrap ``on_done`` with the cluster-wide at-most-once guard: the
+        first terminal delivery (any thread — replica retirement daemons
+        and the cluster's ``_fail`` race across an eviction) wins; later
+        ones are counted as ``duplicate_retirements`` and dropped."""
+        if getattr(req, "_ft_guarded", False):
+            return
+        inner = getattr(req, "on_done", None)
+        lock = self._retire_lock
+        metrics = self.metrics
+
+        def once(r, _inner=inner):
+            with lock:
+                if getattr(r, "_done_fired", False):
+                    metrics.inc("duplicate_retirements")
+                    return
+                r._done_fired = True
+            if _inner is not None:
+                _inner(r)
+
+        req.on_done = once
+        req._ft_guarded = True
+
+    def health(self) -> dict:
+        """Watchdog roll-up for ``/healthz`` (serving/metrics_server.py):
+        overall status, per-replica watchdog state, and the eviction
+        ledger."""
+        if not self.engines:
+            status = "unhealthy"
+        elif self._degraded:
+            status = "degraded"
+        else:
+            status = "ok"
+        reps = {}
+        for e in self.engines + self._draining:
+            label = self._labels.get(id(e), "replica?")
+            wd = self._watchdogs.get(id(e))
+            reps[label] = (wd.state() if wd is not None
+                           else {"health": "healthy"})
+        return {
+            "status": status,
+            "degraded": self._degraded,
+            "active": len(self.engines),
+            "standby": len(self._standby),
+            "draining": len(self._draining),
+            "replicas": reps,
+            "evicted": list(self._evicted),
+        }
+
+    @property
+    def degraded(self) -> bool:
+        return self._degraded
+
     # -- request path -------------------------------------------------------
 
     def submit(self, req) -> None:
         """Admit one request; raises ``scheduler.Backpressure`` when the
         cluster-wide admission bound is reached. Latency is stamped HERE —
         client-observed percentiles include front-end queue wait, not just
-        time on the replica that eventually served the request."""
+        time on the replica that eventually served the request.
+
+        Degraded mode tightens admission: the front-end bound shrinks from
+        ``max_pending`` to what the surviving replicas can actually absorb
+        (active x per-replica cap) — load is shed with an explicit reason
+        instead of queueing toward collapse."""
+        if self._degraded and self._per_replica_cap:
+            cap = max(1, len(self.engines)) * self._per_replica_cap
+            if self._front.depth >= cap:
+                self.metrics.inc("cluster_shed")
+                self.metrics.inc("cluster_rejected")
+                if self.events is not None:
+                    self.events.emit("cluster_reject",
+                                     uid=getattr(req, "uid", None),
+                                     reason="degraded_shed",
+                                     depth=self._front.depth, cap=cap)
+                raise Backpressure(
+                    f"degraded: admission tightened to {cap} "
+                    f"({len(self.engines)} surviving replicas)")
         req.submitted_at = self._clock()
-        if self._tracing and getattr(req, "trace_id", None) is None:
+        if (self._tracing or self._wd_enabled) \
+                and getattr(req, "trace_id", None) is None:
             req.trace_id = self._next_trace_id
             self._next_trace_id += 1
+        if self._wd_enabled:
+            self._guard_done(req)
         try:
             self._front.submit(req)
         except Exception:
@@ -367,6 +652,14 @@ class ServingCluster:
             target = min(open_engines, key=lambda e: e.load)
             try:
                 target.submit(batch.items[0])
+            except Backpressure:
+                # a replica refusing admission it advertised room for
+                # (injected rejection, or a real race): requeue at the
+                # front and stop this pump — retrying in the same loop
+                # against a deterministic rejector would spin forever
+                self.metrics.inc("replica_submit_rejected")
+                self._front.submit(batch.items[0])
+                break
             except ValueError:
                 # unservable request (e.g. prompt longer than the engine's
                 # cache): the replica counted it in `rejected`; drop it
@@ -381,12 +674,14 @@ class ServingCluster:
 
     def step(self) -> None:
         """One cluster pump: route queued requests, tick every serving
-        replica (admit / dispatch / retire), and reap drained ones."""
+        replica (admit / dispatch / retire) under the watchdog, and reap
+        drained ones. List copies because a quarantine verdict mutates the
+        pools mid-iteration."""
         self._route()
-        for e in self.engines:
-            e.step()
-        for e in self._draining:
-            e.step()
+        for e in list(self.engines):
+            self._step_replica(e)
+        for e in list(self._draining):
+            self._step_replica(e)
         if self._draining:
             self._reap_drained()
 
@@ -397,7 +692,9 @@ class ServingCluster:
         label — active, draining, and standby alike (a drained replica's
         recorder still holds the spans it served)."""
         out: Dict[str, FlightRecorder] = {}
-        for e in self.engines + self._draining + self._standby:
+        pools = (self.engines + self._draining + self._standby
+                 + self._evicted_engines)
+        for e in pools:
             tr = getattr(e, "tracer", None)
             if tr is not None and tr.enabled:
                 out[tr.label] = tr.recorder
@@ -418,14 +715,41 @@ class ServingCluster:
 
     def flush(self) -> None:
         """Drain: push everything queued through the replicas and retire
-        every in-flight batch on each of them (draining replicas too)."""
+        every in-flight batch on each of them (draining replicas too). A
+        replica whose flush raises goes through the watchdog (quarantine
+        once its error budget trips) instead of aborting the drain; if
+        every replica is lost, remaining queued requests terminate as
+        ``failed`` — flush never deadlocks on a dead cluster."""
         self._front.drain(True)
         try:
+            rounds = 0
             while not self.idle:
+                rounds += 1
+                if rounds > 100_000:
+                    # pathological no-progress spin (e.g. an injector
+                    # rejecting every submit): shed what is left as failed
+                    for req in self._front.clear():
+                        self._fail(req, "flush_no_progress")
+                    break
+                if not self.engines and not self._draining:
+                    # nothing left to serve on: deliver terminal failures
+                    # rather than spinning on an unroutable queue
+                    for req in self._front.clear():
+                        self._fail(req, "no_replicas")
+                    break
                 self._route()
-                for e in self.engines + self._draining:
-                    if not e.idle:
+                for e in list(self.engines) + list(self._draining):
+                    if e.idle:
+                        continue
+                    if not self._wd_enabled:
                         e.flush()
+                        continue
+                    try:
+                        e.flush()
+                    except Exception as exc:
+                        verdict = self._watchdog(e).record_error(exc)
+                        if verdict is not None:
+                            self.quarantine(e, verdict)
             self._reap_drained()
         finally:
             self._front.drain(False)

@@ -169,6 +169,17 @@ class Request:
     # assigns a globally unique id at submit; a standalone engine falls
     # back to ``uid``. None with tracing off — requests pay nothing.
     trace_id: Optional[int] = None
+    # lifecycle: "pending" until the first terminal retirement flips it to
+    # "completed"/"cancelled" ("failed" is cluster-assigned when the retry
+    # budget runs out). Terminal is sticky — the at-most-once contract
+    # (DESIGN.md section 14) keys duplicate-retirement suppression on it.
+    status: str = dataclasses.field(default="pending", repr=False)
+    # times the cluster re-dispatched this request after a quarantine
+    redispatched: int = dataclasses.field(default=0, repr=False)
+    # set by ``evict()`` while the request is stranded on a quarantined
+    # replica: retirement events still in flight for it are ignored (the
+    # cluster owns it until re-dispatch clears the flag)
+    evicted: bool = dataclasses.field(default=False, repr=False)
 
 
 class ServeEngine:
@@ -558,8 +569,9 @@ class ServeEngine:
         tok = np.asarray(ev["tok"]) if ev.get("tok") is not None else None
         with self._mlock:
             for req, i in ev.get("append", ()):
-                if req.eos_seen:
-                    continue  # stream ended early; drop post-EOS tokens
+                if req.eos_seen or req.evicted:
+                    continue  # stream ended early (or the request was
+                    # evicted mid-flight and will restart elsewhere)
                 t = int(tok[i])
                 req.generated.append(t)
                 if self._eos_id is not None and t == self._eos_id:
@@ -567,6 +579,15 @@ class ServeEngine:
             if ev.get("stats") is not None:
                 self.metrics.add_expert_tokens(np.asarray(ev["stats"]))
             for req, latency, cancelled in ev.get("retired", ()):
+                if getattr(req, "evicted", False):
+                    continue  # the cluster owns it until re-dispatch
+                if getattr(req, "status", "pending") != "pending":
+                    # already terminal: a duplicate retirement (e.g. the
+                    # same trace_id replayed across an eviction) must be
+                    # exactly-once — count it, deliver nothing
+                    self.metrics.inc("duplicate_retirements")
+                    continue
+                req.status = "cancelled" if cancelled else "completed"
                 if cancelled:
                     self.metrics.inc("cancelled")
                 else:
@@ -1055,3 +1076,31 @@ class ServeEngine:
             self._rq.join()
 
     run_until_drained = flush
+
+    def evict(self) -> List[Request]:
+        """Quarantine support (serving/cluster.py): strand-and-return every
+        request this replica holds — queued and mid-decode, in global FIFO
+        order — without running any more device work.
+
+        Already-emitted retirement events are drained first (``_rq.join``),
+        so a request whose terminal event beat the eviction keeps its
+        terminal status and the duplicate guard in ``_consume`` applies;
+        everything returned here is marked ``evicted`` (in-flight events
+        that still reference it become no-ops) and its decode slot, cache
+        position, and emission count are reset so a promoted standby — or
+        this engine, were it ever revived — starts clean."""
+        if self._async:
+            self._rq.join()
+        stranded = list(self.scheduler.clear())
+        for slot in sorted(self.active):
+            stranded.append(self.active[slot])
+        self.active.clear()
+        self.pos[:] = 0
+        self._emitted[:] = 0
+        out = []
+        for req in stranded:
+            if getattr(req, "status", "pending") != "pending":
+                continue  # terminal before the eviction: nothing to redo
+            req.evicted = True
+            out.append(req)
+        return out

@@ -30,6 +30,15 @@ only required keys):
   retire_error           — a poisoned retirement event (the daemon
                            survived; the payload is lost)
   callback_error         — a request's on_done callback raised
+  replica_step_error     — a replica step() raised (watchdog input;
+                           DESIGN.md section 14)
+  replica_evicted        — watchdog quarantine, with the full verdict
+                           (reason, error/stall streaks, EMA, last error)
+  replica_replaced       — standby promoted to backfill an eviction
+  request_redispatched   — an evicted in-flight request re-queued
+  request_failed         — retry budget exhausted: terminal failed status
+  cluster_degraded       — eviction with no standby left (admission
+                           tightens); cluster_recovered on scale_up
 """
 from __future__ import annotations
 

@@ -507,7 +507,10 @@ class ClusterMetrics:
         self._replicas = list(replicas)
         self._clock = clock
         self._first_t: Optional[float] = None
-        # cluster-front-end counters (admission rejections etc.)
+        # cluster-front-end counters (admission rejections etc.). Guarded:
+        # replica retirement daemons feed the at-most-once guard's
+        # duplicate counter (serving/cluster.py) off the pump thread.
+        self._counter_lock = threading.Lock()
         self.counters: Dict[str, int] = {}
         # front-end queue-depth samples (the autoscaler's pressure signal)
         self._depth_sum = 0
@@ -599,16 +602,18 @@ class ClusterMetrics:
     # -- feeding ------------------------------------------------------------
 
     def inc(self, name: str, n: int = 1) -> None:
-        self.counters[name] = self.counters.get(name, 0) + n
-        if name == "cluster_submitted" and self._first_t is None:
-            self._first_t = self._clock()  # window opens at admission
+        with self._counter_lock:
+            self.counters[name] = self.counters.get(name, 0) + n
+            if name == "cluster_submitted" and self._first_t is None:
+                self._first_t = self._clock()  # window opens at admission
 
     def observe_queue_depth(self, depth: int) -> None:
         """Sample the *front-end* queue depth (cluster route path)."""
-        self._depth_sum += depth
-        self._depth_max = max(self._depth_max, depth)
-        self._depth_last = depth
-        self._depth_n += 1
+        with self._counter_lock:
+            self._depth_sum += depth
+            self._depth_max = max(self._depth_max, depth)
+            self._depth_last = depth
+            self._depth_n += 1
 
     # -- readout ------------------------------------------------------------
 

@@ -70,6 +70,9 @@ class MetricsServer:
         return self
 
     def stop(self) -> None:
+        """Shut the listener down, close its socket, and join the daemon
+        thread — tests and ``launch/serve.py`` exit without leaked sockets
+        or threads. Idempotent."""
         if self._httpd is not None:
             self._httpd.shutdown()
             self._httpd.server_close()
@@ -77,6 +80,8 @@ class MetricsServer:
         if self._thread is not None:
             self._thread.join(timeout=5.0)
             self._thread = None
+
+    close = stop  # conventional alias: the clean-shutdown contract
 
     def __enter__(self) -> "MetricsServer":
         return self.start()
@@ -121,24 +126,40 @@ class MetricsServer:
         handler.wfile.write(body)
 
 
+_STATUS_RANK = {"ok": 0, "degraded": 1, "unhealthy": 2}
+
+
 def cluster_healthz(cluster) -> dict:
-    """Liveness summary for a ``ServingCluster``: status stays "ok" while
-    no replica has hit a retirement fault (retire_errors — a lost
-    completion is the one error class that corrupts results silently)."""
+    """Liveness summary for a ``ServingCluster``: the watchdog roll-up
+    (``cluster.health()`` — per-replica state, degraded flag, eviction
+    ledger; DESIGN.md section 14) combined with the retirement-fault check
+    (retire_errors — a lost completion is the one error class that corrupts
+    results silently). Overall status is the worst of the two."""
     snap = cluster.metrics.snapshot()
     counters = snap["aggregate"]["counters"]
     retire_errors = counters.get("retire_errors", 0)
-    return {
-        "status": "ok" if retire_errors == 0 else "degraded",
+    status = "ok" if retire_errors == 0 else "degraded"
+    out = {
         "replicas_active": snap["replicas_active"],
         "standby": len(getattr(cluster, "_standby", ())),
         "draining": len(getattr(cluster, "_draining", ())),
         "completed": counters.get("completed", 0),
         "rejected": counters.get("rejected", 0),
+        "failed": counters.get("cluster_failed", 0),
         "retire_errors": retire_errors,
         "callback_errors": counters.get("callback_errors", 0),
         "expert_drift_events": counters.get("expert_drift", 0),
     }
+    health_fn = getattr(cluster, "health", None)
+    if callable(health_fn):
+        wd = health_fn()
+        if _STATUS_RANK.get(wd.get("status"), 0) > _STATUS_RANK[status]:
+            status = wd["status"]
+        out["replicas"] = wd.get("replicas", {})
+        out["evicted"] = wd.get("evicted", [])
+        out["degraded"] = wd.get("degraded", False)
+    out["status"] = status
+    return out
 
 
 def serve_cluster_metrics(cluster, host: str = "127.0.0.1",

@@ -42,6 +42,15 @@ Observability attributes are deliberately **not** part of the protocol:
 optional — the cluster reads them with ``getattr(engine, "tracer", None)``
 so a minimal custom replica (or a test fake) conforms without carrying the
 tracing machinery (DESIGN.md section 11).
+
+``evict()`` is likewise optional (fault tolerance, DESIGN.md section 14):
+a replica that implements it returns its stranded queued + in-flight
+requests — marked ``evicted``, without running further device work — when
+the cluster quarantines it; the cluster re-dispatches the returned
+requests to healthy replicas. The cluster discovers it via
+``getattr(engine, "evict", None)``; a replica without it simply loses its
+in-flight work on eviction (the at-most-once retirement guard still
+protects against duplicate delivery).
 """
 from __future__ import annotations
 

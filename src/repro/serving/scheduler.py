@@ -129,6 +129,18 @@ class MicroBatcher:
         entries.sort(key=lambda e: e[0])
         return [e[2] for e in entries]
 
+    def clear(self) -> List[Any]:
+        """Remove and return every queued request in global FIFO order.
+
+        The eviction path (``ServingCluster.quarantine``): a quarantined
+        replica's queued-but-not-yet-admitted requests are stranded host-side
+        state, reclaimed here for re-dispatch to healthy replicas.
+        """
+        items = self.pending_items()
+        self._buckets.clear()
+        self._depth = 0
+        return items
+
     def oldest_wait(self, now: Optional[float] = None) -> float:
         """Queue wait of the oldest pending request (0 when empty)."""
         heads = [q[0] for q in self._buckets.values() if q]

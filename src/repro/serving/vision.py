@@ -59,6 +59,15 @@ class VisionRequest:
     # span-timeline identity (serving/trace.py); cluster-assigned, falls
     # back to uid on a standalone engine. None with tracing off.
     trace_id: Optional[int] = None
+    # terminal-delivery callback (same contract as engine.Request.on_done):
+    # fired exactly once at retirement, off the dispatch path; the chaos
+    # benchmark counts terminal callbacks per accepted request through it
+    on_done: Optional[Callable[["VisionRequest"], None]] = None
+    # lifecycle + eviction bookkeeping, mirroring engine.Request (the
+    # cluster's at-most-once/re-dispatch machinery is engine-agnostic)
+    status: str = dataclasses.field(default="pending", repr=False)
+    redispatched: int = dataclasses.field(default=0, repr=False)
+    evicted: bool = dataclasses.field(default=False, repr=False)
 
     @property
     def done(self) -> bool:
@@ -315,6 +324,25 @@ class VisionEngine:
 
     run_until_drained = flush
 
+    def evict(self) -> List[VisionRequest]:
+        """Quarantine support (serving/cluster.py): strand-and-return every
+        request this replica holds — queued plus in dispatched batches —
+        without waiting on (possibly wedged) device work. Dispatched device
+        batches are abandoned unsynchronized; their requests are marked
+        ``evicted`` so a late retirement of the same batch object is a
+        no-op."""
+        stranded = list(self.scheduler.clear())
+        for ent in self._inflight:
+            stranded.extend(ent.reqs)
+        self._inflight.clear()
+        out = []
+        for req in stranded:
+            if req.status != "pending":
+                continue  # terminal before the eviction: nothing to redo
+            req.evicted = True
+            out.append(req)
+        return out
+
     # -- internals ----------------------------------------------------------
 
     def _head_ready(self) -> bool:
@@ -380,11 +408,26 @@ class VisionEngine:
             # with counters["padded_frames"] (DESIGN.md section 6)
             self.metrics.add_expert_tokens(np.asarray(et))
         for i, req in enumerate(ent.reqs):
+            if req.evicted or req.status != "pending":
+                # evicted mid-flight (the cluster owns it) or a duplicate
+                # retirement of an already-terminal request — exactly-once
+                if not req.evicted:
+                    self.metrics.inc("duplicate_retirements")
+                continue
             req.classes = classes[i]
             req.probs = probs[i]
             req.latency_s = now - req.submitted_at
+            req.status = "completed"
             self.metrics.request_latency.record(req.latency_s)
             self.metrics.inc("completed")
+            if req.on_done is not None:
+                try:
+                    req.on_done(req)
+                except Exception as e:
+                    self.metrics.inc("callback_errors")
+                    if self.events is not None:
+                        self.events.emit("callback_error", uid=req.uid,
+                                         error=repr(e))
             if trace:
                 # infer ends at the SAME `now` the latency record uses —
                 # queue+infer sums to latency_s; retire is result fill-in

@@ -1,0 +1,518 @@
+"""Fault tolerance (DESIGN.md section 14): deterministic chaos injection,
+watchdog eviction + standby backfill, in-flight re-dispatch with the
+at-most-once retirement guard, degraded-mode admission, and the
+watchdog/autoscaler interplay — all under a fake clock with fake replicas
+(the machinery is pure host-side bookkeeping)."""
+import dataclasses
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.configs.base import AutoscaleConfig, FaultConfig
+from repro.distributed.fault_tolerance import run_step_with_retry
+from repro.serving.autoscaler import Autoscaler
+from repro.serving.cluster import ServingCluster
+from repro.serving.events import EventLog
+from repro.serving.faults import (
+    FaultInjector,
+    FaultyReplica,
+    InjectedFault,
+    InjectedOOM,
+    ReplicaWatchdog,
+)
+from repro.serving.metrics import ClusterMetrics, EngineMetrics
+from repro.serving.metrics_server import MetricsServer, cluster_healthz
+from repro.serving.replica import EngineReplica
+from repro.serving.scheduler import Backpressure
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@dataclasses.dataclass
+class FakeRequest:
+    uid: int
+    submitted_at: float = None
+    on_done: object = None
+    trace_id: int = None
+    status: str = "pending"
+    redispatched: int = 0
+    evicted: bool = False
+
+
+class ChaosFakeReplica:
+    """Deterministic ``EngineReplica`` with the optional ``evict()`` hook:
+    serves ``capacity`` queued requests per step (firing ``on_done``), can
+    be wedged by assigning ``fail`` an exception instance."""
+
+    def __init__(self, mesh, clock, *, capacity=2, max_pending=8):
+        self.mesh = mesh
+        self._clock = clock
+        self.capacity = capacity
+        self.max_pending = max_pending
+        self._queue = []
+        self.fail = None  # exception raised by every step while set
+        self.metrics = EngineMetrics(clock=clock)
+
+    def submit(self, req):
+        if len(self._queue) >= self.max_pending:
+            self.metrics.inc("rejected")
+            raise Backpressure("fake replica full")
+        if req.submitted_at is None:
+            req.submitted_at = self._clock()
+        self._queue.append(req)
+        self.metrics.inc("submitted")
+
+    def step(self):
+        if self.fail is not None:
+            raise self.fail
+        now = self._clock()
+        served, self._queue = (self._queue[:self.capacity],
+                               self._queue[self.capacity:])
+        for req in served:
+            req.status = "completed"
+            self.metrics.inc("completed")
+            self.metrics.work_done(1, "frames")
+            self.metrics.request_latency.record(
+                max(0.0, now - req.submitted_at))
+            if req.on_done is not None:
+                req.on_done(req)
+
+    def warmup(self):
+        pass
+
+    def flush(self):
+        while self._queue:
+            self.step()
+
+    def reset_metrics(self):
+        self.metrics = EngineMetrics(clock=self._clock)
+
+    def evict(self):
+        out = []
+        for req in self._queue:
+            if req.status == "pending":
+                req.evicted = True
+                out.append(req)
+        self._queue = []
+        return out
+
+    @property
+    def load(self):
+        return len(self._queue)
+
+    @property
+    def free_room(self):
+        return max(0, self.max_pending - len(self._queue))
+
+    @property
+    def idle(self):
+        return not self._queue
+
+
+def _cluster(clock, *, replicas=2, standby=1, capacity=2, max_pending=8,
+             faults=None, events=None, **kw):
+    replicas_built = []
+
+    def factory(mesh):
+        eng = ChaosFakeReplica(mesh, clock, capacity=capacity,
+                               max_pending=max_pending)
+        replicas_built.append(eng)
+        return eng
+
+    cluster = ServingCluster(None, None, replicas=replicas, standby=standby,
+                             engine=factory, clock=clock, faults=faults,
+                             events=events, **kw)
+    return cluster, replicas_built
+
+
+# -- chaos injector -----------------------------------------------------------
+
+
+def test_injector_is_deterministic_per_seed_and_ordinal():
+    cfg = FaultConfig(inject=True, seed=9, step_error_rate=0.3,
+                      oom_rate=0.1, step_stall_rate=0.2, stall_s=0.0)
+
+    def run(ordinal):
+        inj = FaultInjector(cfg, ordinal, stall_fn=lambda s: None)
+        seq = []
+        for _ in range(50):
+            try:
+                inj.before_step()
+                seq.append("ok")
+            except InjectedOOM:
+                seq.append("oom")
+            except InjectedFault:
+                seq.append("err")
+        return seq, dict(inj.injected)
+
+    a_seq, a_counts = run(0)
+    b_seq, b_counts = run(0)
+    assert a_seq == b_seq and a_counts == b_counts  # pure fn of (seed, ord)
+    assert a_counts  # rates actually fired
+    c_seq, _ = run(1)
+    assert a_seq != c_seq  # per-replica independent streams
+
+
+def test_kill_schedule_overrides_draws_and_dead_is_permanent():
+    cfg = FaultConfig(inject=True, kill_schedule=((0, 3, "dead"),
+                                                  (1, 2, "error")))
+    inj = FaultInjector(cfg, 0)
+    inj.before_step()
+    inj.before_step()  # steps 1-2 clean (no rates configured)
+    for _ in range(4):  # step 3 kills; every later step raises too
+        with pytest.raises(InjectedFault):
+            inj.before_step()
+    assert inj.dead and inj.injected == {"dead": 1}
+    other = FaultInjector(cfg, 1)  # ordinal filtering
+    other.before_step()
+    with pytest.raises(InjectedFault):
+        other.before_step()
+    assert not other.dead
+
+
+def test_faulty_replica_wraps_protocol_and_injects_at_boundaries():
+    clock = FakeClock()
+    inner = ChaosFakeReplica(None, clock)
+    wrapped = FaultyReplica(inner, FaultInjector(
+        FaultConfig(inject=True, submit_reject_rate=1.0), 0))
+    assert isinstance(wrapped, EngineReplica)
+    with pytest.raises(Backpressure):
+        wrapped.submit(FakeRequest(uid=0))
+    # callback poisoning: the user callback still runs, then the wrapper
+    # raises (terminal delivery survives the poison)
+    fired = []
+    poison = FaultyReplica(inner, FaultInjector(
+        FaultConfig(inject=True, callback_poison_rate=1.0), 0))
+    req = FakeRequest(uid=1, on_done=lambda r: fired.append(r.uid))
+    poison.submit(req)
+    with pytest.raises(InjectedFault):
+        req.on_done(req)
+    assert fired == [1]
+    assert wrapped.load == inner.load and wrapped.idle == inner.idle
+
+
+# -- watchdog + quarantine ----------------------------------------------------
+
+
+def test_error_budget_evicts_redispatches_and_backfills():
+    clock = FakeClock()
+    events = EventLog(clock=clock)
+    fc = FaultConfig(error_budget=2, retry_budget=2)
+    cluster, built = _cluster(clock, replicas=2, standby=1, capacity=1,
+                              faults=fc, events=events)
+    done = []
+    reqs = [FakeRequest(uid=i, on_done=lambda r: done.append(r.uid))
+            for i in range(8)]
+    for r in reqs:
+        cluster.submit(r)
+    cluster._route()
+    victim = built[0]
+    assert victim in cluster.engines and victim.load > 0
+    victim.fail = RuntimeError("wedged device")
+    for _ in range(20):
+        cluster.step()
+        clock.advance(0.01)
+    cluster.flush()
+    # eviction happened, the standby backfilled, nothing was lost: every
+    # accepted request got exactly one terminal callback
+    assert victim not in cluster.engines
+    assert cluster.num_replicas == 2 and cluster.standby_replicas == 0
+    assert sorted(done) == list(range(8)) and len(done) == 8
+    assert all(r.status == "completed" for r in reqs)
+    counters = cluster.metrics.snapshot()["aggregate"]["counters"]
+    assert counters["replicas_evicted"] == 1
+    assert counters["replicas_replaced"] == 1
+    assert counters["replica_step_errors"] == 2  # budget, not one
+    assert counters["cluster_redispatched"] >= 1
+    assert counters.get("cluster_failed", 0) == 0
+    assert events.events("replica_replaced")
+    ev = events.events("replica_evicted")[0]
+    # full watchdog inputs ride on the eviction record
+    assert ev["reason"] == "step_errors"
+    assert ev["consecutive_errors"] == 2 and "last_error" in ev
+    assert not cluster.degraded
+
+
+def test_oom_classified_error_evicts_on_first_hit():
+    clock = FakeClock()
+    fc = FaultConfig(error_budget=5)
+    cluster, built = _cluster(clock, replicas=2, standby=1, capacity=1,
+                              faults=fc)
+    built[0].fail = InjectedOOM("RESOURCE_EXHAUSTED: fake")
+    cluster.step()
+    assert built[0] not in cluster.engines
+    counters = cluster.metrics.snapshot()["aggregate"]["counters"]
+    assert counters["replicas_evicted"] == 1
+    assert counters["replica_step_errors"] == 1  # no retry into a full heap
+    assert cluster._evicted[0]["reason"] == "oom"
+
+
+def test_retry_budget_exhaustion_terminates_as_failed():
+    clock = FakeClock()
+    fc = FaultConfig(error_budget=1, retry_budget=1)
+    # every replica wedged: each re-dispatch lands on a replica that gets
+    # evicted too, burning the budget down to terminal failed
+    cluster, built = _cluster(clock, replicas=2, standby=2, capacity=1,
+                              faults=fc)
+    done = []
+    req = FakeRequest(uid=0, on_done=lambda r: done.append(r.status))
+    cluster.submit(req)
+    cluster._route()
+    for eng in built:
+        eng.fail = RuntimeError("wedged")
+    for _ in range(10):
+        if not cluster.engines:
+            break
+        cluster.step()
+    assert req.status == "failed" and req.redispatched == 2
+    assert done == ["failed"]  # terminal callback delivered exactly once
+    counters = cluster.metrics.snapshot()["aggregate"]["counters"]
+    assert counters["cluster_failed"] == 1
+
+
+def test_injected_stall_evicts_under_fake_clock_despite_cooldown():
+    """Satellite: eviction-driven standby promotion must not wait on the
+    autoscaler's cooldown. Stalls are injected via the fake clock (the
+    injector's stall_fn advances time instead of sleeping)."""
+    clock = FakeClock()
+    fc = FaultConfig(inject=True, step_stall_rate=1.0, stall_s=1.0,
+                     step_timeout_s=0.5, stall_budget=2, watchdog=True)
+    cluster, built = _cluster(clock, replicas=1, standby=1, capacity=1,
+                              faults=fc, fault_stall_fn=clock.advance)
+    scaler = Autoscaler(cluster, AutoscaleConfig(
+        min_replicas=1, max_replicas=2, cooldown=100,
+        up_patience=10**9, down_patience=10**9,
+        slo_p95_ms=1e9, min_window_samples=10**9))
+    scaler._cooldown = 100  # controller frozen for 100 evaluations
+    for i in range(3):
+        cluster.submit(FakeRequest(uid=i))
+    before = cluster.standby_replicas
+    for _ in range(10):  # stall_budget=2 steps of 1.0s > 0.5s timeout
+        cluster.step()
+        assert scaler.tick() is None  # cooldown holds the controller
+        if cluster._evicted:
+            break
+    assert len(cluster._evicted) == 1
+    assert cluster._evicted[0]["reason"] == "stalled"
+    # standby promoted by quarantine() directly, cooldown notwithstanding
+    assert cluster.standby_replicas == before - 1
+    assert cluster.num_replicas == 1
+
+
+def test_quarantined_replica_metrics_fold_without_deadlock():
+    """Satellite: ClusterMetrics folds a quarantined (never-drained)
+    replica's tracker while another thread records into it — bounded time,
+    no deadlock on the metrics locks."""
+    clock = FakeClock()
+    m = EngineMetrics(clock=clock)
+    cm = ClusterMetrics([m], clock=clock)
+    stop = threading.Event()
+
+    def hammer():
+        while not stop.is_set():
+            m.request_latency.record(0.01)
+            m.inc("completed")
+            cm.inc("cluster_submitted")
+
+    t = threading.Thread(target=hammer, daemon=True)
+    t.start()
+    try:
+        folder = threading.Thread(target=lambda: cm.remove_replica(m),
+                                  daemon=True)
+        folder.start()
+        folder.join(timeout=10.0)
+        assert not folder.is_alive(), "remove_replica deadlocked"
+    finally:
+        stop.set()
+        t.join(timeout=5.0)
+    assert cm.num_replicas == 0
+    # folded distribution is non-empty and later records are replica-local
+    assert len(cm.merged_request_latency()) > 0
+
+
+# -- at-most-once retirement --------------------------------------------------
+
+
+def test_duplicate_retirement_is_exactly_once_through_real_engine():
+    """Satellite: replay a duplicate retirement for the same trace_id
+    through the real ServeEngine consume path — exactly-once delivery, the
+    duplicate counted, and a raising on_done neither double-fires nor
+    drops the terminal event."""
+    import jax
+
+    import repro.models as M
+    from repro.configs import smoke_config
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg = smoke_config("llama3-8b").replace(remat=False)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=32)
+    fired = []
+
+    def cb(r):
+        fired.append(r.uid)
+        raise RuntimeError("user callback bug")
+
+    req = Request(uid=7, prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                  generated=[], submitted_at=0.0, on_done=cb, trace_id=42)
+    ev = {"now": 1.0, "retired": [(req, 1.0, False)]}
+    eng._consume(ev)
+    eng._consume(ev)  # duplicate replay, same trace_id
+    assert fired == [7], "terminal callback must fire exactly once"
+    assert req.status == "completed"
+    assert eng.metrics.counters["completed"] == 1
+    assert eng.metrics.counters["duplicate_retirements"] == 1
+    assert eng.metrics.counters["callback_errors"] == 1
+
+
+def test_cluster_on_done_guard_suppresses_cross_replica_duplicates():
+    clock = FakeClock()
+    cluster, built = _cluster(clock, replicas=1, standby=0, capacity=1,
+                              faults=FaultConfig())
+    fired = []
+    req = FakeRequest(uid=3, on_done=lambda r: fired.append(r.uid))
+    cluster.submit(req)
+    guarded = req.on_done
+    guarded(req)
+    guarded(req)  # a second replica replaying the same terminal event
+    assert fired == [3]
+    counters = cluster.metrics.snapshot()["aggregate"]["counters"]
+    assert counters["duplicate_retirements"] == 1
+
+
+def test_evicted_requests_ignore_stale_retirements():
+    clock = FakeClock()
+    eng = ChaosFakeReplica(None, clock, capacity=2)
+    req = FakeRequest(uid=0)
+    eng.submit(req)
+    stranded = eng.evict()
+    assert stranded == [req] and req.evicted and eng.idle
+
+
+# -- degraded mode ------------------------------------------------------------
+
+
+def test_degraded_mode_sheds_load_and_recovers_on_scale_up():
+    clock = FakeClock()
+    events = EventLog(clock=clock)
+    fc = FaultConfig(error_budget=1)
+    cluster, built = _cluster(clock, replicas=2, standby=0, capacity=0,
+                              max_pending=2, faults=fc, events=events,
+                              max_pending_per_replica=2)
+    built[0].fail = RuntimeError("dead")
+    cluster.step()
+    assert cluster.degraded and cluster.num_replicas == 1
+    assert events.events("cluster_degraded")
+    # degraded admission: front bound tightens to active x per-replica cap
+    admitted = 0
+    with pytest.raises(Backpressure):
+        for i in range(10):
+            cluster.submit(FakeRequest(uid=i))
+            admitted += 1
+    assert admitted == 2  # 1 surviving replica x cap 2
+    counters = cluster.metrics.snapshot()["aggregate"]["counters"]
+    assert counters["cluster_shed"] >= 1
+    # the controller must not fight recovery
+    assert not cluster.scale_down()
+    # restoring capacity clears degraded mode
+    assert cluster.scale_up()
+    assert not cluster.degraded
+    assert events.events("cluster_recovered")
+
+
+def test_healthz_folds_watchdog_state_and_eviction_ledger():
+    clock = FakeClock()
+    fc = FaultConfig(error_budget=1)
+    cluster, built = _cluster(clock, replicas=2, standby=0, capacity=1,
+                              faults=fc)
+    built[0].fail = RuntimeError("dead")
+    cluster.step()
+    health = cluster_healthz(cluster)
+    assert health["status"] == "degraded" and health["degraded"]
+    assert len(health["evicted"]) == 1
+    assert health["evicted"][0]["reason"] == "step_errors"
+    assert all(v["health"] == "healthy"
+               for v in health["replicas"].values())
+    # served over HTTP: degraded reports 503 (load balancers pull the node)
+    server = MetricsServer(lambda: "", snapshot_fn=None,
+                           healthz_fn=lambda: cluster_healthz(cluster))
+    server.start()
+    try:
+        url = f"{server.url}/healthz"
+        with pytest.raises(urllib.error.HTTPError) as err:
+            urllib.request.urlopen(url)
+        assert err.value.code == 503
+        body = json.loads(err.value.read())
+        assert body["status"] == "degraded"
+    finally:
+        server.close()
+    # close() joined the daemon thread and is idempotent
+    assert server._thread is None and server._httpd is None
+    server.close()
+
+
+# -- seed utilities (satellite regression) ------------------------------------
+
+
+def test_run_step_with_retry_backoff_and_give_up_contract():
+    sleeps, retries = [], []
+
+    def flaky_factory(fail_times):
+        calls = {"n": 0}
+
+        def fn(x):
+            calls["n"] += 1
+            if calls["n"] <= fail_times:
+                raise RuntimeError("transient")
+            return x * 2
+
+        return fn
+
+    # succeeds within budget: retries with exponential backoff 0.1 * 2^k
+    out = run_step_with_retry(flaky_factory(2), 21, max_retries=2,
+                              on_retry=retries.append,
+                              sleep=sleeps.append)
+    assert out == 42
+    assert retries == [0, 1]
+    assert sleeps == pytest.approx([0.1, 0.2])
+    # gives up: the final attempt's exception propagates, no extra sleep
+    sleeps.clear()
+    with pytest.raises(RuntimeError, match="transient"):
+        run_step_with_retry(flaky_factory(5), 1, max_retries=2,
+                            sleep=sleeps.append)
+    assert sleeps == pytest.approx([0.1, 0.2])
+    # non-retryable exceptions pass straight through
+    def boom(_):
+        raise ValueError("not transient")
+
+    with pytest.raises(ValueError):
+        run_step_with_retry(boom, 0, sleep=sleeps.append)
+
+
+def test_watchdog_streak_resets():
+    fc = FaultConfig(error_budget=3, stall_budget=2, step_timeout_s=0.5)
+    wd = ReplicaWatchdog(fc)
+    assert wd.record_error(RuntimeError("a")) is None
+    assert wd.record_error(RuntimeError("b")) is None
+    assert wd.record_step(0.01) is None  # success resets the error streak
+    assert wd.consecutive_errors == 0
+    assert wd.record_error(RuntimeError("c")) is None  # streak restarts
+    assert wd.record_step(1.0) is None  # stall 1/2 (absolute timeout)
+    assert wd.record_step(0.01) is None  # healthy step resets stalls
+    assert wd.record_step(1.0) is None
+    verdict = wd.record_step(1.0)
+    assert verdict is not None and verdict["reason"] == "stalled"
+    assert verdict["consecutive_stalls"] == 2
